@@ -1,0 +1,67 @@
+"""Table 6 analogue: LP loss function × negative sampling sweep on the
+Amazon-review-like graph — epoch time, convergence epoch, MRR, and the
+per-batch sampled-node count that drives the efficiency differences."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.core.embedding import SparseEmbedding
+from repro.core.negative_sampling import sampled_node_count
+from repro.data import make_amazon_like
+from repro.gnn.model import model_meta_from_graph
+from repro.trainer import (GSgnnData, GSgnnLinkPredictionDataLoader,
+                           GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator)
+
+ET = ("item", "also_buy", "item")
+
+
+def run(bench: Bench, fast: bool = True):
+    from repro.core.spot_target import exclude_eval_edges, split_edges
+    n = 400 if fast else 1000
+    g = make_amazon_like(n_item=n, n_review=4 * n, n_customer=n // 3,
+                         schema="hetero_v2", seed=0)
+    from benchmarks.bench_schema import _bow
+    g.node_feats["review"]["feat"] = _bow(g.node_feats["review"]["text"])
+    data = GSgnnData(g)
+    rng = np.random.default_rng(0)
+    tr_e, va_e, te_e = split_edges(rng, g, ET)
+    train_graph = exclude_eval_edges(g, ET, va_e, te_e)
+    eids = tr_e
+    extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+    model = model_meta_from_graph(g, "rgcn", 64, 2, extra_feat_dims=extra)
+
+    B = 128
+    settings = [
+        ("contrastive", "in_batch", 8),
+        ("contrastive", "joint", 32),
+        ("contrastive", "joint", 4),
+        ("contrastive", "uniform", 32),
+        ("cross_entropy", "in_batch", 8),
+        ("cross_entropy", "joint", 32),
+        ("cross_entropy", "joint", 4),
+        ("cross_entropy", "uniform", 32),
+    ]
+    epochs = 3 if fast else 8
+    for loss, method, k in settings:
+        sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+        trainer = GSgnnLinkPredictionTrainer(
+            model, ET, loss=loss, lr=1e-2, sparse_embeds=sparse,
+            evaluator=GSgnnMrrEvaluator())
+        loader = GSgnnLinkPredictionDataLoader(
+            data, ET, eids, [4, 4], B, num_negatives=k, neg_method=method,
+            seed=0, restrict_graph=train_graph)
+        # fixed eval protocol: held-out edges, uniform-100 negatives
+        eval_loader = GSgnnLinkPredictionDataLoader(
+            data, ET, te_e, [4, 4], B, num_negatives=100,
+            neg_method="uniform", seed=1, shuffle=False,
+            restrict_graph=train_graph, exclude_target_edges=False)
+        hist = trainer.fit(loader, eval_loader, num_epochs=epochs)
+        best = max(h["mrr"] for h in hist)
+        best_ep = int(np.argmax([h["mrr"] for h in hist]))
+        ep_t = float(np.median([h["epoch_time_s"] for h in hist[1:]])
+                     if len(hist) > 1 else hist[0]["epoch_time_s"])
+        bench.add(
+            f"t6/{loss}/{method}-{k}", ep_t * 1e6,
+            f"mrr={best:.4f};best_epoch={best_ep};"
+            f"neg_nodes_per_batch={sampled_node_count(method, B, k)}")

@@ -1,0 +1,83 @@
+"""Figure 5 analogue: joint text+graph modeling strategies on the
+MAG-like graph — BERT-only vs {pretrained, FTLP, FTNC} BERT + GNN."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.core.embedding import SparseEmbedding
+from repro.core.lm_gnn import (compute_lm_embeddings, finetune_lm_lp,
+                               finetune_lm_nc)
+from repro.core.text_encoder import bert_tiny_config
+from repro.data import make_mag_like
+from repro.gnn.model import model_meta_from_graph
+from repro.models.params import init_params
+from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
+                           GSgnnNodeTrainer)
+
+
+def _gnn_acc(g, lm_emb, tr, va, epochs=6):
+    base = g.node_feats["paper"]["feat"]
+    g.node_feats["paper"] = dict(g.node_feats["paper"])
+    g.node_feats["paper"]["feat"] = np.concatenate(
+        [base, lm_emb], 1).astype(np.float32)
+    data = GSgnnData(g)
+    extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+    model = model_meta_from_graph(g, "rgcn", 64, 2, extra_feat_dims=extra)
+    sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+    trainer = GSgnnNodeTrainer(model, "paper", num_classes=8, lr=1e-2,
+                               sparse_embeds=sparse,
+                               evaluator=GSgnnAccEvaluator())
+    loader = GSgnnNodeDataLoader(data, "paper", tr, [5, 5], 128)
+    val = GSgnnNodeDataLoader(data, "paper", va, [5, 5], 128, shuffle=False)
+    hist = trainer.fit(loader, val, num_epochs=epochs)
+    g.node_feats["paper"]["feat"] = base
+    return max(h["accuracy"] for h in hist)
+
+
+def run(bench: Bench, fast: bool = True):
+    n = 400 if fast else 1200
+    g = make_mag_like(n_paper=n, n_author=n // 2, seed=0)
+    tokens = g.node_feats["paper"]["text"]
+    labels = g.node_feats["paper"]["label"]
+    data = GSgnnData(g)
+    tr, va, _ = data.train_val_test_nodes("paper")
+    cfg = bert_tiny_config(vocab_size=2048 + 1, d_model=64, num_layers=1)
+    p0 = init_params(cfg, jax.random.PRNGKey(0))
+    et = ("paper", "cites", "paper")
+    s, d = g.edges[et]
+
+    # 1) BERT only (fine-tuned on venue, linear head accuracy)
+    t0 = time.time()
+    p_nc, head = finetune_lm_nc(cfg, tokens, labels, tr, num_classes=8,
+                                epochs=2, params=p0)
+    emb = compute_lm_embeddings(cfg, p_nc, tokens)
+    logits = emb @ np.asarray(head["w"]) + np.asarray(head["b"])
+    acc_bert = float((logits[va].argmax(1) == labels[va]).mean())
+    bench.add("fig5/bert_only", (time.time() - t0) * 1e6,
+              f"acc={acc_bert:.4f}")
+
+    # 2) pre-trained BERT + GNN
+    t0 = time.time()
+    emb0 = compute_lm_embeddings(cfg, p0, tokens)
+    acc = _gnn_acc(g, emb0, tr, va)
+    bench.add("fig5/pretrained_bert_gnn", (time.time() - t0) * 1e6,
+              f"acc={acc:.4f}")
+
+    # 3) FTLP BERT + GNN (fine-tuned with link prediction)
+    t0 = time.time()
+    p_lp = finetune_lm_lp(cfg, tokens, tokens, (s, d), epochs=2, params=p0)
+    emb_lp = compute_lm_embeddings(cfg, p_lp, tokens)
+    acc_lp = _gnn_acc(g, emb_lp, tr, va)
+    bench.add("fig5/ftlp_bert_gnn", (time.time() - t0) * 1e6,
+              f"acc={acc_lp:.4f}")
+
+    # 4) FTNC BERT + GNN (fine-tuned with venue prediction)
+    t0 = time.time()
+    emb_nc = compute_lm_embeddings(cfg, p_nc, tokens)
+    acc_nc = _gnn_acc(g, emb_nc, tr, va)
+    bench.add("fig5/ftnc_bert_gnn", (time.time() - t0) * 1e6,
+              f"acc={acc_nc:.4f}")

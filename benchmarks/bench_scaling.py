@@ -1,0 +1,60 @@
+"""Table 3 analogue: pipeline scalability on synthetic degree-100 graphs.
+
+Phase timings (pre-process / partition / training) across graph sizes
+scaled to CPU (the paper's 1B/10B/100B become 1e5/1e6/1e7 edges); the
+derived column reports the cost growth vs the previous size — the paper's
+headline is that cost grows sub-quadratically with size.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.core.dist_graph import PartitionedGraph
+from repro.data import make_scaling_graph
+from repro.core.embedding import SparseEmbedding
+from repro.gconstruct.partition import random_partition
+from repro.gnn.model import model_meta_from_graph
+from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
+                           GSgnnNodeTrainer)
+
+
+def run(bench: Bench, fast: bool = True):
+    sizes = [(1_000, 100), (10_000, 100)] if fast else \
+        [(1_000, 100), (10_000, 100), (100_000, 100)]
+    prev = {}
+    for n_nodes, deg in sizes:
+        tag = f"{n_nodes * deg // 1000}k-edges"
+        t0 = time.time()
+        g = make_scaling_graph(n_nodes, avg_degree=deg, seed=0)
+        t_pre = time.time() - t0
+
+        t0 = time.time()
+        assign = random_partition(g, 8, seed=0)
+        pg = PartitionedGraph(g, assign, 8)
+        t_part = time.time() - t0
+
+        data = GSgnnData(g)
+        tr = np.arange(int(0.8 * n_nodes))
+        model = model_meta_from_graph(g, "gcn", 64, 1)
+        trainer = GSgnnNodeTrainer(model, "node", num_classes=16, lr=1e-2,
+                                   evaluator=GSgnnAccEvaluator())
+        loader = GSgnnNodeDataLoader(data, "node", tr, [5], 1024)
+        t0 = time.time()
+        n_batches = 0
+        for batch in loader:
+            trainer.fit_batch(batch)
+            n_batches += 1
+            if n_batches >= 20:
+                break
+        t_train = time.time() - t0
+
+        for phase, t in (("preprocess", t_pre), ("partition", t_part),
+                         ("train20b", t_train)):
+            growth = ""
+            if phase in prev:
+                growth = f"growth_x={t / max(prev[phase], 1e-9):.1f}"
+            prev[phase] = t
+            bench.add(f"t3/{tag}/{phase}", t * 1e6, growth)

@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing: CSV emission in the required format."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+class Bench:
+    """Collects rows: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) / repeat

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads results/dryrun_*.jsonl produced by repro.launch.dryrun and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck, MODEL_FLOPS, and the useful-flops ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(paths):
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    rows.append(json.loads(line))
+    return rows
+
+
+def fmt_table(rows):
+    cols = ["arch", "shape", "mesh", "variant", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "useful_flops_frac",
+            "mem_per_device_gb"]
+    out = [",".join(cols)]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"{r.get('arch')},{r.get('shape')},"
+                       f"{r.get('mesh', '?')},,FAIL,,,,,")
+            continue
+        vals = []
+        for c in cols:
+            v = r.get(c, "")
+            if c == "variant":
+                v = ";".join(f"{k}={x}" for k, x in (v or {}).items()) \
+                    if isinstance(v, dict) else v
+            if isinstance(v, float):
+                v = f"{v:.6g}"
+            vals.append(str(v))
+        out.append(",".join(vals))
+    return "\n".join(out)
+
+
+def main():
+    paths = sys.argv[1:] or sorted(glob.glob("results/dryrun_*.jsonl"))
+    rows = load(paths)
+    print(fmt_table(rows))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fails = [r for r in rows if r.get("status") != "ok"]
+    print(f"# {len(ok)} ok, {len(fails)} failed", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

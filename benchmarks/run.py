@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only t4,t6]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The roofline table
+(§Roofline) is produced separately by launch/dryrun.py + roofline.py
+because it needs the 512-device XLA flag set before jax import.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Bench
+
+SUITES = {
+    "t2": ("bench_pipeline", "Table 2: e2e pipeline (LM cost/epoch/metric)"),
+    "t3": ("bench_scaling", "Table 3: scalability across graph sizes"),
+    "t4": ("bench_schema", "Table 4: graph-schema ablation"),
+    "t5": ("bench_distill", "Table 5: GNN distillation"),
+    "t6": ("bench_linkpred", "Table 6: LP loss x negative sampling"),
+    "fig5": ("bench_lmgnn", "Figure 5: LM+GNN strategies"),
+    "featureless": ("bench_featureless",
+                    "§3.3.2 ablation: featureless-node options"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (slow) sizes instead of CI sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite keys, e.g. t4,t6")
+    args = ap.parse_args()
+
+    keys = list(SUITES) if not args.only else args.only.split(",")
+    bench = Bench()
+    bench.header()
+    t0 = time.time()
+    for key in keys:
+        mod_name, desc = SUITES[key]
+        print(f"# === {key}: {desc} ===", flush=True)
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t1 = time.time()
+        mod.run(bench, fast=not args.full)
+        print(f"# {key} done in {time.time() - t1:.1f}s", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Checkpointing: pytrees <-> npz with path-encoded keys.
+
+Arrays are written per-leaf with '/'-joined tree paths, so checkpoints
+are inspectable with numpy alone and stable across refactors that keep
+key names.  At multi-host scale each host writes its addressable shards
+(the format is shard-appendable); this container writes single-shard.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(tree, path: str):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str, like=None):
+    """Returns the flat {path: array} dict, or restores into the structure
+    of ``like`` (matching by flattened order of identical paths)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    if like is None:
+        return flat
+    like_flat = _flatten(like)
+    assert set(like_flat) == set(flat), (
+        sorted(set(like_flat) ^ set(flat))[:10])
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(_path_str(p) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    new_leaves = [jax.numpy.asarray(flat[p]) for p in paths]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def save_trainer(trainer, path: str):
+    os.makedirs(path, exist_ok=True)
+    save_pytree(trainer.params, os.path.join(path, "params.npz"))
+    save_pytree(trainer.opt_state, os.path.join(path, "opt_state.npz"))
+    meta = {"stepno": int(trainer.stepno), "task": trainer.task,
+            "history": trainer.history}
+    for nt, emb in getattr(trainer, "sparse_embeds", {}).items():
+        save_pytree(emb.state_dict(), os.path.join(path, f"emb_{nt}.npz"))
+        meta.setdefault("sparse", []).append(nt)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_trainer(trainer, path: str):
+    trainer.params = load_pytree(os.path.join(path, "params.npz"),
+                                 like=trainer.params)
+    trainer.opt_state = load_pytree(os.path.join(path, "opt_state.npz"),
+                                    like=trainer.opt_state)
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    trainer.stepno = jax.numpy.asarray(meta["stepno"], jax.numpy.int32)
+    trainer.history = meta.get("history", [])
+    for nt in meta.get("sparse", []):
+        st = load_pytree(os.path.join(path, f"emb_{nt}.npz"))
+        trainer.sparse_embeds[nt].load_state_dict(st)
+    return trainer

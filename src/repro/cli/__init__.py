@@ -1,0 +1,6 @@
+"""Command-line interface (paper §3.2.1).
+
+  python -m repro.cli.gconstruct              — graph construction
+  python -m repro.cli.gs_node_classification  — NC train / inference
+  python -m repro.cli.gs_link_prediction      — LP train / inference
+"""

@@ -1,0 +1,64 @@
+"""Shared CLI plumbing: dataset resolution + standard arguments."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
+                        make_temporal_graph)
+
+
+def add_common_args(ap: argparse.ArgumentParser):
+    ap.add_argument("--dataset", default="mag",
+                    choices=["mag", "amazon", "scaling", "temporal"],
+                    help="built-in synthetic dataset family")
+    ap.add_argument("--dataset-conf", default="{}",
+                    help="JSON kwargs for the dataset generator")
+    ap.add_argument("--model", default="rgcn")
+    ap.add_argument("--num-layers", type=int, default=2)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--fanout", default="8,8",
+                    help="comma-separated per-layer fanout")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--num-epochs", type=int, default=5)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--num-trainers", type=int, default=1,
+                    help="simulated data-parallel ranks (partitions)")
+    ap.add_argument("--part-method", default="random",
+                    choices=["random", "ldg", "metis"])
+    ap.add_argument("--save-model-path", default=None)
+    ap.add_argument("--restore-model-path", default=None)
+    ap.add_argument("--save-embed-path", default=None)
+    ap.add_argument("--inference", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def build_dataset(args):
+    kw = json.loads(args.dataset_conf)
+    if args.dataset == "mag":
+        return make_mag_like(seed=args.seed, **kw)
+    if args.dataset == "amazon":
+        return make_amazon_like(seed=args.seed, **kw)
+    if args.dataset == "scaling":
+        kw.setdefault("n_nodes", 10000)
+        kw.setdefault("avg_degree", 20)
+        return make_scaling_graph(seed=args.seed, **kw)
+    return make_temporal_graph(seed=args.seed, **kw)
+
+
+def fanout_of(args):
+    return [int(x) for x in args.fanout.split(",")]
+
+
+DATASET_TARGETS = {
+    "mag": ("paper", ("paper", "cites", "paper"), 8),
+    "amazon": ("item", ("item", "also_buy", "item"), 32),
+    "scaling": ("node", ("node", "edge", "node"), 16),
+    "temporal": ("user", ("user", "interacts", "user"), 4),
+}
+
+
+def featureless_ntypes(graph):
+    return [nt for nt in graph.ntypes if not graph.has_feat(nt)]

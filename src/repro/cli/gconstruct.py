@@ -1,0 +1,34 @@
+"""Graph construction CLI (paper Appendix B):
+
+  PYTHONPATH=src python -m repro.cli.gconstruct \
+      --conf graph_schema.json --num-parts 4 --part-method ldg --out out/
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.gconstruct import construct_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--conf", required=True, help="graph schema JSON")
+    ap.add_argument("--num-parts", type=int, default=1)
+    ap.add_argument("--part-method", default="random",
+                    choices=["random", "ldg", "metis"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    with open(args.conf) as f:
+        config = json.load(f)
+    graph, pg, report = construct_graph(
+        config, num_parts=args.num_parts, part_method=args.part_method,
+        out_dir=args.out, seed=args.seed)
+    print(json.dumps({k: v for k, v in report.items() if k != "splits"},
+                     indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

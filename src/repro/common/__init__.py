@@ -1,0 +1,16 @@
+from repro.common.sharding import (
+    axis_size,
+    best_spec,
+    maybe_axis,
+    with_sharding,
+)
+from repro.common.pytree import tree_size, tree_bytes
+
+__all__ = [
+    "axis_size",
+    "best_spec",
+    "maybe_axis",
+    "with_sharding",
+    "tree_size",
+    "tree_bytes",
+]

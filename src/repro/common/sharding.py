@@ -1,0 +1,80 @@
+"""Divisibility-aware PartitionSpec construction.
+
+The assigned architecture pool has dimensions that are not uniformly
+divisible by mesh axis sizes (e.g. granite's vocab=49155, phi4's 24 heads
+on a 16-way model axis).  GSPMD tolerates some uneven sharding but explicit
+`in_shardings` on `jit` are strict, so every spec we emit is checked for
+divisibility and falls back to replication (None) when the axis does not
+divide the dimension.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisLike = Union[None, str, Tuple[str, ...]]
+
+
+def axis_size(mesh: Mesh, axis: AxisLike) -> int:
+    """Product of mesh axis sizes for a (possibly compound) axis name."""
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    out = 1
+    for a in axis:
+        out *= mesh.shape[a]
+    return out
+
+
+def maybe_axis(mesh: Mesh, axis: AxisLike, dim: int) -> AxisLike:
+    """Return ``axis`` if it evenly divides ``dim`` else None (replicate).
+
+    For compound axes, tries progressively shorter prefixes, e.g.
+    ``("pod", "data")`` -> ``("pod",)`` -> None.
+    """
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if dim % mesh.shape[axis] == 0 else None
+    # compound: try full tuple, then shrink from the right
+    axes = tuple(axis)
+    while axes:
+        if dim % axis_size(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[:-1]
+    return None
+
+
+def best_spec(mesh: Mesh, shape: Sequence[int], wish: Sequence[AxisLike]) -> P:
+    """Build a PartitionSpec from per-dim wishes, with divisibility checks.
+
+    A mesh axis may appear in at most one dim; if an earlier dim consumed an
+    axis the later dim falls back to replication.
+    """
+    assert len(shape) == len(wish), (shape, wish)
+    used: set = set()
+    parts = []
+    for dim, w in zip(shape, wish):
+        w = maybe_axis(mesh, w, dim)
+        if w is None:
+            parts.append(None)
+            continue
+        names = (w,) if isinstance(w, str) else tuple(w)
+        if any(n in used for n in names):
+            parts.append(None)
+            continue
+        used.update(names)
+        parts.append(w)
+    return P(*parts)
+
+
+def with_sharding(mesh: Mesh, x, spec: P):
+    """sharding_constraint shortcut usable under jit."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,30 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "phi4-mini-3.8b",
+    "mamba2-2.7b",
+    "qwen3-moe-30b-a3b",
+    "qwen2.5-32b",
+    "llava-next-34b",
+    "zamba2-1.2b",
+    "granite-3-2b",
+    "chatglm3-6b",
+    "deepseek-v3-671b",
+    "seamless-m4t-medium",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCH_IDS}
+
+
+def get_config(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).config()
+
+
+def get_smoke_config(arch: str):
+    return get_config(arch).smoke()

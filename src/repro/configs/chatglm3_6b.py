@@ -1,0 +1,19 @@
+"""chatglm3-6b [dense] — 2d (partial) RoPE, GQA kv=2.  [arXiv:2406.12793]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-6b",
+        arch_type="dense",
+        num_layers=28,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab_size=65024,
+        ffn_kind="swiglu",
+        rotary_frac=0.5,   # chatglm applies rope to half the head dims
+        rope_theta=10000.0,
+    )

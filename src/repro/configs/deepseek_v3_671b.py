@@ -1,0 +1,31 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed experts (top-8),
+MTP, 3 leading dense layers.  [arXiv:2412.19437]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        arch_type="moe",
+        num_layers=61,
+        d_model=7168,
+        num_heads=128,
+        num_kv_heads=128,  # MLA: per-head latent expansion (assigned kv=128)
+        head_dim=128,
+        vocab_size=129280,
+        ffn_kind="swiglu",
+        attn_kind="mla",
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+        num_experts=256,
+        num_experts_per_tok=8,
+        moe_d_ff=2048,
+        num_shared_experts=1,
+        num_dense_layers=3,
+        dense_d_ff=18432,
+        mtp=True,
+        rope_theta=10000.0,
+    )

@@ -1,0 +1,19 @@
+"""granite-3-2b [dense] — GQA.  [hf:ibm-granite/granite-3.0-2b-base]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-2b",
+        arch_type="dense",
+        num_layers=40,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=49155,
+        ffn_kind="swiglu",
+        rope_theta=10000.0,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,22 @@
+"""llava-next-34b [vlm] — anyres tiling; vision frontend is a stub
+(precomputed patch embeddings), backbone is a dense GQA transformer.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        arch_type="vlm",
+        num_layers=60,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=20480,
+        vocab_size=64000,
+        ffn_kind="swiglu",
+        rope_theta=5e6,
+        frontend="vision",
+        frontend_tokens=2880,  # anyres: 4 tiles + base, 576 patches each
+    )

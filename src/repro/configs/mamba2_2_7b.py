@@ -1,0 +1,22 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        arch_type="ssm",
+        num_layers=64,
+        d_model=2560,
+        d_ff=0,
+        vocab_size=50280,
+        attn_kind="none",
+        ssm_state=128,
+        ssm_expand=2,
+        ssm_headdim=64,
+        ssm_ngroups=1,
+        ssm_conv=4,
+        ssm_chunk=256,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,23 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts, top-8, GQA kv=4, QK-norm.
+[hf:Qwen/Qwen3-30B-A3B]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        arch_type="moe",
+        num_layers=48,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=4,
+        head_dim=128,
+        d_ff=768,           # per-expert FFN width (assigned)
+        moe_d_ff=768,
+        num_experts=128,
+        num_experts_per_tok=8,
+        vocab_size=151936,
+        ffn_kind="swiglu",
+        qk_norm=True,
+        rope_theta=1e6,
+    )

@@ -1,0 +1,24 @@
+"""seamless-m4t-medium [audio] — encoder-decoder, multimodal; the speech
+frontend (mel + conformer feature extractor) is a stub providing
+precomputed frame embeddings.  [arXiv:2308.11596]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium",
+        arch_type="audio",
+        num_layers=12,          # decoder layers
+        num_encoder_layers=12,
+        enc_dec=True,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        ffn_kind="gelu",
+        rope_theta=10000.0,
+        frontend="audio",
+        frontend_tokens=4096,   # stub encoder memory length for decode
+    )

@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone with a shared attention block
+applied every ``attn_every`` layers (weight-shared).  [arXiv:2411.15242]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        arch_type="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=64,
+        d_ff=8192,
+        vocab_size=32000,
+        ffn_kind="gelu",
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_headdim=64,
+        ssm_ngroups=1,
+        ssm_conv=4,
+        ssm_chunk=256,
+        attn_every=6,
+        tie_embeddings=True,
+    )

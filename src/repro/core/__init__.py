@@ -1,0 +1,22 @@
+"""GraphStorm core: the paper's primary contribution in JAX.
+
+Distributed graph engine (partitioned hetero graphs, on-the-fly padded
+fixed-fanout sampling, sharded embedding tables), link-prediction
+machinery (scores / losses / negative samplers), and the built-in
+modeling techniques (LM+GNN, featureless-node handling, distillation).
+"""
+from repro.core.graph import HeteroGraph
+from repro.core.sampling import NeighborSampler, MFGBlock
+from repro.core.negative_sampling import (uniform_negatives, joint_negatives,
+                                          local_joint_negatives,
+                                          in_batch_negatives)
+from repro.core.lp import (dot_score, distmult_score, cross_entropy_lp_loss,
+                           weighted_cross_entropy_lp_loss, contrastive_lp_loss)
+
+__all__ = [
+    "HeteroGraph", "NeighborSampler", "MFGBlock",
+    "uniform_negatives", "joint_negatives", "local_joint_negatives",
+    "in_batch_negatives",
+    "dot_score", "distmult_score", "cross_entropy_lp_loss",
+    "weighted_cross_entropy_lp_loss", "contrastive_lp_loss",
+]

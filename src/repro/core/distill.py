@@ -1,0 +1,89 @@
+"""GNN distillation into graph-free students (§3.3.3).
+
+A trained GNN teacher produces either embeddings or soft labels for the
+training nodes; a student without graph dependency (MLP over node
+features, or a mini-LM over node text) is trained to match them, so it
+can serve isolated / unseen nodes.  Both paper options are provided:
+  - embedding distillation (MSE between teacher and student embeddings)
+  - soft-label distillation (KL between teacher and student logits)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# students
+# ---------------------------------------------------------------------------
+def init_mlp(rng, in_dim: int, hidden: int, out_dim: int, depth: int = 2):
+    params = []
+    dims = [in_dim] + [hidden] * (depth - 1) + [out_dim]
+    keys = jax.random.split(rng, depth)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        params.append({
+            "w": jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5),
+            "b": jnp.zeros((b,), jnp.float32),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# distillation losses
+# ---------------------------------------------------------------------------
+def embedding_distill_loss(student_emb, teacher_emb, mask=None):
+    """MSE between student and (stop-gradient) teacher embeddings."""
+    teacher_emb = jax.lax.stop_gradient(teacher_emb)
+    se = (student_emb - teacher_emb) ** 2
+    if mask is not None:
+        se = se * mask[:, None]
+        return se.sum() / jnp.maximum(mask.sum() * se.shape[1], 1.0)
+    return se.mean()
+
+
+def soft_label_distill_loss(student_logits, teacher_logits,
+                            temperature: float = 2.0, mask=None):
+    """KL(teacher || student) with temperature scaling."""
+    t = temperature
+    tp = jax.nn.softmax(jax.lax.stop_gradient(teacher_logits) / t, axis=-1)
+    ls = jax.nn.log_softmax(student_logits / t, axis=-1)
+    kl = (tp * (jnp.log(jnp.maximum(tp, 1e-30)) - ls)).sum(-1) * t * t
+    if mask is not None:
+        return (kl * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return kl.mean()
+
+
+def make_distill_step(student_apply: Callable, mode: str, optimizer,
+                      temperature: float = 2.0):
+    """Returns a jittable step: (params, opt_state, step, batch) -> ...
+
+    batch: {"x": student inputs, "teacher": teacher embeddings or logits,
+            "mask": optional}
+    """
+    def loss_fn(params, batch):
+        out = student_apply(params, batch["x"])
+        if mode == "embedding":
+            loss = embedding_distill_loss(out, batch["teacher"],
+                                          batch.get("mask"))
+        else:
+            loss = soft_label_distill_loss(out, batch["teacher"],
+                                           temperature, batch.get("mask"))
+        return loss
+
+    def step_fn(params, opt_state, step, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params, step,
+                                             1e-3)
+        return params, opt_state, step + 1, loss
+
+    return step_fn

@@ -1,0 +1,68 @@
+"""Distributed learnable embedding tables for featureless nodes (§3.3.2).
+
+DistDGL keeps these in a kvstore with sparse adagrad updates; here the
+table is a jax.Array row-sharded over the ``model`` mesh axis.  Updates
+are *sparse*: the trainer takes gradients w.r.t. the gathered rows only
+(dense within the batch), deduplicates ids on host, and applies a
+scatter-style adagrad update — the table never sees a dense gradient.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SparseEmbedding:
+    """Learnable (num_nodes, dim) table with sparse adagrad updates."""
+
+    def __init__(self, num_nodes: int, dim: int, *, name: str = "emb",
+                 rng: Optional[jax.Array] = None, lr: float = 0.05,
+                 dtype=jnp.float32, mesh=None):
+        self.num_nodes = num_nodes
+        self.dim = dim
+        self.name = name
+        self.lr = lr
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        table = jax.random.normal(rng, (num_nodes, dim), jnp.float32) * 0.1
+        self.table = table.astype(dtype)
+        self.gsum = jnp.zeros((num_nodes,), jnp.float32)  # adagrad accum
+        if mesh is not None and "model" in mesh.axis_names \
+                and num_nodes % mesh.shape["model"] == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            sh = NamedSharding(mesh, P("model", None))
+            self.table = jax.device_put(self.table, sh)
+            self.gsum = jax.device_put(
+                self.gsum, NamedSharding(mesh, P("model")))
+
+    # ------------------------------------------------------------------
+    def lookup(self, ids) -> jax.Array:
+        """Gather rows; under a mesh this is the 'remote pull'."""
+        return self.table[jnp.asarray(ids)]
+
+    def apply_sparse_grad(self, ids: np.ndarray, grad_rows: jax.Array):
+        """Sparse adagrad: dedupe ids, sum duplicate-row grads, update.
+
+        ids: (n,) possibly with duplicates. grad_rows: (n, dim).
+        """
+        ids = np.asarray(ids)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        summed = jax.ops.segment_sum(jnp.asarray(grad_rows),
+                                     jnp.asarray(inv), num_segments=len(uniq))
+        uids = jnp.asarray(uniq)
+        gnorm = jnp.sum(summed.astype(jnp.float32) ** 2, axis=1)
+        new_gsum_rows = self.gsum[uids] + gnorm
+        scale = self.lr / (jnp.sqrt(new_gsum_rows) + 1e-10)
+        self.table = self.table.at[uids].add(
+            (-scale[:, None] * summed).astype(self.table.dtype))
+        self.gsum = self.gsum.at[uids].set(new_gsum_rows)
+
+    def state_dict(self):
+        return {"table": np.asarray(self.table),
+                "gsum": np.asarray(self.gsum)}
+
+    def load_state_dict(self, st):
+        self.table = jnp.asarray(st["table"])
+        self.gsum = jnp.asarray(st["gsum"])

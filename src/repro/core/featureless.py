@@ -1,0 +1,81 @@
+"""Featureless-node handling (§3.3.2).
+
+Three options, as in the paper:
+  1. learnable embedding table (SparseEmbedding; sharded at scale)
+  2. feature construction from featured neighbors:
+         F'_v = f(F_u, u in N(v)),  f ∈ {mean, learnable transformer}
+  3. two-stage: link-prediction pretrain of the table, then freeze it as
+     node features for the downstream task.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import EType, HeteroGraph
+
+
+def construct_features_mean(graph: HeteroGraph, target_ntype: str,
+                            feat_name: str = "feat",
+                            max_neighbors: int = 32,
+                            rng: Optional[np.random.Generator] = None
+                            ) -> np.ndarray:
+    """Non-learnable f = masked mean over featured in/out-neighbors.
+
+    One sweep over every edge type touching ``target_ntype`` whose other
+    endpoint carries features; at industry scale this runs partition-
+    parallel (it is a single sparse matmul per etype).
+    """
+    rng = rng or np.random.default_rng(0)
+    n = graph.num_nodes[target_ntype]
+    dim = None
+    acc = None
+    cnt = np.zeros(n, np.float64)
+    for (s, r, d), (u, v) in graph.edges.items():
+        # direction 1: target is dst, src has features
+        if d == target_ntype and graph.has_feat(s, feat_name):
+            f = graph.node_feats[s][feat_name]
+            if acc is None:
+                dim = f.shape[1]
+                acc = np.zeros((n, dim), np.float64)
+            np.add.at(acc, v, f[u])
+            np.add.at(cnt, v, 1.0)
+        # direction 2: target is src, dst has features
+        if s == target_ntype and graph.has_feat(d, feat_name):
+            f = graph.node_feats[d][feat_name]
+            if acc is None:
+                dim = f.shape[1]
+                acc = np.zeros((n, dim), np.float64)
+            np.add.at(acc, u, f[v])
+            np.add.at(cnt, u, 1.0)
+    if acc is None:
+        raise ValueError(f"no featured neighbors for {target_ntype}")
+    out = acc / np.maximum(cnt, 1.0)[:, None]
+    return out.astype(np.float32)
+
+
+def init_neighbor_transformer(rng, dim: int, hidden: int = None):
+    """Learnable f: single-head attention pooling over neighbor features."""
+    hidden = hidden or dim
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s = dim ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (dim,), jnp.float32) * s,  # learned query
+        "wk": jax.random.normal(k2, (dim, hidden), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (dim, hidden), jnp.float32) * s,
+    }
+
+
+def neighbor_transformer_pool(params, nbr_feats, mask):
+    """nbr_feats: (n, fanout, dim), mask: (n, fanout) -> (n, hidden)."""
+    k = jnp.einsum("nfd,dh->nfh", nbr_feats, params["wk"])
+    v = jnp.einsum("nfd,dh->nfh", nbr_feats, params["wv"])
+    scores = jnp.einsum("nfh,h->nf", k, params["wq"])
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=1)
+    # fully-masked rows -> zero output
+    attn = jnp.where(mask.any(axis=1, keepdims=True), attn, 0.0)
+    return jnp.einsum("nf,nfh->nh", attn, v)

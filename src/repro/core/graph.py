@@ -1,0 +1,132 @@
+"""In-memory heterogeneous graph (the engine's node/edge store).
+
+Edges are stored per canonical edge type (src_ntype, relation, dst_ntype)
+in COO and indexed as CSC (dst -> in-neighbors) because mini-batch GNN
+sampling walks *incoming* edges of the seed nodes.
+
+At industry scale this structure lives partitioned across machines
+(see repro.core.dist_graph); the API is identical — that is GraphStorm's
+"same interface on different hardware" property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+EType = Tuple[str, str, str]  # (src_ntype, relation, dst_ntype)
+
+
+@dataclasses.dataclass
+class CSC:
+    """dst-indexed adjacency: in-neighbors of node j are
+    ``indices[indptr[j]:indptr[j+1]]`` with matching ``edge_ids``."""
+    indptr: np.ndarray
+    indices: np.ndarray
+    edge_ids: np.ndarray
+
+    @staticmethod
+    def from_coo(src: np.ndarray, dst: np.ndarray, num_dst: int) -> "CSC":
+        order = np.argsort(dst, kind="stable")
+        sdst = dst[order]
+        indptr = np.zeros(num_dst + 1, np.int64)
+        counts = np.bincount(sdst, minlength=num_dst)
+        indptr[1:] = np.cumsum(counts)
+        return CSC(indptr=indptr, indices=src[order].astype(np.int64),
+                   edge_ids=order.astype(np.int64))
+
+
+class HeteroGraph:
+    def __init__(self,
+                 num_nodes: Dict[str, int],
+                 edges: Dict[EType, Tuple[np.ndarray, np.ndarray]],
+                 node_feats: Optional[Dict[str, Dict[str, np.ndarray]]] = None,
+                 edge_feats: Optional[Dict[EType, Dict[str, np.ndarray]]] = None,
+                 edge_times: Optional[Dict[EType, np.ndarray]] = None):
+        self.num_nodes = dict(num_nodes)
+        self.edges = {et: (np.asarray(s, np.int64), np.asarray(d, np.int64))
+                      for et, (s, d) in edges.items()}
+        self.node_feats = node_feats or {}
+        self.edge_feats = edge_feats or {}
+        self.edge_times = edge_times or {}
+        self._csc: Dict[EType, CSC] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def ntypes(self) -> List[str]:
+        return sorted(self.num_nodes)
+
+    @property
+    def etypes(self) -> List[EType]:
+        return sorted(self.edges)
+
+    def num_edges(self, etype: Optional[EType] = None) -> int:
+        if etype is not None:
+            return len(self.edges[etype][0])
+        return sum(len(s) for s, _ in self.edges.values())
+
+    def csc(self, etype: EType) -> CSC:
+        if etype not in self._csc:
+            src, dst = self.edges[etype]
+            self._csc[etype] = CSC.from_coo(src, dst,
+                                            self.num_nodes[etype[2]])
+        return self._csc[etype]
+
+    def in_degrees(self, etype: EType) -> np.ndarray:
+        c = self.csc(etype)
+        return np.diff(c.indptr)
+
+    # ------------------------------------------------------------------
+    def add_reverse_edges(self) -> "HeteroGraph":
+        """Add (dst, rel-rev, src) for every etype (GraphStorm gconstruct
+        does this so message passing can flow both ways)."""
+        new_edges = dict(self.edges)
+        for (s, r, d), (u, v) in self.edges.items():
+            rev = (d, r + "-rev", s)
+            if rev not in new_edges:
+                new_edges[rev] = (v.copy(), u.copy())
+        return HeteroGraph(self.num_nodes, new_edges, self.node_feats,
+                           self.edge_feats, dict(self.edge_times))
+
+    def remove_edges(self, etype: EType, edge_mask: np.ndarray) -> "HeteroGraph":
+        """Return a graph without the masked edges (True = remove)."""
+        new_edges = dict(self.edges)
+        s, d = self.edges[etype]
+        keep = ~edge_mask
+        new_edges[etype] = (s[keep], d[keep])
+        return HeteroGraph(self.num_nodes, new_edges, self.node_feats,
+                           self.edge_feats, dict(self.edge_times))
+
+    def feat_dim(self, ntype: str, name: str = "feat") -> Optional[int]:
+        f = self.node_feats.get(ntype, {}).get(name)
+        return None if f is None else int(f.shape[1])
+
+    def has_feat(self, ntype: str, name: str = "feat") -> bool:
+        return name in self.node_feats.get(ntype, {})
+
+    # ------------------------------------------------------------------
+    def homogenize(self) -> "HeteroGraph":
+        """Collapse all node/edge types into one (schema ablation support)."""
+        offsets, total = {}, 0
+        for nt in self.ntypes:
+            offsets[nt] = total
+            total += self.num_nodes[nt]
+        srcs, dsts = [], []
+        for (s, r, d), (u, v) in self.edges.items():
+            srcs.append(u + offsets[s])
+            dsts.append(v + offsets[d])
+        feats = {}
+        dims = [self.feat_dim(nt) for nt in self.ntypes if self.feat_dim(nt)]
+        if dims:
+            dim = max(dims)
+            buf = np.zeros((total, dim), np.float32)
+            for nt in self.ntypes:
+                f = self.node_feats.get(nt, {}).get("feat")
+                if f is not None:
+                    buf[offsets[nt]:offsets[nt] + len(f), :f.shape[1]] = f
+            feats = {"node": {"feat": buf}}
+        return HeteroGraph({"node": total},
+                           {("node", "edge", "node"):
+                            (np.concatenate(srcs), np.concatenate(dsts))},
+                           feats)

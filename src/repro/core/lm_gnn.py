@@ -1,0 +1,182 @@
+"""LM+GNN joint modeling (§3.3.1).
+
+Strategies reproduced from the paper:
+  - cascade: pre-trained LM embeddings -> GNN ("pre-trained BERT+GNN")
+  - FTNC / FTLP: fine-tune the LM on the downstream task (node
+    classification / link prediction over text pairs), then cascade
+    ("fine-tuned BERT+GNN", Ioannidis et al. [10] stages 1-2)
+  - end-to-end co-fine-tuning (stage 3): gradients flow through the LM
+    for the seed nodes' text
+  - GLEM-style EM [27], extended to heterogeneous graphs: E-step trains
+    the LM on GNN pseudo-labels, M-step retrains the GNN on refreshed LM
+    embeddings.
+
+The LM is any ModelConfig (the assigned-pool architectures plug in here);
+benchmarks use the CPU-scale bert_tiny.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.text_encoder import encode_text
+from repro.models.config import ModelConfig
+from repro.models.params import init_params
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# embedding production (the "LM Time Cost" column of Table 2)
+# ---------------------------------------------------------------------------
+def compute_lm_embeddings(cfg: ModelConfig, params, tokens: np.ndarray,
+                          batch_size: int = 256) -> np.ndarray:
+    """Encode every node's text; returns (n, d_model) float32."""
+    enc = jax.jit(lambda p, t: encode_text(cfg, p, t))
+    n = len(tokens)
+    outs = []
+    for i in range(0, n, batch_size):
+        chunk = tokens[i:i + batch_size]
+        if len(chunk) < batch_size:  # pad to keep one jit signature
+            pad = np.zeros((batch_size - len(chunk),) + chunk.shape[1:],
+                           chunk.dtype)
+            out = enc(params, jnp.asarray(np.concatenate([chunk, pad])))
+            outs.append(np.asarray(out)[:len(chunk)])
+        else:
+            outs.append(np.asarray(enc(params, jnp.asarray(chunk))))
+    return np.concatenate(outs).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# stage 1a: fine-tune LM with node classification (FTNC)
+# ---------------------------------------------------------------------------
+def finetune_lm_nc(cfg: ModelConfig, tokens: np.ndarray, labels: np.ndarray,
+                   train_idx: np.ndarray, num_classes: int,
+                   epochs: int = 2, batch_size: int = 64, lr: float = 3e-4,
+                   rng=None, params=None, verbose: bool = False):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    params = params if params is not None else init_params(cfg, k1)
+    head = {"w": jax.random.normal(k2, (cfg.d_model, num_classes),
+                                   jnp.float32) * cfg.d_model ** -0.5,
+            "b": jnp.zeros((num_classes,), jnp.float32)}
+    opt = adamw(weight_decay=0.0)
+    state = opt.init((params, head))
+
+    def loss_fn(ph, toks, labs, mask):
+        p, h = ph
+        emb = encode_text(cfg, p, toks)
+        logits = emb @ h["w"] + h["b"]
+        ls = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(ls, labs[:, None], axis=1)[:, 0]
+        m = mask.astype(jnp.float32)
+        return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+    @jax.jit
+    def step(ph, state, stepno, toks, labs, mask):
+        loss, g = jax.value_and_grad(loss_fn)(ph, toks, labs, mask)
+        ph, state = opt.update(g, state, ph, stepno, lr)
+        return ph, state, stepno + 1, loss
+
+    ph = (params, head)
+    stepno = jnp.zeros((), jnp.int32)
+    rng_np = np.random.default_rng(0)
+    for ep in range(epochs):
+        order = rng_np.permutation(train_idx)
+        for i in range(0, len(order) - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            ph, state, stepno, loss = step(
+                ph, state, stepno, jnp.asarray(tokens[idx]),
+                jnp.asarray(labels[idx]), jnp.ones(len(idx)))
+        if verbose:
+            print(f"  ftnc epoch {ep} loss {float(loss):.4f}")
+    return ph[0], ph[1]
+
+
+# ---------------------------------------------------------------------------
+# stage 1b: fine-tune LM with link prediction over text pairs (FTLP)
+# ---------------------------------------------------------------------------
+def finetune_lm_lp(cfg: ModelConfig, tokens_src_nt: np.ndarray,
+                   tokens_dst_nt: np.ndarray,
+                   edges: Tuple[np.ndarray, np.ndarray],
+                   epochs: int = 1, batch_size: int = 64, lr: float = 3e-4,
+                   temperature: float = 0.1, rng=None, params=None,
+                   verbose: bool = False):
+    """In-batch contrastive LP on connected nodes' text embeddings."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = params if params is not None else init_params(cfg, rng)
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+    src_ids, dst_ids = edges
+
+    def loss_fn(p, ts, td):
+        es = encode_text(cfg, p, ts)
+        ed = encode_text(cfg, p, td)
+        es = es / (jnp.linalg.norm(es, axis=1, keepdims=True) + 1e-6)
+        ed = ed / (jnp.linalg.norm(ed, axis=1, keepdims=True) + 1e-6)
+        logits = es @ ed.T / temperature
+        lab = jnp.arange(logits.shape[0])
+        ls = jax.nn.log_softmax(logits, axis=1)
+        return -jnp.take_along_axis(ls, lab[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, state, stepno, ts, td):
+        loss, g = jax.value_and_grad(loss_fn)(p, ts, td)
+        p, state = opt.update(g, state, p, stepno, lr)
+        return p, state, stepno + 1, loss
+
+    stepno = jnp.zeros((), jnp.int32)
+    rng_np = np.random.default_rng(0)
+    for ep in range(epochs):
+        order = rng_np.permutation(len(src_ids))
+        for i in range(0, len(order) - batch_size + 1, batch_size):
+            e = order[i:i + batch_size]
+            p_loss = step(params, state, stepno,
+                          jnp.asarray(tokens_src_nt[src_ids[e]]),
+                          jnp.asarray(tokens_dst_nt[dst_ids[e]]))
+            params, state, stepno, loss = p_loss
+        if verbose:
+            print(f"  ftlp epoch {ep} loss {float(loss):.4f}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# GLEM-style EM co-training [27], heterogeneous extension
+# ---------------------------------------------------------------------------
+def glem_em(cfg: ModelConfig, lm_params, tokens, labels, train_idx,
+            num_classes: int, gnn_train_fn, rounds: int = 2,
+            pseudo_frac: float = 0.5, epochs_lm: int = 1,
+            rng=None, verbose: bool = False):
+    """gnn_train_fn(lm_embeddings) -> (gnn_logits (n, C), metric).
+
+    E-step: fine-tune LM on true labels + GNN pseudo-labels;
+    M-step: retrain the GNN on fresh LM embeddings.
+    """
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    head = None
+    history = []
+    n = len(tokens)
+    for r in range(rounds):
+        emb = compute_lm_embeddings(cfg, lm_params, tokens)
+        gnn_logits, metric = gnn_train_fn(emb)
+        history.append(metric)
+        if verbose:
+            print(f"GLEM round {r}: gnn metric {metric:.4f}")
+        if r == rounds - 1:
+            break
+        # E-step: pseudo-labels on a confident unlabeled subset
+        pseudo = np.asarray(gnn_logits).argmax(1)
+        conf = np.asarray(jax.nn.softmax(jnp.asarray(gnn_logits), -1)).max(1)
+        unlabeled = np.setdiff1d(np.arange(n), train_idx)
+        thresh = np.quantile(conf[unlabeled], 1 - pseudo_frac)
+        chosen = unlabeled[conf[unlabeled] >= thresh]
+        mix_idx = np.concatenate([train_idx, chosen])
+        mix_lab = labels.copy()
+        mix_lab[chosen] = pseudo[chosen]
+        lm_params, head = finetune_lm_nc(
+            cfg, tokens, mix_lab, mix_idx, num_classes,
+            epochs=epochs_lm, rng=rng, params=lm_params)
+    return lm_params, history

@@ -1,0 +1,89 @@
+"""Link-prediction scores and losses (paper Appendix A).
+
+Scores:  dot product, DistMult (per-relation diagonal bilinear).
+Losses:  cross-entropy, weighted cross-entropy, contrastive (InfoNCE-style
+grouping of 1 positive with its N negatives).
+All operate on embeddings: pos_src/pos_dst (B, D), neg_dst (B, K, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# score functions
+# ---------------------------------------------------------------------------
+def dot_score(src, dst):
+    """src: (..., D), dst: (..., D) -> (...)"""
+    return jnp.sum(src * dst, axis=-1)
+
+
+def distmult_score(src, dst, rel_emb):
+    """rel_emb: (D,) or broadcastable — diagonal relation matrix."""
+    return jnp.sum(src * rel_emb * dst, axis=-1)
+
+
+def score_edges(src, dst, rel_emb=None):
+    if rel_emb is None:
+        return dot_score(src, dst)
+    return distmult_score(src, dst, rel_emb)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def cross_entropy_lp_loss(pos_score, neg_score, neg_mask=None,
+                          pos_weight=None):
+    """Binary CE: positives -> 1, negatives -> 0 (scores are logits)."""
+    pos = jax.nn.log_sigmoid(pos_score)
+    if pos_weight is not None:
+        pos = pos * pos_weight
+    neg = jax.nn.log_sigmoid(-neg_score)
+    if neg_mask is not None:
+        neg = neg * neg_mask
+        denom = jnp.maximum(neg_mask.sum(), 1.0)
+    else:
+        denom = neg_score.size
+    return -(pos.mean() + neg.sum() / denom)
+
+
+def weighted_cross_entropy_lp_loss(pos_score, neg_score, pos_weight,
+                                   neg_mask=None):
+    return cross_entropy_lp_loss(pos_score, neg_score, neg_mask=neg_mask,
+                                 pos_weight=pos_weight)
+
+
+def contrastive_lp_loss(pos_score, neg_score, neg_mask=None,
+                        temperature: float = 1.0):
+    """-log( exp(pos) / (exp(pos) + sum_k exp(neg_k)) ) per positive."""
+    pos = pos_score[:, None] / temperature          # (B, 1)
+    neg = neg_score / temperature                   # (B, K)
+    if neg_mask is not None:
+        neg = jnp.where(neg_mask, neg, -1e30)
+    logits = jnp.concatenate([pos, neg], axis=1)    # (B, 1+K)
+    return -jax.nn.log_softmax(logits, axis=1)[:, 0].mean()
+
+
+LOSSES = {
+    "cross_entropy": cross_entropy_lp_loss,
+    "contrastive": contrastive_lp_loss,
+}
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+def mrr(pos_score, neg_score, neg_mask=None):
+    """Mean reciprocal rank of the positive among its negatives."""
+    if neg_mask is not None:
+        neg_score = jnp.where(neg_mask, neg_score, -jnp.inf)
+    rank = 1 + jnp.sum(neg_score > pos_score[:, None], axis=1)
+    return jnp.mean(1.0 / rank)
+
+
+def hits_at_k(pos_score, neg_score, k: int, neg_mask=None):
+    if neg_mask is not None:
+        neg_score = jnp.where(neg_mask, neg_score, -jnp.inf)
+    rank = 1 + jnp.sum(neg_score > pos_score[:, None], axis=1)
+    return jnp.mean((rank <= k).astype(jnp.float32))

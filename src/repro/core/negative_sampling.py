@@ -1,0 +1,96 @@
+"""Negative sampling for link prediction (paper Appendix A.2.1).
+
+Four methods trading data movement against model performance:
+  uniform     — K fresh negatives per positive edge (N*K sampled nodes)
+  joint       — one shared set of K negatives per K positives (N sampled)
+  local-joint — joint, but drawn from the local partition only
+  in-batch    — negatives are the other destination nodes in the batch
+
+All return (neg_dst_ids (N, K), mask (N, K)); the ids index the dst node
+type. They run on the host next to the neighbor sampler.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def uniform_negatives(rng: np.random.Generator, num_dst_nodes: int,
+                      batch_dst: np.ndarray, k: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    n = len(batch_dst)
+    neg = rng.integers(0, num_dst_nodes, size=(n, k))
+    return neg.astype(np.int64), np.ones((n, k), bool)
+
+
+def joint_negatives(rng: np.random.Generator, num_dst_nodes: int,
+                    batch_dst: np.ndarray, k: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """K shared negatives per group of K positives: N sampled nodes total."""
+    n = len(batch_dst)
+    groups = -(-n // k)
+    shared = rng.integers(0, num_dst_nodes, size=(groups, k)).astype(np.int64)
+    neg = np.repeat(shared, k, axis=0)[:n]
+    return neg, np.ones((n, k), bool)
+
+
+def local_joint_negatives(rng: np.random.Generator,
+                          local_nodes: np.ndarray,
+                          batch_dst: np.ndarray, k: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Joint sampling restricted to the local partition's node set —
+    avoids cross-partition feature pulls entirely."""
+    n = len(batch_dst)
+    groups = -(-n // k)
+    pick = rng.integers(0, len(local_nodes), size=(groups, k))
+    shared = local_nodes[pick].astype(np.int64)
+    neg = np.repeat(shared, k, axis=0)[:n]
+    return neg, np.ones((n, k), bool)
+
+
+def in_batch_negatives(rng: np.random.Generator, num_dst_nodes: int,
+                       batch_dst: np.ndarray, k: int,
+                       pad_with_joint: bool = True
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Exchange destination nodes between the batch's positive edges.
+
+    Edge i gets the other batch dst nodes as negatives (batch-1 of them);
+    if k > batch-1 the remainder is filled by joint sampling (per paper:
+    'either of the above three methods can be used to sample extra').
+    """
+    n = len(batch_dst)
+    avail = n - 1
+    take = min(k, avail)
+    # roll the batch dst column-wise: negative j of edge i = dst[(i+j+1) % n]
+    idx = (np.arange(n)[:, None] + np.arange(1, take + 1)[None, :]) % n
+    neg = batch_dst[idx].astype(np.int64)
+    mask = np.ones((n, take), bool)
+    if take < k:
+        if pad_with_joint:
+            extra, em = joint_negatives(rng, num_dst_nodes, batch_dst, k - take)
+            neg = np.concatenate([neg, extra], axis=1)
+            mask = np.concatenate([mask, em], axis=1)
+        else:
+            pad = np.zeros((n, k - take), np.int64)
+            neg = np.concatenate([neg, pad], axis=1)
+            mask = np.concatenate([mask, np.zeros((n, k - take), bool)], axis=1)
+    return neg, mask
+
+
+SAMPLERS = {
+    "uniform": uniform_negatives,
+    "joint": joint_negatives,
+    "in_batch": in_batch_negatives,
+}
+
+
+def sampled_node_count(method: str, batch_size: int, k: int) -> int:
+    """Unique nodes a method pulls per batch (paper §4.4.3's cost driver)."""
+    if method == "uniform":
+        return batch_size * k
+    if method in ("joint", "local_joint"):
+        return batch_size
+    if method == "in_batch":
+        return 0 if k <= batch_size - 1 else batch_size
+    raise ValueError(method)

@@ -1,0 +1,196 @@
+"""On-the-fly fixed-fanout mini-batch sampling -> padded MFG blocks.
+
+GraphStorm/DistDGL samples variable-degree neighborhoods into dynamic CSR
+minibatches on CPU workers.  JAX/TPU wants static shapes, so the TPU-native
+re-think is *tree-structured fixed-fanout sampling*: every dst node draws
+exactly ``fanout`` in-neighbors per edge type (sampling with replacement
+when deg > 0; masked rows when deg == 0).  A frontier at layer l-1 is the
+concatenation, in deterministic order, of
+
+    [dst nodes themselves (self rows)] ++ [per-etype sampled neighbors]
+
+so each MFG block only needs offsets + masks — neighbor *positions* are
+implicit, and the aggregation becomes a dense (num_dst, fanout, dim)
+masked mean: exactly the seg_aggr Pallas kernel's layout.
+
+Sampling stays on the host (numpy), mirroring DistDGL's CPU samplers; the
+padded blocks are what cross into jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import EType, HeteroGraph
+
+
+@dataclasses.dataclass
+class EdgeBlockInfo:
+    etype: EType
+    num_dst: int
+    fanout: int
+    src_offset: int           # row offset of sampled nbrs in src-ntype frontier
+    mask: np.ndarray          # (num_dst, fanout) bool
+    nbr_global: np.ndarray    # (num_dst, fanout) global src ids (for debug/excl)
+    edge_ids: np.ndarray      # (num_dst, fanout) sampled edge ids
+    delta_t: Optional[np.ndarray] = None  # (num_dst, fanout) temporal graphs
+
+
+@dataclasses.dataclass
+class MFGBlock:
+    """One message-flow layer: frontier[l-1] (inputs) -> frontier[l] (outputs)."""
+    dst_counts: Dict[str, int]              # per dst ntype
+    src_counts: Dict[str, int]              # per src ntype (frontier rows)
+    self_offsets: Dict[str, int]            # where dst rows sit in src frontier
+    edge_blocks: List[EdgeBlockInfo]
+    src_nodes: Dict[str, np.ndarray]        # frontier[l-1] global ids per ntype
+    dst_nodes: Dict[str, np.ndarray]        # frontier[l]   global ids per ntype
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    blocks: List[MFGBlock]                  # length = num GNN layers
+    input_nodes: Dict[str, np.ndarray]      # frontier[0] ids per ntype
+    seeds: Dict[str, np.ndarray]            # seed ids per ntype
+    seed_mask: Dict[str, np.ndarray]        # padding mask per ntype
+
+
+class NeighborSampler:
+    """Fixed-fanout sampler over a HeteroGraph.
+
+    fanouts: one int per GNN layer (applied to every edge type), or a list
+    of dicts {etype: fanout}.
+    """
+
+    def __init__(self, graph: HeteroGraph, fanouts: Sequence,
+                 seed: int = 0,
+                 exclude_edges: Optional[Dict[EType, set]] = None,
+                 restrict_nodes: Optional[Dict[str, np.ndarray]] = None):
+        self.g = graph
+        self.fanouts = list(fanouts)
+        self.rng = np.random.default_rng(seed)
+        self.exclude_edges = exclude_edges or {}
+        self.restrict = restrict_nodes
+
+    # ------------------------------------------------------------------
+    def _sample_neighbors(self, etype: EType, dst_ids: np.ndarray,
+                          fanout: int,
+                          exclude_pairs: Optional[set] = None):
+        """Returns (nbrs (n,f), eids (n,f), mask (n,f))."""
+        csc = self.g.csc(etype)
+        n = len(dst_ids)
+        nbrs = np.zeros((n, fanout), np.int64)
+        eids = np.zeros((n, fanout), np.int64)
+        mask = np.zeros((n, fanout), bool)
+        starts = csc.indptr[dst_ids]
+        degs = csc.indptr[dst_ids + 1] - starts
+        has = degs > 0
+        if not has.any():
+            return nbrs, eids, mask
+        # vectorized with-replacement draw for all rows at once
+        draw = self.rng.integers(0, np.maximum(degs, 1)[:, None],
+                                 size=(n, fanout))
+        flat = starts[:, None] + draw
+        # rows with deg==0 may point one past the last edge; clamp (they
+        # are masked out below anyway)
+        flat = np.minimum(flat, len(csc.indices) - 1)
+        nbrs = csc.indices[flat]
+        eids = csc.edge_ids[flat]
+        mask = np.broadcast_to(has[:, None], (n, fanout)).copy()
+        # degree < fanout: keep only ceil draws? with replacement we keep all;
+        # rows with deg==0 are fully masked and point at node 0 (padded)
+        nbrs[~mask] = 0
+        if exclude_pairs:
+            # SpotTarget: mask out sampled edges that are batch targets.
+            # encode (src, dst) pairs as a single int for vectorized isin
+            n_src = self.g.num_nodes[etype[0]]
+            codes = nbrs * np.int64(self.g.num_nodes[etype[2]]) \
+                + dst_ids[:, None]
+            excl = np.fromiter(
+                (int(s) * self.g.num_nodes[etype[2]] + int(d)
+                 for s, d in exclude_pairs), np.int64, len(exclude_pairs))
+            mask &= ~np.isin(codes, excl)
+        return nbrs, eids, mask
+
+    # ------------------------------------------------------------------
+    def sample(self, seeds: Dict[str, np.ndarray],
+               exclude_pairs: Optional[Dict[EType, set]] = None
+               ) -> MiniBatch:
+        """seeds: {ntype: global ids (already padded to a static size)}."""
+        exclude_pairs = exclude_pairs or {}
+        L = len(self.fanouts)
+        frontier: Dict[str, np.ndarray] = {nt: np.asarray(ids, np.int64)
+                                           for nt, ids in seeds.items()}
+        blocks: List[MFGBlock] = []
+
+        for layer in range(L - 1, -1, -1):
+            fan = self.fanouts[layer]
+            dst_nodes = frontier
+            dst_counts = {nt: len(ids) for nt, ids in dst_nodes.items()}
+            # frontier[l-1] build order: self rows first, then per-etype
+            parts: Dict[str, List[np.ndarray]] = {nt: [ids]
+                                                  for nt, ids in dst_nodes.items()}
+            self_offsets = {nt: 0 for nt in dst_nodes}
+            edge_blocks: List[EdgeBlockInfo] = []
+
+            for etype in self.g.etypes:
+                s, r, d = etype
+                if d not in dst_nodes or len(dst_nodes[d]) == 0:
+                    continue
+                f = fan[etype] if isinstance(fan, dict) else int(fan)
+                nbrs, eids, mask = self._sample_neighbors(
+                    etype, dst_nodes[d], f, exclude_pairs.get(etype))
+                if s not in parts:
+                    parts[s] = []
+                    self_offsets.setdefault(s, None)
+                offset = sum(len(p) for p in parts[s])
+                parts[s].append(nbrs.reshape(-1))
+                dt = None
+                if etype in self.g.edge_times:
+                    ts = self.g.edge_times[etype][eids]
+                    dt = ts.astype(np.float32)
+                edge_blocks.append(EdgeBlockInfo(
+                    etype=etype, num_dst=len(dst_nodes[d]), fanout=f,
+                    src_offset=offset, mask=mask, nbr_global=nbrs,
+                    edge_ids=eids, delta_t=dt))
+
+            src_nodes = {nt: np.concatenate(ps) for nt, ps in parts.items()}
+            blocks.append(MFGBlock(
+                dst_counts=dst_counts,
+                src_counts={nt: len(v) for nt, v in src_nodes.items()},
+                self_offsets={nt: off for nt, off in self_offsets.items()
+                              if off is not None},
+                edge_blocks=edge_blocks,
+                src_nodes=src_nodes,
+                dst_nodes=dst_nodes,
+            ))
+            frontier = src_nodes
+
+        blocks.reverse()  # blocks[0] consumes raw features
+        return MiniBatch(blocks=blocks, input_nodes=frontier,
+                         seeds=seeds, seed_mask={})
+
+
+def pad_seeds(ids: np.ndarray, batch_size: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a seed array to a static batch size; returns (padded, mask)."""
+    n = len(ids)
+    assert n <= batch_size
+    out = np.zeros(batch_size, np.int64)
+    out[:n] = ids
+    mask = np.zeros(batch_size, bool)
+    mask[:n] = True
+    return out, mask
+
+
+def fetch_features(graph: HeteroGraph, nodes: Dict[str, np.ndarray],
+                   feat_name: str = "feat") -> Dict[str, np.ndarray]:
+    """Gather raw input features for frontier[0] (the RPC 'pull' in
+    DistDGL; a sharded gather in the JAX engine)."""
+    out = {}
+    for nt, ids in nodes.items():
+        f = graph.node_feats.get(nt, {}).get(feat_name)
+        if f is not None:
+            out[nt] = f[ids]
+    return out

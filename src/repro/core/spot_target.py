@@ -1,0 +1,64 @@
+"""Leakage control for link prediction (§3.3.4, SpotTarget [32]).
+
+Two mechanisms, both on by default in the LP trainer:
+  1. exclude validation/test edges from the *training graph* entirely;
+  2. exclude each mini-batch's target edges from message passing
+     (the sampler masks sampled neighbors that coincide with targets).
+"""
+from __future__ import annotations
+
+from typing import Dict, Set, Tuple
+
+import numpy as np
+
+from repro.core.graph import EType, HeteroGraph
+
+
+def split_edges(rng: np.random.Generator, graph: HeteroGraph, etype: EType,
+                split_pct=(0.8, 0.1, 0.1)):
+    """Random train/val/test split of one edge type's edge ids."""
+    n = graph.num_edges(etype)
+    perm = rng.permutation(n)
+    n_tr = int(split_pct[0] * n)
+    n_va = int(split_pct[1] * n)
+    return perm[:n_tr], perm[n_tr:n_tr + n_va], perm[n_tr + n_va:]
+
+
+def exclude_eval_edges(graph: HeteroGraph, etype: EType,
+                       val_ids: np.ndarray, test_ids: np.ndarray
+                       ) -> HeteroGraph:
+    """Training graph = graph minus val/test target edges (and their
+    reverse copies if present)."""
+    n = graph.num_edges(etype)
+    mask = np.zeros(n, bool)
+    mask[val_ids] = True
+    mask[test_ids] = True
+    out = graph.remove_edges(etype, mask)
+    s, r, d = etype
+    rev = (d, r + "-rev", s)
+    if rev in graph.edges:
+        # remove the mirrored copies: match on (dst,src) pairs
+        su, sv = graph.edges[etype]
+        drop = set(zip(sv[mask].tolist(), su[mask].tolist()))
+        ru, rv = out.edges[rev]
+        rmask = np.fromiter(((int(a), int(b)) in drop
+                             for a, b in zip(ru, rv)), bool, len(ru))
+        out = out.remove_edges(rev, rmask)
+    return out
+
+
+def target_edge_pairs(src_ids: np.ndarray, dst_ids: np.ndarray
+                      ) -> Set[Tuple[int, int]]:
+    """The (src, dst) pairs of a batch's positive edges, to be masked out
+    of message passing by the sampler."""
+    return set(zip(src_ids.tolist(), dst_ids.tolist()))
+
+
+def batch_exclusions(etype: EType, src_ids, dst_ids,
+                     include_reverse: bool = True) -> Dict[EType, set]:
+    s, r, d = etype
+    out = {etype: target_edge_pairs(np.asarray(src_ids), np.asarray(dst_ids))}
+    if include_reverse:
+        out[(d, r + "-rev", s)] = target_edge_pairs(
+            np.asarray(dst_ids), np.asarray(src_ids))
+    return out

@@ -1,0 +1,61 @@
+"""Text encoders for LM+GNN (§3.3.1).
+
+Any architecture from the assigned pool can act as the LM: its stack
+encodes a node's token sequence and mean-pools to a node embedding.
+``bert_tiny_config`` is the CPU-runnable default used by the paper-table
+benchmarks (the original uses BERT/DistilBERT).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import dense_block
+from repro.models.config import ModelConfig
+from repro.models.model import embed_tokens, _apply_stack_full
+from repro.models.norms import rms_norm
+from repro.models.params import init_params, model_defs
+
+
+def bert_tiny_config(vocab_size: int = 8192, d_model: int = 128,
+                     num_layers: int = 2, num_heads: int = 4,
+                     name: str = "bert-tiny") -> ModelConfig:
+    return ModelConfig(
+        name=name, arch_type="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=num_heads, num_kv_heads=num_heads,
+        head_dim=d_model // num_heads, d_ff=4 * d_model,
+        vocab_size=vocab_size, ffn_kind="gelu", tie_embeddings=True,
+        param_dtype="float32", act_dtype="float32",
+        scan_layers=False, remat=False)
+
+
+def distilbert_tiny_config(vocab_size: int = 8192) -> ModelConfig:
+    """Half-depth student for GNN distillation (paper §4.4.2)."""
+    return bert_tiny_config(vocab_size=vocab_size, num_layers=1,
+                            name="distilbert-tiny")
+
+
+def encode_text(cfg: ModelConfig, params, tokens, attn_mask=None,
+                pool: str = "mean"):
+    """tokens: (B, S) int32 -> (B, D) pooled embedding (bidirectional)."""
+    x = embed_tokens(cfg, params, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    # bidirectional: reuse the stack with causal=False
+    n = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+    for i in range(n):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        x, _, _ = dense_block(cfg, lp, x, positions, causal=False)
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if attn_mask is not None:
+        m = attn_mask[..., None].astype(x.dtype)
+        if pool == "mean":
+            return (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+        return x[:, 0]
+    if pool == "mean":
+        return x.mean(axis=1)
+    return x[:, 0]  # first-token ("CLS") pooling
+
+
+def init_text_encoder(cfg: ModelConfig, rng):
+    return init_params(cfg, rng)

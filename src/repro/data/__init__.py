@@ -1,0 +1,5 @@
+from repro.data.synthetic import (make_mag_like, make_amazon_like,
+                                  make_scaling_graph, make_temporal_graph)
+
+__all__ = ["make_mag_like", "make_amazon_like", "make_scaling_graph",
+           "make_temporal_graph"]

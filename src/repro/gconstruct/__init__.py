@@ -1,0 +1,8 @@
+from repro.gconstruct.pipeline import construct_graph
+from repro.gconstruct.partition import (random_partition, ldg_partition,
+                                        PARTITIONERS)
+from repro.gconstruct.id_map import IdMap
+from repro.gconstruct.transforms import TRANSFORMS, apply_transform
+
+__all__ = ["construct_graph", "random_partition", "ldg_partition",
+           "PARTITIONERS", "IdMap", "TRANSFORMS", "apply_transform"]

@@ -1,0 +1,51 @@
+"""Distributed-style string->int node ID mapping (§3.1.2).
+
+The original builds massive mapping tables with Spark.  Here the same
+phase structure is kept — build per-chunk dictionaries, merge into a
+global table, then apply the table to every chunk of node/edge data —
+so the implementation parallelizes trivially (each chunk is independent
+except for the merge barrier).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+
+class IdMap:
+    def __init__(self):
+        self._table: Dict[str, int] = {}
+        self._rev: List[str] = []
+
+    def __len__(self):
+        return len(self._table)
+
+    # ------------------------------------------------------------------
+    def build_chunked(self, chunks: Iterable[Sequence]):
+        """Phase 1+2: per-chunk uniques then global merge (stable order:
+        first occurrence wins, chunk order deterministic)."""
+        for chunk in chunks:
+            for s in chunk:
+                s = str(s)
+                if s not in self._table:
+                    self._table[s] = len(self._rev)
+                    self._rev.append(s)
+        return self
+
+    def apply(self, values: Sequence) -> np.ndarray:
+        """Phase 3: map string ids to ints (vectorized per chunk)."""
+        out = np.empty(len(values), np.int64)
+        t = self._table
+        for i, s in enumerate(values):
+            out[i] = t[str(s)]
+        return out
+
+    def apply_chunked(self, values: Sequence, chunk_size: int = 1 << 16
+                      ) -> np.ndarray:
+        parts = [self.apply(values[i:i + chunk_size])
+                 for i in range(0, len(values), chunk_size)]
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    def inverse(self, ids: np.ndarray) -> List[str]:
+        return [self._rev[i] for i in ids]

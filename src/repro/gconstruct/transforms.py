@@ -1,0 +1,103 @@
+"""Feature transforms for the construction pipeline (§3.1.2).
+
+Numerical, categorical and text encoders that operate chunk-wise so the
+same code path scales out (two-pass: fit statistics, then apply).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# numerical
+# ---------------------------------------------------------------------------
+def fit_standardize(values: np.ndarray) -> dict:
+    v = np.asarray(values, np.float64)
+    return {"mean": float(v.mean()), "std": float(v.std() + 1e-12)}
+
+
+def standardize(values, stats) -> np.ndarray:
+    v = np.asarray(values, np.float32)
+    return ((v - stats["mean"]) / stats["std"]).astype(np.float32)
+
+
+def fit_minmax(values) -> dict:
+    v = np.asarray(values, np.float64)
+    return {"min": float(v.min()), "max": float(v.max())}
+
+
+def minmax(values, stats) -> np.ndarray:
+    v = np.asarray(values, np.float32)
+    rng = max(stats["max"] - stats["min"], 1e-12)
+    return ((v - stats["min"]) / rng).astype(np.float32)
+
+
+def bucketize(values, stats) -> np.ndarray:
+    edges = np.asarray(stats["edges"], np.float64)
+    return np.digitize(np.asarray(values, np.float64), edges).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# categorical
+# ---------------------------------------------------------------------------
+def fit_categorical(values) -> dict:
+    cats = sorted({str(v) for v in values})
+    return {"vocab": {c: i for i, c in enumerate(cats)}}
+
+
+def categorical_onehot(values, stats) -> np.ndarray:
+    vocab = stats["vocab"]
+    out = np.zeros((len(values), len(vocab)), np.float32)
+    for i, v in enumerate(values):
+        j = vocab.get(str(v))
+        if j is not None:
+            out[i, j] = 1.0
+    return out
+
+
+def categorical_id(values, stats) -> np.ndarray:
+    vocab = stats["vocab"]
+    return np.array([vocab.get(str(v), len(vocab)) for v in values], np.int64)
+
+
+# ---------------------------------------------------------------------------
+# text: deterministic hash tokenizer (stand-in for a BPE vocab; the LM
+# consuming these tokens is trained from scratch, so any stable token
+# function works)
+# ---------------------------------------------------------------------------
+def hash_tokenize(texts: Sequence[str], max_len: int = 32,
+                  vocab_size: int = 8192) -> np.ndarray:
+    out = np.zeros((len(texts), max_len), np.int64)
+    for i, t in enumerate(texts):
+        words = str(t).split()[:max_len]
+        for j, w in enumerate(words):
+            h = int(hashlib.md5(w.encode()).hexdigest()[:8], 16)
+            out[i, j] = 1 + h % (vocab_size - 1)  # 0 = pad
+    return out
+
+
+TRANSFORMS = {
+    "standardize": (fit_standardize, standardize),
+    "minmax": (fit_minmax, minmax),
+    "categorical_onehot": (fit_categorical, categorical_onehot),
+    "categorical_id": (fit_categorical, categorical_id),
+    "tokenize": (None, None),  # handled specially (stateless)
+    "none": (None, None),
+}
+
+
+def apply_transform(kind: str, values, chunk_size: int = 1 << 16,
+                    **kw) -> np.ndarray:
+    """Two-pass chunked transform: fit on a streaming pass, then apply."""
+    if kind == "none":
+        return np.asarray(values, np.float32)
+    if kind == "tokenize":
+        return hash_tokenize(values, **kw)
+    fit, apply_fn = TRANSFORMS[kind]
+    stats = fit(values)
+    parts = [apply_fn(values[i:i + chunk_size], stats)
+             for i in range(0, len(values), chunk_size)]
+    return np.concatenate(parts) if parts else np.zeros(0, np.float32)

@@ -1,0 +1,6 @@
+from repro.gnn.model import (GNN_ZOO, GSgnnModel, init_gnn_model,
+                             gnn_apply_blocks)
+from repro.gnn.decoders import (init_decoder, decoder_apply)
+
+__all__ = ["GNN_ZOO", "GSgnnModel", "init_gnn_model", "gnn_apply_blocks",
+           "init_decoder", "decoder_apply"]

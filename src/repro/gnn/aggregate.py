@@ -1,0 +1,47 @@
+"""Neighbor aggregation over padded fixed-fanout blocks.
+
+The (num_dst, fanout, dim) masked reduction is the message-passing
+hot-spot; ``repro.kernels.seg_aggr`` provides the Pallas TPU kernel and
+these jnp forms are its oracle (and the CPU execution path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_USE_PALLAS = False  # flipped by repro.kernels.seg_aggr.enable() on TPU
+
+
+def set_use_pallas(flag: bool):
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def masked_mean(nbr_h, mask):
+    """nbr_h: (n, f, d), mask: (n, f) -> (n, d)."""
+    if _USE_PALLAS:
+        from repro.kernels.seg_aggr.ops import seg_aggr
+        return seg_aggr(nbr_h, mask, reduce="mean")
+    m = mask[..., None].astype(nbr_h.dtype)
+    s = (nbr_h * m).sum(axis=1)
+    return s / jnp.maximum(m.sum(axis=1), 1.0)
+
+
+def masked_sum(nbr_h, mask):
+    if _USE_PALLAS:
+        from repro.kernels.seg_aggr.ops import seg_aggr
+        return seg_aggr(nbr_h, mask, reduce="sum")
+    return (nbr_h * mask[..., None].astype(nbr_h.dtype)).sum(axis=1)
+
+
+def masked_max(nbr_h, mask):
+    neg = jnp.full_like(nbr_h, -1e30)
+    s = jnp.where(mask[..., None], nbr_h, neg).max(axis=1)
+    return jnp.where(mask.any(axis=1, keepdims=True), s, 0.0)
+
+
+def masked_softmax(scores, mask):
+    """scores: (n, f) attention logits -> masked softmax over fanout."""
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=1)
+    return jnp.where(mask.any(axis=1, keepdims=True), att, 0.0)

@@ -1,0 +1,74 @@
+"""Task decoders (paper supports 7 graph tasks; §3.1.3).
+
+  node_classification / node_regression
+  edge_classification / edge_regression
+  link_prediction (dot or DistMult)
+  graph_classification / graph_regression (mean-pool over a graph's nodes)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lp import distmult_score, dot_score
+
+
+def init_decoder(rng, task: str, hidden: int, out_dim: int = 1,
+                 num_etypes: int = 0):
+    k1, k2 = jax.random.split(rng)
+    if task in ("node_classification", "node_regression",
+                "graph_classification", "graph_regression"):
+        return {"w1": jax.random.normal(k1, (hidden, hidden), jnp.float32)
+                * hidden ** -0.5,
+                "b1": jnp.zeros((hidden,), jnp.float32),
+                "w2": jax.random.normal(k2, (hidden, out_dim), jnp.float32)
+                * hidden ** -0.5,
+                "b2": jnp.zeros((out_dim,), jnp.float32)}
+    if task in ("edge_classification", "edge_regression"):
+        return {"w1": jax.random.normal(k1, (2 * hidden, hidden), jnp.float32)
+                * (2 * hidden) ** -0.5,
+                "b1": jnp.zeros((hidden,), jnp.float32),
+                "w2": jax.random.normal(k2, (hidden, out_dim), jnp.float32)
+                * hidden ** -0.5,
+                "b2": jnp.zeros((out_dim,), jnp.float32)}
+    if task == "link_prediction":
+        # DistMult relation embeddings (one per training edge type); a
+        # single-etype graph with rel_emb=None degrades to dot product.
+        if num_etypes:
+            return {"rel": jax.random.normal(k1, (num_etypes, hidden),
+                                             jnp.float32) * 0.1 + 1.0}
+        return {}
+    raise ValueError(task)
+
+
+def _mlp(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def decoder_apply(params, task: str, emb: Dict[str, jax.Array],
+                  target_ntype: Optional[str] = None,
+                  src_dst: Optional[tuple] = None,
+                  graph_segments: Optional[jax.Array] = None,
+                  num_graphs: int = 0):
+    if task in ("node_classification", "node_regression"):
+        return _mlp(params, emb[target_ntype])
+    if task in ("edge_classification", "edge_regression"):
+        src, dst = src_dst
+        return _mlp(params, jnp.concatenate([src, dst], axis=-1))
+    if task in ("graph_classification", "graph_regression"):
+        h = emb[target_ntype]
+        pooled = jax.ops.segment_sum(h, graph_segments, num_segments=num_graphs)
+        cnt = jax.ops.segment_sum(jnp.ones((h.shape[0],), h.dtype),
+                                  graph_segments, num_segments=num_graphs)
+        return _mlp(params, pooled / jnp.maximum(cnt, 1.0)[:, None])
+    raise ValueError(task)
+
+
+def lp_score(params, src_emb, dst_emb, etype_idx: Optional[int] = None):
+    """Score positives/negatives; DistMult when relation embeddings exist."""
+    if params and "rel" in params and etype_idx is not None:
+        return distmult_score(src_emb, dst_emb, params["rel"][etype_idx])
+    return dot_score(src_emb, dst_emb)

@@ -1,0 +1,87 @@
+"""Static block schema: the shapes/offsets side of an MFG mini-batch.
+
+A ``BlockSchema`` is fully determined by (seed counts, fanouts, graph
+etypes), so jitted GNN applies close over it while the data arrays
+(masks, features, Δt) flow through as traced pytrees.  One jit cache
+entry per schema.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import MFGBlock, MiniBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeMeta:
+    ekey: str            # "src___rel___dst"
+    src_t: str
+    rel: str
+    dst_t: str
+    num_dst: int
+    fanout: int
+    src_offset: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSchema:
+    edges: Tuple[EdgeMeta, ...]
+    dst_counts: Tuple[Tuple[str, int], ...]
+    src_counts: Tuple[Tuple[str, int], ...]
+    self_offsets: Tuple[Tuple[str, int], ...]
+
+    def dst_count(self, nt: str) -> int:
+        return dict(self.dst_counts)[nt]
+
+    def self_offset(self, nt: str) -> Optional[int]:
+        return dict(self.self_offsets).get(nt)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSchema:
+    layers: Tuple[LayerSchema, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+
+def ekey(etype) -> str:
+    return "___".join(etype)
+
+
+def schema_of(mb: MiniBatch) -> BlockSchema:
+    layers = []
+    for blk in mb.blocks:
+        edges = tuple(
+            EdgeMeta(ekey=ekey(eb.etype), src_t=eb.etype[0], rel=eb.etype[1],
+                     dst_t=eb.etype[2], num_dst=eb.num_dst, fanout=eb.fanout,
+                     src_offset=eb.src_offset)
+            for eb in blk.edge_blocks)
+        layers.append(LayerSchema(
+            edges=edges,
+            dst_counts=tuple(sorted(blk.dst_counts.items())),
+            src_counts=tuple(sorted(blk.src_counts.items())),
+            self_offsets=tuple(sorted(blk.self_offsets.items())),
+        ))
+    return BlockSchema(layers=tuple(layers))
+
+
+def arrays_of(mb: MiniBatch, feats: Dict[str, np.ndarray]) -> Dict:
+    """The traced side: masks / Δt per layer + input features per ntype."""
+    masks = []
+    dts = []
+    for blk in mb.blocks:
+        masks.append({ekey(eb.etype): jnp.asarray(eb.mask)
+                      for eb in blk.edge_blocks})
+        dts.append({ekey(eb.etype): jnp.asarray(eb.delta_t)
+                    for eb in blk.edge_blocks if eb.delta_t is not None})
+    return {
+        "feats": {nt: jnp.asarray(f) for nt, f in feats.items()},
+        "masks": masks,
+        "delta_t": dts,
+    }

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  seg_aggr        — masked neighbor aggregation over padded fanout blocks
+                    (GNN message passing; GraphStorm's per-layer hot loop)
+  flash_attention — blocked online-softmax causal attention (LM encoders)
+  ssd_scan        — Mamba2 SSD intra-chunk kernel
+
+Each kernel ships with ops.py (jit'd wrapper; ``interpret=True`` on CPU)
+and ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""

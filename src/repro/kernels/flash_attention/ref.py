@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (B, H, S, Dh) -> (B, H, S, Dh), fp32 softmax."""
+    B, H, S, Dh = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (Dh ** -0.5)
+    if causal:
+        i = jnp.arange(S)
+        mask = i[:, None] >= i[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

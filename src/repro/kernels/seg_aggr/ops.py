@@ -1,0 +1,17 @@
+"""jit'd public wrapper for seg_aggr.
+
+On CPU the kernel body executes in interpret mode (correctness path);
+on TPU set interpret=False for the compiled kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.seg_aggr.kernel import seg_aggr_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("reduce", "interpret"))
+def seg_aggr(nbr, mask, reduce: str = "mean", interpret: bool = True):
+    return seg_aggr_pallas(nbr, mask, reduce=reduce, interpret=interpret)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd_forward
+from repro.kernels.ssd_scan.ref import ssd_ref_sequential
+
+__all__ = ["ssd_forward", "ssd_ref_sequential"]

@@ -1,0 +1,38 @@
+"""Oracle: naive sequential SSM recurrence (the definition SSD must match).
+
+    state_t = exp(dt_t * A) * state_{t-1} + dt_t * x_t ⊗ B_t
+    y_t     = C_t · state_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref_sequential(x, dt, A, Bm, Cm, D=None):
+    """x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,G,N) -> y, final_state."""
+    Bz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    gid = jnp.arange(H) // rep
+    Bh = Bm[:, :, gid]  # (B,S,H,N)
+    Ch = Cm[:, :, gid]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * A)  # (B,H)
+        state = state * decay[..., None, None] \
+            + (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bh.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Ch.transpose(1, 0, 2, 3).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final

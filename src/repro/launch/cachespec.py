@@ -1,0 +1,97 @@
+"""Decode-cache construction (concrete zeros or abstract ShapeDtypeStructs).
+
+The cache is an *input* of serve_step, so the dry-run needs its exact
+pytree with shardings but without allocating 500k-token KV buffers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.common.sharding import best_spec
+from repro.models.config import ModelConfig
+from repro.models.params import resolve_axes
+
+
+def _mk(abstract, mesh, rules, shape, wish, dtype):
+    if abstract:
+        spec = best_spec(mesh, shape, [rules[w] for w in wish])
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jnp.zeros(shape, dtype)
+
+
+def build_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+                enc_len: int = 0, dtype=None, abstract: bool = False,
+                mesh: Mesh = None):
+    B, S = batch_size, cache_len
+    dt = dtype or cfg.pdtype
+    rules = resolve_axes(mesh) if mesh is not None else {"tp": None,
+                                                         "fsdp": None,
+                                                         None: None}
+    mk = lambda shape, wish, d=dt: _mk(abstract, mesh, rules, shape, wish, d)
+
+    def kv_cache(n_layers, length):
+        W = min(length, cfg.sliding_window) if cfg.sliding_window else length
+        KV, Dh = cfg.num_kv_heads, cfg.head_dim
+        sh = (n_layers, B, W, KV, Dh)
+        wish = (None, "fsdp", None, "tp", None)
+        if cfg.kv_cache_dtype == "int8":
+            ssh = (n_layers, B, W, KV)
+            swish = (None, "fsdp", None, "tp")
+            return {"k": mk(sh, wish, jnp.int8),
+                    "v": mk(sh, wish, jnp.int8),
+                    "k_scale": mk(ssh, swish, jnp.float32),
+                    "v_scale": mk(ssh, swish, jnp.float32)}
+        return {"k": mk(sh, wish), "v": mk(sh, wish)}
+
+    def mla_cache(n_layers, length):
+        r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+        return {
+            "ckv": mk((n_layers, B, length, r), (None, "fsdp", None, "tp")),
+            "kr": mk((n_layers, B, length, dr), (None, "fsdp", None, None)),
+        }
+
+    def ssm_cache(n_layers):
+        H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+        return {
+            "conv": mk((n_layers, B, cfg.ssm_conv - 1, cfg.ssm_conv_dim),
+                       (None, "fsdp", None, "tp")),
+            "ssm": mk((n_layers, B, H, P, N), (None, "fsdp", "tp", None, None),
+                      jnp.float32),
+        }
+
+    if abstract:
+        ln = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, best_spec(mesh, (), ())))
+    else:
+        ln = jnp.zeros((), jnp.int32)
+    cache = {"len": ln}
+
+    if cfg.enc_dec:
+        Se = enc_len or cache_len
+        KV, Dh = cfg.num_kv_heads, cfg.head_dim
+        cache["layers"] = kv_cache(cfg.num_layers, S)
+        cache["cross"] = {
+            "k": mk((cfg.num_layers, B, Se, KV, Dh), (None, "fsdp", None, "tp", None)),
+            "v": mk((cfg.num_layers, B, Se, KV, Dh), (None, "fsdp", None, "tp", None)),
+        }
+    elif cfg.arch_type == "hybrid":
+        cache["mamba"] = ssm_cache(cfg.num_layers)
+        n_inv = cfg.num_layers // cfg.attn_every if cfg.attn_every else 0
+        if n_inv:
+            cache["attn"] = kv_cache(n_inv, S)
+    elif cfg.arch_type == "ssm":
+        cache["layers"] = ssm_cache(cfg.num_layers)
+    elif cfg.attn_kind == "mla":
+        n_scan = cfg.num_layers - cfg.num_dense_layers
+        cache["layers"] = mla_cache(n_scan, S)
+        if cfg.num_dense_layers:
+            cache["dense"] = mla_cache(cfg.num_dense_layers, S)
+    else:
+        n_scan = cfg.num_layers - cfg.num_dense_layers
+        cache["layers"] = kv_cache(n_scan, S)
+        if cfg.num_dense_layers:
+            cache["dense"] = kv_cache(cfg.num_dense_layers, S)
+    return cache

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract memory / cost / collective stats.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init), which is why they sit ahead of the module docstring's
+imports.  Do not set this flag globally — smoke tests and benches must see
+one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+      --shape train_4k [--multi-pod] [--all] [--out results.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import analyse, model_flops_estimate
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.launch.specs import adapt_config, input_specs
+from repro.launch.steps import make_decode_fn, make_prefill_step, make_train_step
+from repro.models.config import INPUT_SHAPES
+from repro.models.params import abstract_params, param_count, active_param_count
+from repro.optim import adafactor
+
+
+def abstract_opt_state(optimizer, params_abs):
+    """Optimizer state as ShapeDtypeStructs (same sharding as params)."""
+    return jax.eval_shape(optimizer.init, params_abs)
+
+
+def _with_scan_depth(cfg, L: int):
+    """Reduced-depth variant for the unrolled cost-model compiles.
+
+    For hybrid archs L counts *periods* of (attn_every mamba layers +
+    one shared-attention firing)."""
+    kw = dict(scan_layers=False)
+    if cfg.arch_type == "hybrid":
+        kw.update(num_layers=L * cfg.attn_every)
+    elif cfg.enc_dec:
+        kw.update(num_layers=L, num_encoder_layers=L)
+    elif cfg.num_dense_layers:
+        kw.update(num_layers=cfg.num_dense_layers + L)
+    else:
+        kw.update(num_layers=L)
+    if cfg.attn_impl == "chunked":
+        # chunked attention hides score flops inside a kv-chunk scan;
+        # einsum is mathematically identical and fully counted.
+        kw.update(attn_impl="einsum")
+    return cfg.replace(**kw)
+
+
+def _lower_step(cfg, shape, mesh, batch_abs):
+    params_abs = abstract_params(cfg, mesh)
+    with mesh:
+        if shape.kind == "train":
+            opt = adafactor()
+            opt_abs = abstract_opt_state(opt, params_abs)
+            step_abs = jax.ShapeDtypeStruct((), jnp.int32,
+                                            sharding=NamedSharding(mesh, P()))
+            lowered = jax.jit(make_train_step(cfg, opt),
+                              donate_argnums=(0, 1)).lower(
+                params_abs, opt_abs, step_abs, batch_abs)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(make_prefill_step(cfg)).lower(params_abs, batch_abs)
+        else:
+            lowered = jax.jit(make_decode_fn(cfg),
+                              donate_argnums=(1,)).lower(params_abs, batch_abs)
+        return lowered, lowered.compile()
+
+
+def _cost_triple(compiled):
+    from repro.launch.hlo_analysis import collective_bytes
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    coll.pop("_counts", None)
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            {k: float(v) for k, v in coll.items()})
+
+
+def extrapolated_cost(cfg, shape, mesh):
+    """flops/bytes/collective-bytes extrapolated to full depth from
+    unrolled 1- and 2-layer compiles: f(L) = f(1) + (L-1) * (f(2) - f(1)).
+
+    For hybrid archs the extrapolation unit is one (mamba*attn_every +
+    shared-attn) period; fractional period counts are linearly scaled.
+    """
+    if cfg.arch_type == "hybrid":
+        n_scan = cfg.num_layers / cfg.attn_every  # periods (may be frac.)
+    else:
+        n_scan = (cfg.num_layers - cfg.num_dense_layers if not cfg.enc_dec
+                  else cfg.num_layers)
+    vals = {}
+    for L in (1, 2):
+        c = _with_scan_depth(cfg, L)
+        batch_abs = input_specs(c, INPUT_SHAPES[shape.name], mesh)
+        _, compiled = _lower_step(c, shape, mesh, batch_abs)
+        vals[L] = _cost_triple(compiled)
+    f1, b1, c1 = vals[1]
+    f2, b2, c2 = vals[2]
+    flops = f1 + (n_scan - 1) * (f2 - f1)
+    byts = b1 + (n_scan - 1) * (b2 - b1)
+    coll = {k: c1[k] + (n_scan - 1) * (c2[k] - c1[k]) for k in c1}
+    return flops, byts, coll
+
+
+def parse_variant(spec: str) -> dict:
+    """'vocab_parallel_loss=True,ce_chunk=512' -> typed override dict."""
+    out = {}
+    if not spec:
+        return out
+    for kv in spec.split(","):
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, opt_name: str = "adafactor",
+               with_cost_model: bool = True, variant: dict = None):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape)
+    if multi_pod:
+        cfg = cfg.replace(dp_axes=("pod", "data"))
+    if variant:
+        cfg = cfg.replace(**variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    batch_abs = input_specs(cfg, shape, mesh)
+    lowered, compiled = _lower_step(cfg, shape, mesh, batch_abs)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = analyse(arch, shape_name, mesh_name, chips, compiled,
+                   model_flops=model_flops_estimate(cfg, shape))
+    # scan bodies are counted once by XLA cost analysis; replace the raw
+    # totals with the depth-extrapolated cost model where applicable.
+    roof_raw = (roof.hlo_flops, roof.hlo_bytes, roof.coll_bytes_total)
+    if with_cost_model:
+        ext = extrapolated_cost(cfg, shape, mesh)
+        if ext is not None:
+            flops, byts, coll = ext
+            # per-device module numbers -> global (see hlo_analysis.analyse)
+            roof.hlo_flops = flops * chips
+            roof.hlo_bytes = byts * chips
+            coll = {k: v * chips for k, v in coll.items()}
+            roof.coll_by_op = {**coll, "counts": roof.coll_by_op.get("counts")}
+            roof.coll_bytes_total = float(sum(
+                v for k, v in coll.items() if not k.startswith("_")))
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "status": "ok",
+        "variant": variant or {},
+        "t_compile_s": round(t_compile, 1),
+        "raw_flops": roof_raw[0], "raw_bytes": roof_raw[1],
+        "raw_coll_bytes": roof_raw[2],
+        "params": param_count(cfg), "active_params": active_param_count(cfg),
+        **{k: (round(v, 6) if isinstance(v, float) else v)
+           for k, v in roof.row().items() if k not in ("arch", "shape", "mesh")},
+        "coll_by_op": {k: v for k, v in roof.coll_by_op.items()},
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result["mem_" + attr] = int(v)
+        # per-device peak ~= args + temp (arguments are already per-device)
+        arg = result.get("mem_argument_size_in_bytes", 0)
+        tmp = result.get("mem_temp_size_in_bytes", 0)
+        out = result.get("mem_output_size_in_bytes", 0)
+        ali = result.get("mem_alias_size_in_bytes", 0)
+        result["mem_per_device_gb"] = round((arg + tmp + out - ali) / 2 ** 30, 3)
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on the chosen mesh")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--opt", default="adafactor")
+    ap.add_argument("--variant", default="",
+                    help="cfg overrides, e.g. ce_chunk=512,seq_parallel=True")
+    ap.add_argument("--no-cost-model", action="store_true",
+                    help="skip the unrolled cost-model compiles (fast probes)")
+    args = ap.parse_args()
+    variant = parse_variant(args.variant)
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    if r.get("status") == "ok":
+                        done.add((r["arch"], r["shape"]))
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                if (a, s) not in done:
+                    combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in combos:
+        try:
+            res = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                             opt_name=args.opt, variant=variant,
+                             with_cost_model=not args.no_cost_model)
+        except Exception as e:  # a failure here is a bug in our sharding
+            failures += 1
+            res = {"arch": arch, "shape": shape, "status": "FAIL",
+                   "multi_pod": args.multi_pod, "error": repr(e)[:500]}
+            print(json.dumps(res))
+            traceback.print_exc()
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(res, default=str) + "\n")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis`` supplies HLO FLOPs and bytes-accessed; collective bytes
+are NOT in cost_analysis, so we parse the post-SPMD HLO text and sum the
+result-shape bytes of every collective op, bucketed by op kind.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'bf16[8,128]{1,0}' or a tuple '(bf16[...], f32[...])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9\-]+)\(", re.M)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind over the HLO module."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # normalize fused variants like all-gather-start
+        for k in COLLECTIVE_OPS:
+            if op == k or op == k + "-start" or op == k + "-done":
+                if op == k + "-done":
+                    break  # avoid double counting start/done pairs
+                out[k] += _shape_bytes(shape_str)
+                counts[k] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes_total: float
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_total / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.coll_bytes_total / 1e9,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def analyse(arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, lowered_text: str = None, model_flops: float = 0.0
+            ) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    # cost_analysis describes the per-device SPMD module; scale to global
+    flops = float(ca.get("flops", 0.0)) * chips
+    byts = float(ca.get("bytes accessed", 0.0)) * chips
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    counts = coll.pop("_counts")
+    coll = {k: v * chips for k, v in coll.items()}
+    total = float(sum(coll.values()))
+    r = Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                 hlo_flops=flops, hlo_bytes=byts, coll_bytes_total=total,
+                 coll_by_op={**coll, "counts": counts},
+                 model_flops=model_flops)
+    return r
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference (N = active
+    params, D = tokens processed)."""
+    from repro.models.params import active_param_count
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,31 @@
+"""Production mesh construction (TPU v5e pods; host-device stand-ins on CPU).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-process mesh over whatever devices exist (smoke/e2e runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry the batch (data-parallel) dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# Hardware constants for the roofline analysis (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link

@@ -1,0 +1,114 @@
+"""Abstract input construction for every (architecture × input shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for the batch of the requested step kind,
+mirroring the shannon/kernels pattern.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.sharding import best_spec
+from repro.launch.cachespec import build_cache
+from repro.launch.mesh import dp_axes
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+LONG_CONTEXT_WINDOW = 8192  # sliding-window size used for long_500k decode
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-dependent config adjustments.
+
+    long_500k requires sub-quadratic attention: SSM archs are O(1) already;
+    attention archs switch to the sliding-window decode variant.
+    """
+    if shape.name == "long_500k" and cfg.arch_type != "ssm" \
+            and cfg.attn_kind != "none":
+        cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    if shape.kind in ("train", "prefill"):
+        # online-softmax chunked attention keeps scores at O(S * chunk)
+        cfg = cfg.replace(attn_impl="chunked")
+    return cfg
+
+
+def _sds(mesh, shape, dtype, wish):
+    spec = best_spec(mesh, shape, wish)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def split_lengths(cfg: ModelConfig, seq_len: int):
+    """How a sample's seq budget divides between frontend tokens and text."""
+    if cfg.enc_dec:
+        enc = min(cfg.frontend_tokens or seq_len // 2, seq_len // 2)
+        return enc, seq_len - enc
+    if cfg.frontend:
+        fe = min(cfg.frontend_tokens, seq_len // 2)
+        return fe, seq_len - fe
+    return 0, seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Dict:
+    """Returns {name: ShapeDtypeStruct} matching the step fn's batch arg."""
+    dp = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    fe, st = split_lengths(cfg, S)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            batch = {
+                "enc_frames": _sds(mesh, (B, fe, cfg.d_model), cfg.adtype,
+                                   [dp, None, None]),
+                "dec_tokens": _sds(mesh, (B, st), jnp.int32, [dp, None]),
+            }
+            if shape.kind == "train":
+                batch["labels"] = _sds(mesh, (B, st), jnp.int32, [dp, None])
+            return batch
+        batch = {"tokens": _sds(mesh, (B, st), jnp.int32, [dp, None])}
+        if cfg.frontend:
+            batch["embeds"] = _sds(mesh, (B, fe, cfg.d_model), cfg.adtype,
+                                   [dp, None, None])
+        if shape.kind == "train":
+            batch["labels"] = _sds(mesh, (B, S), jnp.int32, [dp, None])
+        return batch
+
+    # decode: one token against a cache of logical length seq_len
+    cache = build_cache(cfg, B, S, enc_len=fe if cfg.enc_dec else 0,
+                        abstract=True, mesh=mesh)
+    return {
+        "token": _sds(mesh, (B, 1), jnp.int32, [dp, None]),
+        "cache": cache,
+    }
+
+
+def concrete_inputs(cfg: ModelConfig, shape: InputShape, rng=None):
+    """Small-scale concrete version of input_specs for smoke tests."""
+    import numpy as np
+    rng = rng or np.random.default_rng(0)
+    B, S = shape.global_batch, shape.seq_len
+    fe, st = split_lengths(cfg, S)
+    toks = lambda b, s: jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(b, s)), jnp.int32)
+    if shape.kind in ("train", "prefill"):
+        if cfg.enc_dec:
+            batch = {
+                "enc_frames": jnp.asarray(
+                    rng.normal(size=(B, fe, cfg.d_model)), cfg.adtype),
+                "dec_tokens": toks(B, st),
+            }
+            if shape.kind == "train":
+                batch["labels"] = toks(B, st)
+            return batch
+        batch = {"tokens": toks(B, st)}
+        if cfg.frontend:
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, fe, cfg.d_model)), cfg.adtype)
+        if shape.kind == "train":
+            batch["labels"] = toks(B, S)
+        return batch
+    cache = build_cache(cfg, B, S, enc_len=fe if cfg.enc_dec else 0,
+                        abstract=False)
+    return {"token": toks(B, 1), "cache": cache}

@@ -1,0 +1,147 @@
+"""Step functions: train_step / prefill_step / decode (serve) step.
+
+These are the functions the dry-run lowers and the smoke tests execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step as _model_decode
+from repro.models.model import forward_train
+from repro.optim.adamw import Optimizer
+from repro.optim.schedules import cosine_schedule
+
+MTP_LOSS_WEIGHT = 0.3
+AUX_LOSS_WEIGHT = 0.001
+
+
+def softmax_xent(logits, labels):
+    """Mean CE over positions with label >= 0 (fp32 reduction)."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = labels >= 0
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def chunked_xent(cfg: ModelConfig, params, h, labels):
+    """CE over sequence chunks: never materializes the (B,S,V) logits.
+
+    Memory: O(B * ce_chunk * V) transient per chunk instead of O(B*S*V)
+    resident (plus its fp32/backward copies) — the §Perf memory lever for
+    large-vocab train shapes.
+    """
+    from repro.models.model import lm_logits
+    B, S, D = h.shape
+    c = cfg.ce_chunk
+    nc = S // c
+    hr = h.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    lr = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        nll_sum, n = carry
+        hc, lc = xs
+        logits = lm_logits(cfg, params, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = lc >= 0
+        return (nll_sum + ((lse - ll) * valid).sum(),
+                n + valid.sum()), None
+
+    (nll, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hr, lr))
+    return nll / jnp.maximum(n, 1)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        if cfg.ce_chunk:
+            from repro.models.blocks import dense_block
+            from repro.models.model import embed_tokens, forward_hidden
+            from repro.models.norms import rms_norm
+            h, x_raw, positions, aux = forward_hidden(cfg, params, batch)
+            labels = batch["labels"]
+            loss = chunked_xent(cfg, params, h, labels)
+            metrics = {"lm_loss": loss}
+            if cfg.num_experts:
+                loss = loss + AUX_LOSS_WEIGHT * aux["aux_loss"]
+                metrics["moe_aux"] = aux["aux_loss"]
+            if cfg.mtp:
+                # chunked MTP loss: same head-chunking for the t+2 branch
+                tokens = batch["tokens"]
+                nxt = embed_tokens(cfg, params, jnp.roll(tokens, -1, axis=1))
+                hm = jnp.concatenate(
+                    [rms_norm(x_raw, params["mtp"]["norm"]["scale"],
+                              cfg.norm_eps), nxt], axis=-1)
+                hm = jnp.einsum("bsd,de->bse", hm, params["mtp"]["proj"])
+                hm, _, _ = dense_block(cfg, params["mtp"]["block"], hm,
+                                       positions)
+                hm = rms_norm(hm, params["final_norm"]["scale"], cfg.norm_eps)
+                mtp_labels = jnp.roll(labels, -1, axis=1).at[:, -1].set(-1)
+                mtp_loss = chunked_xent(cfg, params, hm, mtp_labels)
+                loss = loss + MTP_LOSS_WEIGHT * mtp_loss
+                metrics["mtp_loss"] = mtp_loss
+            metrics["loss"] = loss
+            return loss, metrics
+        logits, aux = forward_train(cfg, params, batch)
+        labels = batch["labels"]
+        loss = softmax_xent(logits, labels)
+        metrics = {"lm_loss": loss}
+        if cfg.num_experts:
+            loss = loss + AUX_LOSS_WEIGHT * aux["aux_loss"]
+            metrics["moe_aux"] = aux["aux_loss"]
+        if cfg.mtp and "mtp_logits" in aux:
+            mtp_labels = jnp.roll(labels, -1, axis=1)
+            mtp_labels = mtp_labels.at[:, -1].set(-1)
+            mtp_loss = softmax_xent(aux["mtp_logits"], mtp_labels)
+            loss = loss + MTP_LOSS_WEIGHT * mtp_loss
+            metrics["mtp_loss"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000):
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, step, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = cosine_schedule(step, warmup, total_steps, peak_lr)
+        params, opt_state = optimizer.update(grads, opt_state, params, step, lr)
+        return params, opt_state, step + 1, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        from repro.models.model import forward_hidden, lm_logits
+        h, _, _, _ = forward_hidden(cfg, params, batch)
+        # head on the final position only: computing logits for all S
+        # positions would waste 2*B*S*D*V flops and materialize a
+        # (B,S,V) tensor nobody reads (§Perf: prefill head slicing)
+        logits = lm_logits(cfg, params, h[:, -1:, :])
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def serve_step(params, batch):
+        logits, new_cache = _model_decode(cfg, params, batch["token"],
+                                          batch["cache"])
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+    return serve_step

@@ -1,0 +1,11 @@
+from repro.models.config import ModelConfig, InputShape, INPUT_SHAPES
+from repro.models.model import forward_train, prefill, decode_step, init_cache
+from repro.models.params import (abstract_params, init_params, param_count,
+                                 active_param_count, param_pspecs)
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES",
+    "forward_train", "prefill", "decode_step", "init_cache",
+    "abstract_params", "init_params", "param_count", "active_param_count",
+    "param_pspecs",
+]

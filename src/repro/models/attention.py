@@ -1,0 +1,253 @@
+"""Attention: GQA (full / chunked online-softmax / sliding-window decode)
+and MLA (DeepSeek-style latent attention with absorbed decode).
+
+Layouts: activations are (B, S, ...); heads are kept as a separate axis
+(B, S, H, Dh) between the projection and the output matmul so the sharding
+layer can try to place H (or the fused H*Dh dim) on the model axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.norms import rms_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core score/combine
+# ---------------------------------------------------------------------------
+def _causal_mask(q_pos, k_pos, window: Optional[int]):
+    """q_pos: (Sq,), k_pos: (Sk,) -> bool (Sq, Sk), True = attend."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def attend_einsum(q, k, v, q_pos, k_pos, *, window=None, kv_len=None):
+    """q: (B,Sq,H,Dh) k: (B,Sk,KV,Dh) v: (B,Sk,KV,Dv). fp32 softmax."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Dv = v.shape[-1]
+    q = q.reshape(B, Sq, KV, G, Dh)
+    scale = Dh ** -0.5
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+    s *= scale
+    mask = _causal_mask(q_pos, k_pos, window)  # (Sq, Sk)
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, Dv).astype(v.dtype)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, *, chunk=1024, window=None, kv_len=None):
+    """Online-softmax attention scanning over KV chunks.
+
+    Keeps peak memory at O(Sq * chunk) scores instead of O(Sq * Sk) —
+    the pure-JAX analogue of the flash-attention Pallas kernel (which is
+    validated separately in repro/kernels/flash_attention).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    Dv = v.shape[-1]
+    if Sk % chunk != 0:
+        # fall back: the dry-run shapes are all multiples of 1024
+        return attend_einsum(q, k, v, q_pos, k_pos, window=window, kv_len=kv_len)
+    nchunk = Sk // chunk
+    qr = q.reshape(B, Sq, KV, G, Dh) * (Dh ** -0.5)
+    kc = k.reshape(B, nchunk, chunk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, KV, Dv).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(nchunk, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kj, vj, kpj = inp
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kj,
+                       preferred_element_type=jnp.float32)
+        mask = _causal_mask(q_pos, kpj, window)
+        if kv_len is not None:
+            mask = mask & (kpj[None, :] < kv_len)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, kpc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(v.dtype)
+
+
+def attend(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, window=None, kv_len=None):
+    if cfg.attn_impl == "chunked" and q.shape[1] > 1:
+        return attend_chunked(q, k, v, q_pos, k_pos, chunk=cfg.attn_chunk,
+                              window=window, kv_len=kv_len)
+    return attend_einsum(q, k, v, q_pos, k_pos, window=window, kv_len=kv_len)
+
+
+def _quant_i8(x):
+    """Symmetric int8 quantization over the head dim: (B,S,KV,Dh) ->
+    (int8 values, (B,S,KV) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def gqa_project_qkv(cfg: ModelConfig, p, x, positions):
+    B, S, D = x.shape
+    H, KV, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, KV, Dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, KV, Dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, Dh)
+        k = k + p["bk"].reshape(KV, Dh)
+        v = v + p["bv"].reshape(KV, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, rotary_frac=cfg.rotary_frac, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, rotary_frac=cfg.rotary_frac, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(cfg: ModelConfig, p, x, positions, *, cache=None,
+                  cross_kv=None, causal=True):
+    """Full-sequence (train/prefill) or single-token (decode) GQA attention.
+
+    cache: None or dict {k, v, len} — decode mode writes the new token at
+    index ``len`` (ring-buffer modulo window if sliding_window is set).
+    cross_kv: (k, v) tensors for encoder-decoder cross attention (no rope,
+    no cache update needed since they are static per request).
+    """
+    B, S, D = x.shape
+    if cross_kv is not None:
+        H, Dh = cfg.num_heads, cfg.head_dim
+        q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, H, Dh)
+        k, v = cross_kv
+        kp = jnp.arange(k.shape[1])
+        o = attend_einsum(q, k, v, jnp.full((S,), k.shape[1], jnp.int32), kp)
+        return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"]), cache
+
+    q, k, v = gqa_project_qkv(cfg, p, x, positions)
+
+    if cache is None:
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        if causal:
+            o = attend(cfg, q, k, v, pos1d, pos1d, window=cfg.sliding_window)
+        else:
+            # bidirectional (encoder) attention: every query sees every key
+            full = jnp.full((S,), S, jnp.int32)
+            o = attend(cfg, q, k, v, full, jnp.arange(S, dtype=jnp.int32))
+    else:
+        W = cache["k"].shape[1]
+        q_pos = jnp.full((S,), cache["len"], jnp.int32)
+        quant = cfg.kv_cache_dtype == "int8"
+        if quant:
+            # int8 KV cache: per-(token, head) absmax scales (§Perf —
+            # halves decode HBM residency vs bf16)
+            k_store, k_scale = _quant_i8(k)
+            v_store, v_scale = _quant_i8(v)
+        else:
+            k_store, v_store = k, v
+        if cfg.sliding_window:
+            # ring buffer of size W (= window): write slot = len % W
+            idx = cache["len"] % W
+            slot = jnp.arange(W)
+            # logical position held by each slot after the write
+            kp = jnp.where(slot <= idx, cache["len"] - (idx - slot),
+                           cache["len"] - (idx + W - slot))
+            kp = jnp.where(kp >= 0, kp, jnp.int32(2 ** 30))  # empty slots
+        else:
+            idx = cache["len"]
+            kp = jnp.arange(W)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k_store, (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v_store, (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": cache["len"] + 1}
+        if quant:
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_scale,
+                                               (0, idx, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_scale,
+                                               (0, idx, 0))
+            new_cache.update(k_scale=cks, v_scale=cvs)
+            ck = (ck.astype(jnp.float32) * cks[..., None]).astype(q.dtype)
+            cv = (cv.astype(jnp.float32) * cvs[..., None]).astype(q.dtype)
+        o = attend_einsum(q, ck, cv, q_pos, kp, kv_len=cache["len"] + 1)
+        cache = new_cache
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3)  [arXiv:2412.19437]
+# ---------------------------------------------------------------------------
+def mla_attention(cfg: ModelConfig, p, x, positions, *, cache=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", cq, p["wq_b"]).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = apply_rope(qr, positions, theta=cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])  # (B,S,r+dr)
+    ckv = rms_norm(ckv_full[..., :r], p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope(ckv_full[..., None, r:], positions, theta=cfg.rope_theta)[:, :, 0]
+
+    wkv_b = p["wkv_b"].reshape(r, H, dn + dv)
+    wk, wv = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if cache is None:
+        # expanded path for train / prefill
+        kn = jnp.einsum("bsr,rhd->bshd", ckv, wk)
+        v = jnp.einsum("bsr,rhd->bshd", ckv, wv)
+        k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None], (B, S, H, dr))], -1)
+        qf = jnp.concatenate([qn, qr], -1)
+        pos1d = positions if positions.ndim == 1 else positions[0]
+        o = attend(cfg, qf, k, v, pos1d, pos1d)
+        new_cache = None
+    else:
+        # absorbed decode: cache holds the latent ckv + rope key only.
+        Sc = cache["ckv"].shape[1]
+        cc = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, cache["len"], 0))
+        ck = jax.lax.dynamic_update_slice(cache["kr"], kr, (0, cache["len"], 0))
+        # q absorbed into latent space: (B,1,H,dn) x (r,H,dn) -> (B,1,H,r)
+        q_lat = jnp.einsum("bshd,rhd->bshr", qn, wk)
+        s = jnp.einsum("bshr,btr->bhst", q_lat, cc, preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshd,btd->bhst", qr, ck, preferred_element_type=jnp.float32)
+        s *= (dn + dr) ** -0.5
+        kv_len = cache["len"] + 1
+        mask = jnp.arange(Sc)[None, None, None, :] < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", pr.astype(cc.dtype), cc)
+        o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)
+        new_cache = {"ckv": cc, "kr": ck, "len": cache["len"] + 1}
+
+    o = o.reshape(B, S, H * dv)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), new_cache

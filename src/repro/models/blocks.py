@@ -1,0 +1,73 @@
+"""Transformer / SSM blocks assembled from the mixer primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import gqa_attention, mla_attention
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import mamba2_mixer
+from repro.models.moe import moe_ffn
+from repro.models.norms import rms_norm
+
+
+def ffn(cfg: ModelConfig, p, x):
+    if cfg.ffn_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def _attn(cfg: ModelConfig, p, x, positions, cache, causal=True, cross_kv=None):
+    if cfg.attn_kind == "mla":
+        return mla_attention(cfg, p, x, positions, cache=cache)
+    return gqa_attention(cfg, p, x, positions, cache=cache,
+                         causal=causal, cross_kv=cross_kv)
+
+
+def dense_block(cfg: ModelConfig, p, x, positions, cache=None, causal=True):
+    a, cache = _attn(cfg, p["attn"], rms_norm(x, p["ln1"]["scale"], cfg.norm_eps),
+                     positions, cache, causal=causal)
+    x = x + a
+    x = x + ffn(cfg, p["mlp"], rms_norm(x, p["ln2"]["scale"], cfg.norm_eps))
+    return x, cache, None
+
+
+def moe_block(cfg: ModelConfig, p, x, positions, cache=None):
+    a, cache = _attn(cfg, p["attn"], rms_norm(x, p["ln1"]["scale"], cfg.norm_eps),
+                     positions, cache)
+    x = x + a
+    m, aux = moe_ffn(cfg, p["moe"], rms_norm(x, p["ln2"]["scale"], cfg.norm_eps))
+    return x + m, cache, aux
+
+
+def mamba_block(cfg: ModelConfig, p, x, cache=None):
+    m, cache = mamba2_mixer(cfg, p["mixer"],
+                            rms_norm(x, p["ln"]["scale"], cfg.norm_eps),
+                            cache=cache)
+    return x + m, cache, None
+
+
+def project_cross_kv(cfg: ModelConfig, p_cross, enc_h):
+    """Project encoder hidden states to per-layer cross K/V once."""
+    B, S, _ = enc_h.shape
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,de->bse", enc_h, p_cross["wk"]).reshape(B, S, KV, Dh)
+    v = jnp.einsum("bsd,de->bse", enc_h, p_cross["wv"]).reshape(B, S, KV, Dh)
+    return k, v
+
+
+def cross_block(cfg: ModelConfig, p, x, positions, enc_kv, cache=None):
+    """Decoder block with self + cross attention (enc-dec archs)."""
+    a, cache = _attn(cfg, p["attn"], rms_norm(x, p["ln1"]["scale"], cfg.norm_eps),
+                     positions, cache)
+    x = x + a
+    c, _ = gqa_attention(cfg, p["cross"],
+                         rms_norm(x, p["lnx"]["scale"], cfg.norm_eps),
+                         positions, cross_kv=enc_kv)
+    x = x + c
+    x = x + ffn(cfg, p["mlp"], rms_norm(x, p["ln2"]["scale"], cfg.norm_eps))
+    return x, cache, None

@@ -1,0 +1,187 @@
+"""Unified model configuration covering the assigned architecture pool.
+
+One dataclass describes dense GQA transformers, MLA (DeepSeek), MoE,
+Mamba2 SSD, hybrid (Zamba2), encoder-decoder (Seamless) and stub-fronted
+VLM/audio backbones.  Every config file in ``repro/configs`` builds one of
+these with the exact assigned numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | ssm | moe | hybrid | vlm | audio
+
+    num_layers: int
+    d_model: int
+    vocab_size: int
+
+    # ---- attention ----
+    attn_kind: str = "gqa"  # gqa | mla | none
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # sub-quadratic option for decode
+    # rope
+    rope_theta: float = 10000.0
+    rotary_frac: float = 1.0  # chatglm-style partial ("2d") rope uses 0.5
+
+    # ---- ffn ----
+    d_ff: int = 0
+    ffn_kind: str = "swiglu"  # swiglu | gelu
+    mlp_bias: bool = False
+
+    # ---- moe ----
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    num_dense_layers: int = 0  # leading dense-FFN layers (deepseek-v3 = 3)
+    dense_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # ---- mla (deepseek) ----
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # ---- ssm (mamba2 / zamba2) ----
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # ---- hybrid (zamba2): shared attention block every k ssm layers ----
+    attn_every: int = 0  # 0 = no interleaved shared attention
+
+    # ---- enc-dec (seamless) ----
+    enc_dec: bool = False
+    num_encoder_layers: int = 0
+
+    # ---- multimodal stub frontends ----
+    frontend: Optional[str] = None  # "vision" | "audio" (precomputed embeds)
+    frontend_tokens: int = 0        # default # of frontend tokens in a sample
+
+    # ---- heads ----
+    tie_embeddings: bool = False
+    mtp: bool = False  # deepseek multi-token-prediction extra head
+    logit_softcap: float = 0.0
+
+    # ---- numerics / impl ----
+    norm_eps: float = 1e-5
+    param_dtype: str = "bfloat16"
+    act_dtype: str = "bfloat16"
+    attn_impl: str = "einsum"  # einsum | chunked | pallas
+    attn_chunk: int = 1024     # kv-chunk for online-softmax attention
+    scan_layers: bool = True
+    remat: bool = True
+
+    # ---- distribution / perf knobs (default off = baseline) ----
+    dp_axes: Tuple[str, ...] = ("data",)  # mesh axes carrying the batch
+    kv_cache_dtype: str = ""         # "" = act dtype; "int8" = quantized
+    shard_activations: bool = False  # carry hidden P(dp, None, model)
+    seq_parallel: bool = False       # between-block hidden P(dp, model, None)
+    vocab_parallel_loss: bool = False  # logits P(dp, None, model) + CE
+    ce_chunk: int = 0                # chunked cross-entropy over seq
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def ssm_conv_dim(self) -> int:
+        # conv runs over the concatenated (x, B, C) channels, mamba2-style
+        return self.d_inner + 2 * self.ssm_ngroups * self.ssm_state
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.act_dtype)
+
+    @property
+    def qk_head_dim(self) -> int:
+        if self.attn_kind == "mla":
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        return self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family variant for CPU smoke tests.
+
+        Contract: 2 layers, d_model <= 512, <= 4 experts, small vocab.
+        """
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=256,
+            vocab_size=512,
+            param_dtype="float32",
+            act_dtype="float32",
+            attn_impl="einsum",
+            scan_layers=False,
+            remat=False,
+        )
+        if self.attn_kind == "gqa":
+            kw.update(num_heads=4, num_kv_heads=min(self.num_kv_heads, 2) or 2,
+                      head_dim=64)
+        if self.attn_kind == "mla":
+            kw.update(num_heads=4, q_lora_rank=64, kv_lora_rank=64,
+                      qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+        if self.d_ff:
+            kw.update(d_ff=512)
+        if self.num_experts:
+            kw.update(num_experts=4, num_experts_per_tok=2, moe_d_ff=128,
+                      num_dense_layers=min(self.num_dense_layers, 1),
+                      dense_d_ff=512 if self.num_dense_layers else 0)
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_headdim=32, ssm_chunk=32)
+        if self.attn_every:
+            kw.update(attn_every=2)
+        if self.enc_dec:
+            kw.update(num_encoder_layers=2)
+        if self.frontend:
+            kw.update(frontend_tokens=8)
+        if self.sliding_window:
+            kw.update(sliding_window=64)
+        return self.replace(**kw)
+
+
+# shape table assigned to this paper ------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,163 @@
+"""Mamba2 (SSD — state-space duality) block.  [arXiv:2405.21060]
+
+Chunked SSD forward for train/prefill (quadratic within a chunk, linear
+state passing across chunks via lax.scan) and an O(1)-state decode step.
+The intra-chunk einsums are the compute hot-spot mirrored by the
+``ssd_scan`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.norms import rms_norm
+
+
+def segsum(x):
+    """x: (..., Q, H) cumulative-decay matrix exp-arg: out[i,j] = sum_{j<k<=i} x[k].
+
+    Returns (..., Q, Q, H) lower-triangular (i >= j), -inf above diagonal.
+    """
+    Q = x.shape[-2]
+    cs = jnp.cumsum(x, axis=-2)  # (..., Q, H)
+    out = cs[..., :, None, :] - cs[..., None, :, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask[..., None], out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, *, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x: (B,S,H,P) dt: (B,S,H) A: (H,) Bm/Cm: (B,S,G,N) D: (H,)
+    Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    Bz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xr = x.reshape(Bz, nc, chunk, H, P)
+    dtr = dt.reshape(Bz, nc, chunk, H)
+    Br = Bm.reshape(Bz, nc, chunk, G, N)
+    Cr = Cm.reshape(Bz, nc, chunk, G, N)
+
+    dA = dtr * A  # (B,nc,Q,H), negative
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (diagonal blocks) -------------------------------
+    L = jnp.exp(segsum(dA))  # (B,nc,Q,Q,H)
+    CB = jnp.einsum("bcqgn,bckgn->bcqkg", Cr, Br,
+                    preferred_element_type=jnp.float32)
+    CB = jnp.repeat(CB, rep, axis=-1)  # (B,nc,Q,Q,H)
+    M = CB * L * dtr[:, :, None, :, :]  # weight on x[k]
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", M.astype(x.dtype), xr,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- per-chunk final states ---------------------------------------
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B,nc,Q,H)
+    w = (decay_to_end * dtr).astype(x.dtype)
+    gid = jnp.arange(H) // rep
+    Bh = jnp.einsum("bckgn,hg->bckhn", Br, jax.nn.one_hot(gid, G, dtype=x.dtype))
+    states = jnp.einsum("bckh,bckhp,bckhn->bchpn", w, xr, Bh,
+                        preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk recurrence ---------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state BEFORE this chunk
+
+    s0 = init_state if init_state is not None else jnp.zeros(
+        (Bz, H, P, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution -------------------------------------
+    in_decay = jnp.exp(dA_cs)  # decay from chunk start to q
+    Ch = jnp.einsum("bcqgn,hg->bcqhn", Cr, jax.nn.one_hot(gid, G, dtype=x.dtype))
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch,
+                       prev_states.astype(x.dtype), in_decay.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(Bz, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y, final
+
+
+def mamba2_mixer(cfg: ModelConfig, p, x, *, cache=None):
+    """Full Mamba2 mixer: in_proj -> causal conv -> SSD -> gated norm -> out.
+
+    x: (B,S,D).  cache: None (train/prefill from scratch) or
+    {"conv": (B, d_conv-1, conv_dim), "ssm": (B,H,P,N), "len": scalar}.
+    """
+    B, S, D = x.shape
+    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    din, cdim, dconv = cfg.d_inner, cfg.ssm_conv_dim, cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + cdim]
+    dt_raw = zxbcdt[..., din + cdim:]  # (B,S,H)
+
+    # ---- causal depthwise conv over seq ------------------------------
+    if cache is None:
+        pad = jnp.zeros((B, dconv - 1, cdim), xBC.dtype)
+        xx = jnp.concatenate([pad, xBC], axis=1)
+        new_conv = xx[:, -(dconv - 1):] if dconv > 1 else None
+    else:
+        xx = jnp.concatenate([cache["conv"], xBC], axis=1)
+        new_conv = xx[:, -(dconv - 1):]
+    xBC = jax.lax.conv_general_dilated(
+        xx, p["conv_w"][:, None, :],  # (K, 1, C) kernel
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=cdim,
+    ) + p["conv_b"]
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[..., :din].reshape(B, S, H, P)
+    Bm = xBC[..., din:din + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., din + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+
+    if cache is None or S > 1:
+        init = None if cache is None else cache["ssm"]
+        Sp = S
+        if S % cfg.ssm_chunk != 0:
+            padlen = cfg.ssm_chunk - S % cfg.ssm_chunk
+            xs = jnp.pad(xs, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        y, final = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+                               init_state=init)
+        y = y[:, :Sp]
+        new_cache = None if cache is None else {
+            "conv": new_conv, "ssm": final, "len": cache["len"] + S}
+    else:
+        # single-token recurrent decode
+        st = cache["ssm"]  # (B,H,P,N)
+        dt1 = dt[:, 0]  # (B,H)
+        dA = jnp.exp(dt1 * A)  # (B,H)
+        gid = jnp.arange(H) // (H // G)
+        B1 = Bm[:, 0][:, gid]  # (B,H,N)
+        C1 = Cm[:, 0][:, gid]
+        x1 = xs[:, 0]  # (B,H,P)
+        st = st * dA[..., None, None] + (dt1[..., None] * x1)[..., None] \
+            * B1[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", st.astype(x1.dtype), C1)
+        y = y + x1 * p["D"][None, :, None]
+        y = y[:, None]  # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": st, "len": cache["len"] + 1}
+
+    y = y.reshape(B, S, din)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache

@@ -1,0 +1,351 @@
+"""Model assembly: embedding -> layer stack (scan / loop) -> head.
+
+Three entry points shared by every architecture in the pool:
+
+  forward_train(cfg, params, batch)        -> (logits, aux)
+  prefill(cfg, params, batch)              -> (last_logits, aux)
+  decode_step(cfg, params, token, cache)   -> (logits, new_cache)
+
+``batch`` is a dict: {"tokens": (B,S) int32} plus optional
+{"embeds": (B,Sf,D)} (stub VLM/audio frontend output) and, for enc-dec,
+{"enc_frames": (B,Se,D), "dec_tokens": (B,Sd)}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (cross_block, dense_block, ffn, mamba_block,
+                                 moe_block, project_cross_kv)
+from repro.models.config import ModelConfig
+from repro.models.norms import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return params["embed"][tokens].astype(cfg.adtype)
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings or "lm_head" not in params:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.vocab_parallel_loss:
+        from jax.sharding import PartitionSpec as P
+        dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(dp, None, "model"))
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def _maybe_shard_hidden(cfg: ModelConfig, x):
+    """Optional activation-sharding constraints (perf knobs; §Perf).
+
+    shard_activations: hidden (B,S,D) -> P(dp, None, model) — slices the
+    carried activations across the tensor axis (memory).
+    seq_parallel: hidden -> P(dp, model, None) — Megatron-style sequence
+    parallelism; GSPMD turns the per-block all-reduce into
+    reduce-scatter + all-gather pairs (collective bytes).
+    """
+    from jax.sharding import PartitionSpec as P
+    dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    if cfg.seq_parallel:
+        return jax.lax.with_sharding_constraint(x, P(dp, "model", None))
+    if cfg.shard_activations:
+        return jax.lax.with_sharding_constraint(x, P(dp, None, "model"))
+    return x
+
+
+def _inputs_to_hidden(cfg: ModelConfig, params, batch):
+    """tokens (+ optional frontend embeds prepended) -> (x, positions, label_mask)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if "embeds" in batch and batch["embeds"] is not None:
+        fe = batch["embeds"].astype(cfg.adtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return x, positions
+
+
+# ---------------------------------------------------------------------------
+# layer-stack application (full-sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_stack_full(cfg: ModelConfig, params, x, positions, *, causal=True):
+    """Returns (x, aux_loss_sum). Scans homogeneous stacks."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type == "hybrid":
+        # scan over mamba layers; the weight-shared attention block fires
+        # every attn_every layers via lax.cond (compiled once)
+        flags = jnp.asarray(
+            [cfg.attn_every and (i + 1) % cfg.attn_every == 0
+             for i in range(cfg.num_layers)])
+        shared = params.get("shared_attn")
+
+        def hbody(carry, xs):
+            h, aux = carry
+            lp, flag = xs
+            h, _, _ = mamba_block(cfg, lp, h)
+            if shared is not None:
+                h = jax.lax.cond(
+                    flag,
+                    lambda hh: dense_block(cfg, shared, hh, positions)[0],
+                    lambda hh: hh, h)
+            h = _maybe_shard_hidden(cfg, h)
+            return (h, aux), None
+
+        if cfg.remat:
+            hbody = jax.checkpoint(hbody, prevent_cse=False)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(hbody, (x, aux0),
+                                       (params["layers"], flags))
+        else:
+            for i in range(cfg.num_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                (x, aux0), _ = hbody((x, aux0), (lp, flags[i]))
+            aux = aux0
+        return x, aux
+
+    if cfg.num_dense_layers:  # deepseek leading dense layers
+        for i in range(cfg.num_dense_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["dense_layers"])
+            x, _, _ = dense_block(cfg, lp, x, positions)
+
+    def body(carry, lp):
+        h, aux = carry
+        if cfg.arch_type == "moe":
+            h, _, a = moe_block(cfg, lp, h, positions)
+            aux = aux + a["moe_aux_loss"]
+        elif cfg.arch_type == "ssm":
+            h, _, _ = mamba_block(cfg, lp, h)
+        elif cfg.arch_type == "audio":
+            raise AssertionError("audio stack handled by enc-dec path")
+        else:
+            h, _, _ = dense_block(cfg, lp, h, positions, causal=causal)
+        h = _maybe_shard_hidden(cfg, h)
+        return (h, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+    else:
+        aux = aux0
+        n = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            (x, aux), _ = body((x, aux), lp)
+    return x, aux
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Encoder stack for enc-dec archs; frames: (B,Se,D) stub embeddings."""
+    x = frames.astype(cfg.adtype)
+    Se = x.shape[1]
+    positions = jnp.arange(Se, dtype=jnp.int32)
+
+    def body(h, lp):
+        h, _, _ = dense_block(cfg, lp, h, positions, causal=False)
+        return _maybe_shard_hidden(cfg, h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+    else:
+        n = jax.tree_util.tree_leaves(params["encoder"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["encoder"])
+            x, _ = body(x, lp)
+    return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _decode_stack_full(cfg: ModelConfig, params, x, positions, enc_h):
+    """Decoder stack with cross attention, full-sequence."""
+    def body(h, lp):
+        ekv = project_cross_kv(cfg, lp["cross"], enc_h)
+        h, _, _ = cross_block(cfg, lp, h, positions, ekv)
+        return _maybe_shard_hidden(cfg, h), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        n = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# public: full-sequence forward
+# ---------------------------------------------------------------------------
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """Returns (h_normed, x_raw, positions, aux) — the backbone output
+    before the LM head (used by chunked-CE and embedding producers)."""
+    if cfg.enc_dec:
+        enc_h = _encode(cfg, params, batch["enc_frames"])
+        x = embed_tokens(cfg, params, batch["dec_tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = _decode_stack_full(cfg, params, x, positions, enc_h)
+        aux = {"aux_loss": jnp.zeros((), jnp.float32)}
+    else:
+        x, positions = _inputs_to_hidden(cfg, params, batch)
+        x, aux_loss = _apply_stack_full(cfg, params, x, positions)
+        aux = {"aux_loss": aux_loss}
+    h = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return h, x, positions, aux
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    """Returns (logits (B,S,V), aux dict). For enc-dec, S = dec length."""
+    h, x, positions, aux = forward_hidden(cfg, params, batch)
+    logits = lm_logits(cfg, params, h)
+
+    if cfg.mtp:
+        # DeepSeek-V3 multi-token prediction: one extra depth, predicts t+2
+        tokens = batch["tokens"]
+        nxt = embed_tokens(cfg, params, jnp.roll(tokens, -1, axis=1))
+        hm = jnp.concatenate([rms_norm(x, params["mtp"]["norm"]["scale"],
+                                       cfg.norm_eps), nxt], axis=-1)
+        hm = jnp.einsum("bsd,de->bse", hm, params["mtp"]["proj"])
+        hm, _, _ = dense_block(cfg, params["mtp"]["block"], hm, positions)
+        aux["mtp_logits"] = lm_logits(cfg, params, rms_norm(
+            hm, params["final_norm"]["scale"], cfg.norm_eps))
+    return logits, aux
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full forward, returns logits at the last position only."""
+    logits, aux = forward_train(cfg, params, batch)
+    return logits[:, -1:], aux
+
+
+def _scan_or_loop(cfg: ModelConfig, body, carry, xs):
+    """lax.scan, or an unrolled python loop when cfg.scan_layers=False
+    (used by the dry-run cost-model compiles, where XLA's cost analysis
+    counts a while-loop body only once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xsl = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xsl)
+        ys.append(y)
+    ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# decode: single new token against a cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int,
+               enc_len: int = 0, dtype=None, abstract: bool = False,
+               mesh=None):
+    """Build (or abstractly describe) the decode cache pytree.
+
+    cache_len: logical KV length; the allocated window is
+    min(cache_len, sliding_window) for sliding-window archs.
+    """
+    from repro.launch.cachespec import build_cache  # local import (no cycle)
+    return build_cache(cfg, batch_size, cache_len, enc_len=enc_len,
+                       dtype=dtype, abstract=abstract, mesh=mesh)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, enc_h=None):
+    """token: (B,1) int32. Returns (logits (B,1,V), new_cache)."""
+    x = embed_tokens(cfg, params, token)
+    pos = cache["len"][None].astype(jnp.int32)  # (1,)
+
+    if cfg.enc_dec:
+        def body(h, xs):
+            lp, csl, cross = xs
+            csl = dict(csl, len=cache["len"])
+            ekv = (cross["k"], cross["v"])
+            h, new_c, _ = cross_block(cfg, lp, h, pos, ekv, cache=csl)
+            new_c.pop("len")
+            return h, new_c
+        x, new_layer_cache = _scan_or_loop(
+            cfg, body, x, (params["layers"], cache["layers"], cache["cross"]))
+        new_cache = {"layers": new_layer_cache, "cross": cache["cross"],
+                     "len": cache["len"] + 1}
+
+    elif cfg.arch_type == "hybrid":
+        new_mamba, new_attn = [], []
+        inv = 0
+        for i in range(cfg.num_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            csl = jax.tree_util.tree_map(lambda a: a[i], cache["mamba"])
+            csl = dict(csl, len=cache["len"])
+            x, nc, _ = mamba_block(cfg, lp, x, cache=csl)
+            nc.pop("len")
+            new_mamba.append(nc)
+            if cfg.attn_every and (i + 1) % cfg.attn_every == 0:
+                asl = jax.tree_util.tree_map(lambda a: a[inv], cache["attn"])
+                asl = dict(asl, len=cache["len"])
+                x, na, _ = dense_block(cfg, params["shared_attn"], x, pos,
+                                       cache=asl)
+                na.pop("len")
+                new_attn.append(na)
+                inv += 1
+        stack = lambda lst: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *lst)
+        new_cache = {"mamba": stack(new_mamba), "len": cache["len"] + 1}
+        if new_attn:
+            new_cache["attn"] = stack(new_attn)
+
+    elif cfg.arch_type == "ssm":
+        def body(h, xs):
+            lp, csl = xs
+            csl = dict(csl, len=cache["len"])
+            h, nc, _ = mamba_block(cfg, lp, h, cache=csl)
+            nc.pop("len")
+            return h, nc
+        x, new_layers = _scan_or_loop(cfg, body, x,
+                                      (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers, "len": cache["len"] + 1}
+
+    else:
+        new_cache = {"len": cache["len"] + 1}
+        if cfg.num_dense_layers:
+            new_d = []
+            for i in range(cfg.num_dense_layers):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["dense_layers"])
+                csl = jax.tree_util.tree_map(lambda a: a[i], cache["dense"])
+                csl = dict(csl, len=cache["len"])
+                x, nc, _ = dense_block(cfg, lp, x, pos, cache=csl)
+                nc.pop("len")
+                new_d.append(nc)
+            new_cache["dense"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_d)
+
+        def body(carry, xs):
+            h = carry
+            lp, csl = xs
+            csl = dict(csl, len=cache["len"])
+            if cfg.arch_type == "moe":
+                h, nc, _ = moe_block(cfg, lp, h, pos, cache=csl)
+            else:
+                h, nc, _ = dense_block(cfg, lp, h, pos, cache=csl)
+            nc.pop("len")
+            return h, nc
+        x, new_layers = _scan_or_loop(cfg, body, x,
+                                      (params["layers"], cache["layers"]))
+        new_cache["layers"] = new_layers
+
+    h = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return lm_logits(cfg, params, h), new_cache

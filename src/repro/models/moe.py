@@ -1,0 +1,92 @@
+"""Top-k token-choice MoE with capacity-based grouped-einsum dispatch.
+
+TPU-native adaptation: instead of the GPU grouped-GEMM + all-to-all kernel
+path, tokens are packed into a static (E, C, D) buffer via an argsort-based
+permutation, expert matmuls run as a single einsum with E sharded on the
+``model`` mesh axis (GSPMD inserts the all-to-all between the token-sharded
+and expert-sharded layouts), and results are combined with the top-k gate
+weights.  Static shapes throughout — capacity drops are real and reported
+through the aux dict, mirroring GShard/Switch semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def router_topk(logits, k: int):
+    """logits: (T, E) -> (weights (T,k), idx (T,k), aux losses)."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalize
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                # mean router prob
+    one_hot = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1)  # (T,E)
+    ce = one_hot.mean(0)                              # fraction routed
+    aux = E * jnp.sum(me * ce)
+    return w.astype(logits.dtype), idx, aux
+
+
+def moe_ffn(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (B, S, D), aux dict.
+
+    p: router (D,E); w_gate/w_up (E,D,F); w_down (E,F,D);
+       optional shared expert ws_gate/ws_up (D,Fs), ws_down (Fs,D).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"],
+                        preferred_element_type=jnp.float32)
+    w, idx, aux_loss = router_topk(logits, K)
+
+    # ---- capacity-based packing ------------------------------------
+    C = int(cfg.capacity_factor * T * K / E)
+    C = max(8, -(-C // 8) * 8)  # round up to 8, floor at 8
+    flat_e = idx.reshape(-1)                       # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)          # token of each assignment
+    flat_w = w.reshape(-1)
+    # stable sort by expert id -> contiguous expert groups
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position within the expert group
+    pos_in_e = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)  # overflow -> dropped row
+    # gather tokens into (E*C, D) buffer (extra row absorbs drops)
+    buf_tok = jnp.full((E * C + 1,), T, dtype=jnp.int32)  # T = pad token id
+    buf_tok = buf_tok.at[slot].set(st.astype(jnp.int32), mode="drop")
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], 0)
+    xe = xt_pad[buf_tok[:-1]].reshape(E, C, D)
+
+    # ---- expert computation (E sharded on the model axis) -----------
+    if cfg.ffn_kind == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_up"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+
+    # ---- combine back to token order ---------------------------------
+    contrib = jnp.zeros((T + 1, D), ye.dtype)
+    wslot = jnp.where(keep, sw, 0.0).astype(ye.dtype)
+    src = jnp.where(keep, slot, E * C)
+    ye_pad = jnp.concatenate([ye, jnp.zeros((1, D), ye.dtype)], 0)
+    contrib = contrib.at[jnp.where(keep, st, T)].add(
+        ye_pad[src] * wslot[:, None], mode="drop")
+    out = contrib[:T]
+
+    if cfg.num_shared_experts:
+        gs = jnp.einsum("td,df->tf", xt, p["ws_gate"])
+        us = jnp.einsum("td,df->tf", xt, p["ws_up"])
+        out = out + jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us, p["ws_down"])
+
+    dropped = (~keep).sum()
+    aux = {"moe_aux_loss": aux_loss, "moe_dropped": dropped}
+    return out.reshape(B, S, D), aux

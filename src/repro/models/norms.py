@@ -1,0 +1,12 @@
+"""RMSNorm (the norm used across the assigned pool)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * scale.astype(jnp.float32)).astype(dtype)

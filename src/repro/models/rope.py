@@ -1,0 +1,38 @@
+"""Rotary position embeddings.
+
+Supports the full llama-style rope and the chatglm-style partial ("2d")
+rope where only ``rotary_frac`` of each head's dims are rotated.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_cos_sin(positions, rotary_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin of shape (..., rotary_dim // 2)."""
+    half = rotary_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, positions, *, rotary_frac: float = 1.0, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions broadcastable to (..., S).
+
+    Split-half convention (llama). When rotary_frac < 1 only the leading
+    ``rotary_dim`` dims rotate; the rest pass through.
+    """
+    dh = x.shape[-1]
+    rotary_dim = int(dh * rotary_frac)
+    rotary_dim -= rotary_dim % 2
+    cos, sin = rope_cos_sin(positions, rotary_dim, theta)  # (..., S, half)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    xr, xp = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if rotary_dim == dh:
+        return out
+    return jnp.concatenate([out, xp], axis=-1)

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw, sgd, adafactor
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = ["adamw", "sgd", "adafactor", "cosine_schedule", "linear_warmup"]

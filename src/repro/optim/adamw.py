@@ -1,0 +1,145 @@
+"""Self-contained optimizers (no optax in this environment).
+
+Each optimizer is a pair of pure functions packaged in a small namespace:
+  init(params) -> state
+  update(grads, state, params, step, lr) -> (new_params, new_state)
+
+``mu_dtype`` lets billion-parameter configs keep moments in bf16 so the
+optimizer state fits the per-chip HBM budget (recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    name: str = "opt"
+
+
+class _Cell:
+    """Opaque multi-value container: NOT a registered pytree node, so
+    tree_map treats it as a leaf during unzipping (robust even when the
+    params pytree itself contains tuples)."""
+
+    __slots__ = ("vals",)
+
+    def __init__(self, *vals):
+        self.vals = vals
+
+
+def _unzip(out, n):
+    return tuple(
+        jax.tree_util.tree_map(lambda c, i=i: c.vals[i], out,
+                               is_leaf=lambda x: isinstance(x, _Cell))
+        for i in range(n))
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, mu_dtype=None):
+    def init(params):
+        mk = lambda p, d: jnp.zeros(p.shape, d or p.dtype)
+        return {
+            "mu": jax.tree_util.tree_map(lambda p: mk(p, mu_dtype), params),
+            "nu": jax.tree_util.tree_map(lambda p: mk(p, mu_dtype), params),
+        }
+
+    def update(grads, state, params, step, lr):
+        step = step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mhat = m32 / c1
+            vhat = v32 / c2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step_
+            return _Cell(new_p.astype(p.dtype), m32.astype(m.dtype),
+                         v32.astype(v.dtype))
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"],
+                                     params)
+        new_p, new_m, new_v = _unzip(out, 3)
+        return new_p, {"mu": new_m, "nu": new_v}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def sgd(momentum=0.9):
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step, lr):
+        def upd(g, m, p):
+            m32 = m.astype(jnp.float32) * momentum + g.astype(jnp.float32)
+            return _Cell((p.astype(jnp.float32) - lr * m32).astype(p.dtype),
+                         m32.astype(m.dtype))
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        new_p, new_m = _unzip(out, 2)
+        return new_p, {"mu": new_m}
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def adafactor(eps=1e-30, decay=0.8, clip_threshold=1.0):
+    """Factored second moments: O(n+m) state for an (n,m) matrix —
+    the memory-sane choice for the 671B dry-run configs."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(mk, params)}
+
+    def update(grads, state, params, step, lr):
+        decay_rate = 1.0 - (step.astype(jnp.float32) + 1.0) ** -decay
+
+        def upd(g, p, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = decay_rate * s["vr"] + (1 - decay_rate) * g2.mean(-1)
+                vc = decay_rate * s["vc"] + (1 - decay_rate) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g32 * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = decay_rate * s["v"] + (1 - decay_rate) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return _Cell((p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                         new_s)
+
+        # grads drives the walk; state subtrees ride along whole (they are
+        # one level deeper than the params leaves)
+        def walk(g, p, s):
+            return upd(g, p, s)
+
+        out = jax.tree_util.tree_map(
+            walk, grads, params,
+            state["v"],
+            is_leaf=lambda x: hasattr(x, "shape"))
+        new_p, new_s = _unzip(out, 2)
+        return new_p, {"v": new_s}
+
+    return Optimizer(init=init, update=update, name="adafactor")

@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, warmup: int, total: int, peak: float,
+                    floor_frac: float = 0.1):
+    warm = linear_warmup(step, warmup, peak)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,14 @@
+from repro.trainer.dataloading import (GSgnnData, GSgnnNodeDataLoader,
+                                       GSgnnEdgeDataLoader,
+                                       GSgnnLinkPredictionDataLoader)
+from repro.trainer.trainers import (GSgnnNodeTrainer, GSgnnEdgeTrainer,
+                                    GSgnnLinkPredictionTrainer)
+from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
+                                      GSgnnRegressionEvaluator)
+
+__all__ = [
+    "GSgnnData", "GSgnnNodeDataLoader", "GSgnnEdgeDataLoader",
+    "GSgnnLinkPredictionDataLoader",
+    "GSgnnNodeTrainer", "GSgnnEdgeTrainer", "GSgnnLinkPredictionTrainer",
+    "GSgnnAccEvaluator", "GSgnnMrrEvaluator", "GSgnnRegressionEvaluator",
+]

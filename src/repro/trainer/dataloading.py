@@ -1,0 +1,234 @@
+"""Task-specific data loaders (paper Fig. 2): node / edge / link-prediction.
+
+Each loader iterates host-side, runs the on-the-fly neighbor sampler, and
+yields static-shape batches: a hashable BlockSchema (jit cache key) plus
+traced arrays.  The LinkPredictionDataLoader is separate from the edge
+loader (as in the paper) because it owns negative construction and the
+seed-role bookkeeping that makes shared-negative methods cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import EType, HeteroGraph
+from repro.core.negative_sampling import (in_batch_negatives, joint_negatives,
+                                          local_joint_negatives,
+                                          uniform_negatives)
+from repro.core.sampling import NeighborSampler, fetch_features, pad_seeds
+from repro.core.spot_target import batch_exclusions
+from repro.gnn.schema import arrays_of, schema_of
+
+
+@dataclasses.dataclass
+class GSgnnData:
+    """Dataset facade: graph + label/feature fields + splits."""
+    graph: HeteroGraph
+    label_field: str = "label"
+    feat_field: str = "feat"
+
+    def node_labels(self, ntype: str) -> Optional[np.ndarray]:
+        return self.graph.node_feats.get(ntype, {}).get(self.label_field)
+
+    def train_val_test_nodes(self, ntype: str, rng=None,
+                             split=(0.8, 0.1, 0.1)):
+        rng = rng or np.random.default_rng(0)
+        n = self.graph.num_nodes[ntype]
+        perm = rng.permutation(n)
+        a, b = int(split[0] * n), int((split[0] + split[1]) * n)
+        return perm[:a], perm[a:b], perm[b:]
+
+
+class _BaseLoader:
+    def __len__(self):
+        return self.num_batches
+
+
+class GSgnnNodeDataLoader(_BaseLoader):
+    def __init__(self, data: GSgnnData, target_ntype: str,
+                 seed_ids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, shuffle: bool = True, seed: int = 0,
+                 restrict_graph: Optional[HeteroGraph] = None):
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.target_ntype = target_ntype
+        self.seed_ids = np.asarray(seed_ids, np.int64)
+        self.fanout = list(fanout)
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.rng = np.random.default_rng(seed)
+        self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
+        self.num_batches = -(-len(self.seed_ids) // batch_size)
+
+    def __iter__(self) -> Iterator[dict]:
+        order = (self.rng.permutation(len(self.seed_ids))
+                 if self.shuffle else np.arange(len(self.seed_ids)))
+        labels = self.data.node_labels(self.target_ntype)
+        for i in range(self.num_batches):
+            idx = order[i * self.batch_size:(i + 1) * self.batch_size]
+            ids, mask = pad_seeds(self.seed_ids[idx], self.batch_size)
+            mb = self.sampler.sample({self.target_ntype: ids})
+            feats = fetch_features(self.graph, mb.input_nodes,
+                                   self.data.feat_field)
+            batch = {
+                "schema": schema_of(mb),
+                "arrays": arrays_of(mb, feats),
+                "input_nodes": mb.input_nodes,
+                "seed_mask": mask,
+                "seeds": ids,
+            }
+            if labels is not None:
+                batch["labels"] = labels[ids]
+            yield batch
+
+
+class GSgnnEdgeDataLoader(_BaseLoader):
+    """Edge classification/regression: predicts an attribute of an edge."""
+
+    def __init__(self, data: GSgnnData, target_etype: EType,
+                 seed_eids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, labels: Optional[np.ndarray] = None,
+                 shuffle: bool = True, seed: int = 0):
+        self.data = data
+        self.graph = data.graph
+        self.etype = target_etype
+        self.seed_eids = np.asarray(seed_eids, np.int64)
+        self.fanout = list(fanout)
+        self.batch_size = batch_size
+        self.labels = labels
+        self.shuffle = shuffle
+        self.rng = np.random.default_rng(seed)
+        self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
+        self.num_batches = -(-len(self.seed_eids) // batch_size)
+
+    def __iter__(self) -> Iterator[dict]:
+        s_all, d_all = self.graph.edges[self.etype]
+        order = (self.rng.permutation(len(self.seed_eids))
+                 if self.shuffle else np.arange(len(self.seed_eids)))
+        src_t, _, dst_t = self.etype
+        for i in range(self.num_batches):
+            idx = order[i * self.batch_size:(i + 1) * self.batch_size]
+            eids = self.seed_eids[idx]
+            src, smask = pad_seeds(s_all[eids], self.batch_size)
+            dst, _ = pad_seeds(d_all[eids], self.batch_size)
+            seeds, roles = _role_concat([(src_t, src), (dst_t, dst)])
+            mb = self.sampler.sample(seeds)
+            feats = fetch_features(self.graph, mb.input_nodes,
+                                   self.data.feat_field)
+            batch = {
+                "schema": schema_of(mb),
+                "arrays": arrays_of(mb, feats),
+                "input_nodes": mb.input_nodes,
+                "seed_mask": smask,
+                "roles": roles,
+            }
+            if self.labels is not None:
+                batch["labels"] = self.labels[eids]
+            yield batch
+
+
+class GSgnnLinkPredictionDataLoader(_BaseLoader):
+    """LP loader: positive edges + negatives (§3.3.4 / Appendix A).
+
+    neg_method: uniform | joint | local_joint | in_batch
+    Shared-negative methods sample only ``batch_size`` (or 0) extra nodes —
+    the efficiency the paper's Table 6 measures.
+    """
+
+    def __init__(self, data: GSgnnData, target_etype: EType,
+                 seed_eids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, num_negatives: int = 32,
+                 neg_method: str = "joint", shuffle: bool = True,
+                 seed: int = 0, exclude_target_edges: bool = True,
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 local_nodes: Optional[np.ndarray] = None):
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.etype = target_etype
+        self.seed_eids = np.asarray(seed_eids, np.int64)
+        self.fanout = list(fanout)
+        self.batch_size = batch_size
+        self.k = num_negatives
+        self.neg_method = neg_method
+        self.shuffle = shuffle
+        self.exclude_target_edges = exclude_target_edges
+        self.local_nodes = local_nodes
+        self.rng = np.random.default_rng(seed)
+        self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
+        # drop last ragged batch: static shapes end-to-end
+        self.num_batches = len(self.seed_eids) // batch_size
+
+    # ------------------------------------------------------------------
+    def _negatives(self, dst_batch: np.ndarray):
+        n_dst_nodes = self.graph.num_nodes[self.etype[2]]
+        if self.neg_method == "uniform":
+            return uniform_negatives(self.rng, n_dst_nodes, dst_batch, self.k)
+        if self.neg_method == "joint":
+            return joint_negatives(self.rng, n_dst_nodes, dst_batch, self.k)
+        if self.neg_method == "local_joint":
+            assert self.local_nodes is not None, \
+                "local_joint needs the partition's node set"
+            return local_joint_negatives(self.rng, self.local_nodes,
+                                         dst_batch, self.k)
+        if self.neg_method == "in_batch":
+            return in_batch_negatives(self.rng, n_dst_nodes, dst_batch, self.k)
+        raise ValueError(self.neg_method)
+
+    def __iter__(self) -> Iterator[dict]:
+        # positives index the *full* graph's edge list; message passing
+        # samples from self.graph (the train graph with eval edges removed)
+        s_all, d_all = self.data.graph.edges[self.etype]
+        order = (self.rng.permutation(len(self.seed_eids))
+                 if self.shuffle else np.arange(len(self.seed_eids)))
+        src_t, _, dst_t = self.etype
+        B = self.batch_size
+        for i in range(self.num_batches):
+            eids = self.seed_eids[order[i * B:(i + 1) * B]]
+            src, dst = s_all[eids], d_all[eids]
+            neg, neg_mask = self._negatives(dst)
+            # shared methods need only the unique negatives in the GNN pass
+            if self.neg_method in ("joint", "local_joint"):
+                # unique negatives = one row per group of k positives
+                assert B % self.k == 0 or self.k >= B, \
+                    "joint sampling assumes batch divisible by k"
+                neg_seed = neg[::self.k].reshape(-1)[:max(B, self.k)]
+                neg_shape = "shared"
+            elif self.neg_method == "in_batch":
+                neg_seed = np.zeros(0, np.int64)
+                neg_shape = "inbatch"
+            else:
+                neg_seed = neg.reshape(-1)
+                neg_shape = "per_edge"
+            role_list = [(src_t, src), (dst_t, dst)]
+            if len(neg_seed):
+                role_list.append((dst_t, neg_seed))
+            seeds, roles = _role_concat(role_list)
+            excl = (batch_exclusions(self.etype, src, dst)
+                    if self.exclude_target_edges else None)
+            mb = self.sampler.sample(seeds, exclude_pairs=excl)
+            feats = fetch_features(self.graph, mb.input_nodes,
+                                   self.data.feat_field)
+            yield {
+                "schema": schema_of(mb),
+                "arrays": arrays_of(mb, feats),
+                "input_nodes": mb.input_nodes,
+                "roles": roles,
+                "neg_shape": neg_shape,
+                "neg_mask": neg_mask,
+                "num_negatives": self.k,
+                "sampled_neg_nodes": len(neg_seed),
+            }
+
+
+def _role_concat(role_list: List[Tuple[str, np.ndarray]]):
+    """Concat seed ids per ntype, remembering each role's (ntype, offset,
+    length) so embeddings can be sliced back out after the GNN pass."""
+    seeds: Dict[str, List[np.ndarray]] = {}
+    roles = []
+    for nt, ids in role_list:
+        off = sum(len(a) for a in seeds.get(nt, []))
+        seeds.setdefault(nt, []).append(np.asarray(ids, np.int64))
+        roles.append((nt, off, len(ids)))
+    return {nt: np.concatenate(v) for nt, v in seeds.items()}, roles

@@ -1,0 +1,74 @@
+"""Evaluators (paper Fig. 2: one per task family)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Accum:
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.num = 0.0
+        self.den = 0.0
+
+
+class GSgnnAccEvaluator(_Accum):
+    """Accuracy (multilabel=False path of the paper's evaluator)."""
+    name = "accuracy"
+
+    def __init__(self, multilabel: bool = False):
+        super().__init__()
+        self.multilabel = multilabel
+
+    def update(self, logits, labels, mask=None):
+        logits = np.asarray(logits)
+        labels = np.asarray(labels)
+        pred = logits.argmax(-1)
+        ok = (pred == labels).astype(np.float64)
+        if mask is not None:
+            m = np.asarray(mask, np.float64)
+            self.num += float((ok * m).sum())
+            self.den += float(m.sum())
+        else:
+            self.num += float(ok.sum())
+            self.den += ok.size
+
+    def value(self) -> float:
+        return self.num / max(self.den, 1.0)
+
+
+class GSgnnRegressionEvaluator(_Accum):
+    name = "rmse"
+
+    def update(self, preds, labels, mask=None):
+        preds = np.asarray(preds).reshape(-1)
+        labels = np.asarray(labels).reshape(-1)
+        se = (preds - labels) ** 2
+        if mask is not None:
+            m = np.asarray(mask, np.float64).reshape(-1)
+            self.num += float((se * m).sum())
+            self.den += float(m.sum())
+        else:
+            self.num += float(se.sum())
+            self.den += se.size
+
+    def value(self) -> float:
+        return float(np.sqrt(self.num / max(self.den, 1.0)))
+
+
+class GSgnnMrrEvaluator(_Accum):
+    """MRR of positives ranked against their negatives."""
+    name = "mrr"
+
+    def update(self, pos_score, neg_score, neg_mask=None):
+        pos = np.asarray(pos_score)
+        neg = np.asarray(neg_score)
+        if neg_mask is not None:
+            neg = np.where(np.asarray(neg_mask), neg, -np.inf)
+        rank = 1 + (neg > pos[:, None]).sum(axis=1)
+        self.num += float((1.0 / rank).sum())
+        self.den += len(pos)
+
+    def value(self) -> float:
+        return self.num / max(self.den, 1.0)

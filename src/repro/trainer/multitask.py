@@ -1,0 +1,83 @@
+"""Multi-task training (paper Fig. 2: one of the four training
+strategies): a shared GNN encoder driven by several task heads —
+e.g. node classification + link prediction — with weighted loss mixing.
+
+Tasks alternate at the mini-batch level (round-robin over their
+dataloaders), sharing trainer state; each task keeps its own decoder
+params and evaluator.  This mirrors GraphStorm's multi-task trainer where
+LP pre-training regularizes NC on the same graph.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import SparseEmbedding
+from repro.gnn.model import GSgnnModel, init_gnn_model
+from repro.optim import adamw
+from repro.trainer.trainers import (GSgnnLinkPredictionTrainer,
+                                    GSgnnNodeTrainer, _TrainerBase)
+
+
+class GSgnnMultiTaskTrainer:
+    """Shared-encoder multi-task trainer.
+
+    tasks: list of dicts
+      {"name", "kind": "node_classification"|"link_prediction",
+       "weight": float, "trainer": constructed single-task trainer,
+       "loader": dataloader}
+    All task trainers must be built with the same GSgnnModel; their
+    ``params["gnn"]`` is replaced by the shared encoder params.
+    """
+
+    def __init__(self, model: GSgnnModel, tasks: List[dict],
+                 sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
+                 rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.model = model
+        self.tasks = tasks
+        self.shared_gnn = init_gnn_model(rng, model)
+        self.sparse_embeds = sparse_embeds or {}
+        for t in tasks:
+            t["trainer"].sparse_embeds = self.sparse_embeds
+            t["trainer"].params["gnn"] = self.shared_gnn
+        self.history: List[dict] = []
+
+    def fit(self, num_epochs: int = 1, verbose: bool = False):
+        for epoch in range(num_epochs):
+            t0 = time.time()
+            iters = [(t, iter(t["loader"])) for t in self.tasks]
+            losses = {t["name"]: [] for t in self.tasks}
+            live = True
+            while live:
+                live = False
+                for t, it in iters:
+                    batch = next(it, None)
+                    if batch is None:
+                        continue
+                    live = True
+                    tr = t["trainer"]
+                    # share the encoder: write it in, step, read it out
+                    tr.params["gnn"] = self.shared_gnn
+                    loss, _ = tr.fit_batch(batch)
+                    self.shared_gnn = tr.params["gnn"]
+                    losses[t["name"]].append(t["weight"] * loss)
+            rec = {"epoch": epoch,
+                   **{f"loss_{k}": float(np.mean(v)) if v else None
+                      for k, v in losses.items()},
+                   "epoch_time_s": time.time() - t0}
+            self.history.append(rec)
+            if verbose:
+                print(rec)
+        return self.history
+
+    def evaluate(self, name: str, loader) -> float:
+        for t in self.tasks:
+            if t["name"] == name:
+                t["trainer"].params["gnn"] = self.shared_gnn
+                return t["trainer"].evaluate(loader)
+        raise KeyError(name)

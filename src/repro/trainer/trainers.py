@@ -1,0 +1,294 @@
+"""Trainers / predictors (paper §3.1.3).
+
+A trainer owns: the GNN model params, the task decoder, optional sparse
+embedding tables for featureless node types, one jitted step per
+BlockSchema (schemas are static per loader config, so in practice one),
+and an evaluator.  The same trainer runs on one device or a mesh — the
+step function is jit-compiled against whatever device layout the arrays
+carry (GraphStorm's "no code change across hardware" property).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.embedding import SparseEmbedding
+from repro.core.lp import (contrastive_lp_loss, cross_entropy_lp_loss, mrr)
+from repro.gnn.decoders import decoder_apply, init_decoder, lp_score
+from repro.gnn.model import GSgnnModel, gnn_apply_blocks, init_gnn_model
+from repro.optim import adamw
+from repro.optim.schedules import cosine_schedule
+
+
+def _xent(logits, labels, mask):
+    ls = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(ls, labels[:, None], axis=-1)[:, 0]
+    m = mask.astype(jnp.float32)
+    return -(ll * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def _mse(preds, labels, mask):
+    se = (preds.reshape(-1) - labels.reshape(-1).astype(jnp.float32)) ** 2
+    m = mask.astype(jnp.float32)
+    return (se * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+class _TrainerBase:
+    def __init__(self, model: GSgnnModel, task: str, out_dim: int = 1,
+                 lr: float = 1e-3, rng=None,
+                 sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
+                 evaluator=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(rng)
+        self.model = model
+        self.task = task
+        self.params = {
+            "gnn": init_gnn_model(k1, model),
+            "dec": init_decoder(k2, task, model.hidden, out_dim,
+                                num_etypes=len(model.etypes)),
+        }
+        self.optimizer = adamw(weight_decay=0.0)
+        self.opt_state = self.optimizer.init(self.params)
+        self.lr = lr
+        self.stepno = jnp.zeros((), jnp.int32)
+        self.sparse_embeds = sparse_embeds or {}
+        self.evaluator = evaluator
+        self._steps: Dict = {}
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _feats_for(self, batch) -> Tuple[Dict, Dict]:
+        """Compose input features: raw graph feats + embedding-table rows
+        for featureless ntypes. Returns (feats, emb_ids)."""
+        feats = dict(batch["arrays"]["feats"])
+        emb_ids = {}
+        for nt, ids in batch["input_nodes"].items():
+            if nt not in feats and nt in self.sparse_embeds:
+                feats[nt] = self.sparse_embeds[nt].lookup(ids)
+                emb_ids[nt] = ids
+        return feats, emb_ids
+
+    def _apply_sparse(self, emb_ids: Dict, feat_grads: Dict):
+        for nt, ids in emb_ids.items():
+            if nt in feat_grads:
+                self.sparse_embeds[nt].apply_sparse_grad(ids, feat_grads[nt])
+
+    def _loss_and_out(self, params, feats, batch):
+        raise NotImplementedError
+
+    def _make_step(self, schema, roles=None, neg_shape=None, k=0):
+        def loss_fn(params, feats, arrays, aux_in):
+            arr = dict(arrays)
+            arr["feats"] = feats
+            emb = gnn_apply_blocks(params["gnn"], self.model, schema, arr)
+            return self._task_loss(params, emb, aux_in,
+                                   roles=roles, neg_shape=neg_shape, k=k)
+
+        def step(params, opt_state, stepno, feats, arrays, aux_in):
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(params, feats, arrays,
+                                                       aux_in)
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state, params,
+                                                      stepno, lr)
+            return params, opt_state, stepno + 1, loss, out, gf
+
+        return jax.jit(step)
+
+    def _step_for(self, batch):
+        key = (batch["schema"], batch.get("neg_shape"),
+               tuple(batch.get("roles") or ()),
+               batch.get("num_negatives", 0))
+        if key not in self._steps:
+            self._steps[key] = self._make_step(
+                batch["schema"], roles=batch.get("roles"),
+                neg_shape=batch.get("neg_shape"),
+                k=batch.get("num_negatives", 0))
+        return self._steps[key]
+
+    # ------------------------------------------------------------------
+    def fit_batch(self, batch):
+        feats, emb_ids = self._feats_for(batch)
+        step = self._step_for(batch)
+        aux_in = self._aux_inputs(batch)
+        self.params, self.opt_state, self.stepno, loss, out, gf = step(
+            self.params, self.opt_state, self.stepno, feats,
+            batch["arrays"], aux_in)
+        self._apply_sparse(emb_ids, gf)
+        return float(loss), out
+
+    def fit(self, train_dataloader, val_dataloader=None, num_epochs: int = 1,
+            log_every: int = 0, verbose: bool = False):
+        for epoch in range(num_epochs):
+            t0 = time.time()
+            losses = []
+            for bi, batch in enumerate(train_dataloader):
+                loss, _ = self.fit_batch(batch)
+                losses.append(loss)
+                if log_every and (bi + 1) % log_every == 0 and verbose:
+                    print(f"epoch {epoch} batch {bi + 1} loss "
+                          f"{np.mean(losses[-log_every:]):.4f}")
+            rec = {"epoch": epoch, "loss": float(np.mean(losses)),
+                   "epoch_time_s": time.time() - t0}
+            if val_dataloader is not None and self.evaluator is not None:
+                rec[self.evaluator.name] = self.evaluate(val_dataloader)
+            self.history.append(rec)
+            if verbose:
+                print(rec)
+        return self.history
+
+    def evaluate(self, dataloader) -> float:
+        self.evaluator.reset()
+        for batch in dataloader:
+            self.eval_batch(batch)
+        return self.evaluator.value()
+
+
+# ---------------------------------------------------------------------------
+class GSgnnNodeTrainer(_TrainerBase):
+    def __init__(self, model, target_ntype: str, num_classes: int = 0,
+                 task: str = "node_classification", **kw):
+        out_dim = num_classes if "classification" in task else 1
+        super().__init__(model, task, out_dim=out_dim, **kw)
+        self.target_ntype = target_ntype
+
+    def _aux_inputs(self, batch):
+        return {"labels": jnp.asarray(batch["labels"]),
+                "mask": jnp.asarray(batch["seed_mask"])}
+
+    def _task_loss(self, params, emb, aux_in, **_):
+        out = decoder_apply(params["dec"], self.task, emb,
+                            target_ntype=self.target_ntype)
+        if "classification" in self.task:
+            loss = _xent(out, aux_in["labels"], aux_in["mask"])
+        else:
+            loss = _mse(out, aux_in["labels"], aux_in["mask"])
+        return loss, out
+
+    def eval_batch(self, batch):
+        feats, _ = self._feats_for(batch)
+        emb = self.embed_batch(batch, feats)
+        out = decoder_apply(self.params["dec"], self.task, emb,
+                            target_ntype=self.target_ntype)
+        self.evaluator.update(out, batch["labels"], batch["seed_mask"])
+
+    def embed_batch(self, batch, feats=None):
+        if feats is None:
+            feats, _ = self._feats_for(batch)
+        arr = dict(batch["arrays"])
+        arr["feats"] = feats
+        return gnn_apply_blocks(self.params["gnn"], self.model,
+                                batch["schema"], arr)
+
+
+# ---------------------------------------------------------------------------
+class GSgnnEdgeTrainer(_TrainerBase):
+    def __init__(self, model, target_etype, num_classes: int = 0,
+                 task: str = "edge_classification", **kw):
+        out_dim = num_classes if "classification" in task else 1
+        super().__init__(model, task, out_dim=out_dim, **kw)
+        self.target_etype = target_etype
+
+    def _aux_inputs(self, batch):
+        return {"labels": jnp.asarray(batch["labels"]),
+                "mask": jnp.asarray(batch["seed_mask"])}
+
+    def _task_loss(self, params, emb, aux_in, roles=None, **_):
+        (snt, soff, slen), (dnt, doff, dlen) = roles[0], roles[1]
+        src = jax.lax.slice_in_dim(emb[snt], soff, soff + slen, axis=0)
+        dst = jax.lax.slice_in_dim(emb[dnt], doff, doff + dlen, axis=0)
+        out = decoder_apply(params["dec"], self.task, emb, src_dst=(src, dst))
+        if "classification" in self.task:
+            loss = _xent(out, aux_in["labels"], aux_in["mask"])
+        else:
+            loss = _mse(out, aux_in["labels"], aux_in["mask"])
+        return loss, out
+
+    def eval_batch(self, batch):
+        feats, _ = self._feats_for(batch)
+        arr = dict(batch["arrays"])
+        arr["feats"] = feats
+        emb = gnn_apply_blocks(self.params["gnn"], self.model,
+                               batch["schema"], arr)
+        (snt, soff, slen), (dnt, doff, dlen) = batch["roles"][:2]
+        src = emb[snt][soff:soff + slen]
+        dst = emb[dnt][doff:doff + dlen]
+        out = decoder_apply(self.params["dec"], self.task, emb,
+                            src_dst=(src, dst))
+        self.evaluator.update(out, batch["labels"], batch["seed_mask"])
+
+
+# ---------------------------------------------------------------------------
+class GSgnnLinkPredictionTrainer(_TrainerBase):
+    """LP with configurable loss (contrastive / cross-entropy) and the
+    negative-sampling modes of the LP dataloader (§3.3.4)."""
+
+    def __init__(self, model, target_etype, loss: str = "contrastive",
+                 temperature: float = 0.1, **kw):
+        super().__init__(model, "link_prediction", out_dim=0, **kw)
+        self.target_etype = target_etype
+        self.loss_kind = loss
+        self.temperature = temperature
+        self.etype_idx = [e[0] for e in model.etypes].index(
+            "___".join(target_etype)) if model.etypes else None
+
+    def _aux_inputs(self, batch):
+        return {"neg_mask": jnp.asarray(batch["neg_mask"])}
+
+    def _scores(self, params, emb, roles, neg_shape, k):
+        (snt, soff, slen) = roles[0]
+        (dnt, doff, dlen) = roles[1]
+        src = jax.lax.slice_in_dim(emb[snt], soff, soff + slen, axis=0)
+        dst = jax.lax.slice_in_dim(emb[dnt], doff, doff + dlen, axis=0)
+        pos = lp_score(params["dec"], src, dst, self.etype_idx)
+        B = slen
+        if neg_shape == "per_edge":
+            (nnt, noff, nlen) = roles[2]
+            neg = jax.lax.slice_in_dim(emb[nnt], noff, noff + nlen, axis=0)
+            neg = neg.reshape(B, k, -1)
+            nsc = lp_score(params["dec"], src[:, None, :], neg, self.etype_idx)
+        elif neg_shape == "shared":
+            (nnt, noff, nlen) = roles[2]
+            neg = jax.lax.slice_in_dim(emb[nnt], noff, noff + nlen, axis=0)
+            if k >= B:  # one group: every edge scores all k shared negs
+                nsc = lp_score(params["dec"], src[:, None, :],
+                               neg[None, :, :], self.etype_idx)
+            else:
+                G = B // k
+                nsc = lp_score(params["dec"],
+                               src.reshape(G, k, 1, -1),
+                               neg.reshape(G, 1, k, -1), self.etype_idx)
+                nsc = nsc.reshape(B, k)
+        else:  # in_batch: other dst nodes in the batch are the negatives
+            nsc = lp_score(params["dec"], src[:, None, :], dst[None, :, :],
+                           self.etype_idx)  # (B, B)
+            # drop the diagonal (the positive itself): row i keeps cols i+1..i+B-1 mod B
+            idx = (jnp.arange(B)[:, None] + jnp.arange(1, B)[None, :]) % B
+            nsc = jnp.take_along_axis(nsc, idx, axis=1)  # (B, B-1)
+        return pos, nsc
+
+    def _task_loss(self, params, emb, aux_in, roles=None, neg_shape=None,
+                   k=0):
+        pos, nsc = self._scores(params, emb, roles, neg_shape, k)
+        neg_mask = aux_in["neg_mask"]
+        if neg_mask.shape != nsc.shape:
+            neg_mask = jnp.ones(nsc.shape, bool)
+        if self.loss_kind == "contrastive":
+            loss = contrastive_lp_loss(pos, nsc, neg_mask, self.temperature)
+        else:
+            loss = cross_entropy_lp_loss(pos, nsc, neg_mask)
+        return loss, (pos, nsc)
+
+    def eval_batch(self, batch):
+        feats, _ = self._feats_for(batch)
+        arr = dict(batch["arrays"])
+        arr["feats"] = feats
+        emb = gnn_apply_blocks(self.params["gnn"], self.model,
+                               batch["schema"], arr)
+        pos, nsc = self._scores(self.params, emb, batch["roles"],
+                                batch["neg_shape"], batch["num_negatives"])
+        self.evaluator.update(pos, nsc)

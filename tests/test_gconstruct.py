@@ -1,0 +1,113 @@
+"""Construction pipeline: ID mapping bijectivity, transforms, partitioning
+invariants (hypothesis where it matters)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dist_graph import PartitionedGraph
+from repro.data import make_mag_like
+from repro.gconstruct import IdMap, apply_transform, construct_graph
+from repro.gconstruct.partition import ldg_partition, random_partition
+
+
+# ---------------------------------------------------------------------------
+@given(st.lists(st.text(min_size=1, max_size=12), min_size=1, max_size=200,
+                unique=True),
+       st.integers(1, 5))
+@settings(max_examples=40, deadline=None)
+def test_idmap_bijective(strings, n_chunks):
+    chunks = np.array_split(np.array(strings, dtype=object), n_chunks)
+    im = IdMap().build_chunked(chunks)
+    ids = im.apply_chunked(strings, chunk_size=17)
+    assert len(set(ids.tolist())) == len(strings)  # injective
+    assert ids.max() == len(strings) - 1 and ids.min() == 0  # dense
+    back = im.inverse(ids)
+    assert back == [str(s) for s in strings]  # invertible
+
+
+def test_standardize_stats():
+    v = np.random.default_rng(0).normal(5.0, 3.0, 10000)
+    out = apply_transform("standardize", v)
+    assert abs(out.mean()) < 1e-2 and abs(out.std() - 1.0) < 1e-2
+
+
+def test_minmax_range():
+    v = np.random.default_rng(0).uniform(-7, 13, 1000)
+    out = apply_transform("minmax", v)
+    assert out.min() >= 0.0 and out.max() <= 1.0
+
+
+def test_categorical_onehot():
+    v = ["a", "b", "a", "c"]
+    out = apply_transform("categorical_onehot", v)
+    assert out.shape == (4, 3)
+    np.testing.assert_allclose(out.sum(1), 1.0)
+    np.testing.assert_array_equal(out[0], out[2])
+
+
+def test_tokenize_deterministic():
+    a = apply_transform("tokenize", ["hello world", "foo"], max_len=4)
+    b = apply_transform("tokenize", ["hello world", "foo"], max_len=4)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (2, 4)
+    assert a[1, 1] == 0  # padded
+
+
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_partition_covers_all_nodes_once(num_parts, seed):
+    g = make_mag_like(n_paper=100, n_author=50, n_inst=8, n_field=4,
+                      seed=seed % 50)
+    for fn in (random_partition, ldg_partition):
+        assign = fn(g, num_parts, seed=seed)
+        pg = PartitionedGraph(g, assign, num_parts)
+        for nt, n in g.num_nodes.items():
+            allnodes = np.concatenate(
+                [pg.local_nodes(p, nt) for p in range(num_parts)])
+            assert len(allnodes) == n
+            assert len(np.unique(allnodes)) == n  # exactly-once
+        # every edge owned by exactly one partition (its dst's)
+        total = sum(p.num_local_edges() for p in pg.partitions)
+        assert total == g.num_edges()
+
+
+def test_ldg_beats_random_edge_cut():
+    g = make_mag_like(n_paper=300, n_author=150, seed=0)
+    r = PartitionedGraph(g, random_partition(g, 4, seed=0), 4).edge_cut()
+    l = PartitionedGraph(g, ldg_partition(g, 4, seed=0), 4).edge_cut()
+    assert l < r, (l, r)
+
+
+def test_construct_graph_pipeline(tmp_path):
+    n = 50
+    config = {
+        "nodes": [
+            {"node_type": "item",
+             "data": {"node_id": np.array([f"i{j}" for j in range(n)]),
+                      "price": np.random.default_rng(0).uniform(1, 9, n),
+                      "label": np.arange(n) % 4},
+             "node_id_col": "node_id",
+             "features": [{"feature_col": "price", "feature_name": "feat",
+                           "transform": "standardize"}],
+             "labels": [{"label_col": "label",
+                         "task_type": "classification"}]},
+        ],
+        "edges": [
+            {"relation": ["item", "rel", "item"],
+             "data": {"source_id": np.array([f"i{j}" for j in range(n)]),
+                      "dest_id": np.array([f"i{(j + 1) % n}"
+                                           for j in range(n)])}},
+        ],
+    }
+    g, pg, report = construct_graph(config, num_parts=2, part_method="ldg",
+                                    out_dir=str(tmp_path / "out"))
+    assert g.num_nodes["item"] == n
+    assert ("item", "rel", "item") in g.edges
+    assert ("item", "rel-rev", "item") in g.edges  # reverse added
+    assert (tmp_path / "out" / "metadata.json").exists()
+    assert report["edge_cut"] <= 1.0
+    # reload
+    from repro.core.dist_graph import PartitionedGraph as PG
+    pg2 = PG.load(str(tmp_path / "out"), g)
+    assert pg2.num_parts == 2

@@ -1,0 +1,80 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.seg_aggr import seg_aggr, seg_aggr_ref
+from repro.kernels.ssd_scan import ssd_forward, ssd_ref_sequential
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("shape", [(16, 4, 8), (130, 7, 96), (256, 32, 128),
+                                   (100, 1, 300), (1, 64, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("reduce", ["mean", "sum"])
+def test_seg_aggr(shape, dtype, reduce):
+    n, f, d = shape
+    x = jnp.asarray(RNG.normal(size=shape), dtype)
+    m = jnp.asarray(RNG.random((n, f)) < 0.7)
+    out = seg_aggr(x, m, reduce)
+    ref = seg_aggr_ref(x, m, reduce)
+    assert out.shape == (n, d) and out.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_seg_aggr_all_masked_rows():
+    x = jnp.ones((8, 4, 16), jnp.float32)
+    m = jnp.zeros((8, 4), bool)
+    out = seg_aggr(x, m, "mean")
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("cfg", [
+    (1, 2, 2, 128, 64, 64, 64),
+    (2, 4, 2, 256, 32, 128, 128),
+    (1, 2, 1, 512, 128, 128, 128),
+    (1, 8, 8, 256, 64, 64, 256),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(cfg, causal, dtype):
+    B, H, KV, S, D, bq, bk = cfg
+    q = jnp.asarray(RNG.normal(size=(B, H, S, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, KV, S, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, KV, S, D)), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    kk = jnp.repeat(k, H // KV, 1)
+    vv = jnp.repeat(v, H // KV, 1)
+    ref = attention_ref(q, kk, vv, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("cfg", [
+    (1, 64, 2, 16, 1, 8, 16),
+    (2, 128, 4, 32, 2, 16, 32),
+    (1, 256, 8, 64, 1, 64, 64),
+    (1, 96, 2, 16, 1, 8, 32),
+])
+def test_ssd_scan(cfg):
+    B, S, H, P, G, N, chunk = cfg
+    x = jnp.asarray(RNG.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(B, S, G, N)), jnp.float32)
+    D = jnp.asarray(RNG.normal(size=(H,)), jnp.float32)
+    y, st = ssd_forward(x, dt, A, Bm, Cm, D, chunk=chunk)
+    yr, sr = ssd_ref_sequential(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr),
+                               rtol=2e-3, atol=2e-3)

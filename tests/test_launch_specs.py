@@ -1,0 +1,84 @@
+"""Launch-layer contract: input_specs are well-formed for every
+(arch x shape); decode caches typecheck against decode_step via
+eval_shape on the smoke configs (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.cachespec import build_cache
+from repro.launch.specs import (LONG_CONTEXT_WINDOW, adapt_config,
+                                concrete_inputs, input_specs, split_lengths)
+from repro.launch.steps import make_decode_fn, make_prefill_step
+from repro.models.config import INPUT_SHAPES, InputShape
+from repro.models.params import abstract_params, init_params, param_count
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_specs_shapes(arch, shape_name):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape)
+    if shape.kind in ("train", "prefill"):
+        fe, st = split_lengths(cfg, shape.seq_len)
+        assert fe + st == shape.seq_len
+    if shape_name == "long_500k" and cfg.arch_type != "ssm":
+        assert cfg.sliding_window == LONG_CONTEXT_WINDOW
+    if shape_name == "decode_32k":
+        assert cfg.sliding_window is None or cfg.arch_type == "hybrid" \
+            or True  # full cache at 32k
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_cache_spec_matches_step(arch):
+    """eval_shape the decode step against the built cache — proves the
+    cache pytree structure/shapes/dtypes are exactly what decode needs."""
+    cfg = get_smoke_config(arch)
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    B, S = 2, 32
+    cache = build_cache(cfg, B, S,
+                        enc_len=cfg.frontend_tokens if cfg.enc_dec else 0,
+                        abstract=False)
+    cache = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    fn = make_decode_fn(cfg)
+    out = jax.eval_shape(fn, params, {"token": tok, "cache": cache})
+    nxt, new_cache = out
+    assert nxt.shape == (B,)
+    # new cache has the same structure & shapes as the old
+    old_flat = jax.tree_util.tree_flatten(cache)[1]
+    new_flat = jax.tree_util.tree_flatten(new_cache)[1]
+    assert old_flat == new_flat
+
+
+def test_param_counts_match_names():
+    """Full-config parameter counts are in the advertised ballpark."""
+    expect = {
+        "phi4-mini-3.8b": (3.0e9, 5.3e9),
+        "mamba2-2.7b": (2.4e9, 3.0e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "qwen2.5-32b": (30e9, 35e9),
+        "llava-next-34b": (32e9, 37e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "granite-3-2b": (2.2e9, 2.9e9),
+        "chatglm3-6b": (5.5e9, 7.2e9),
+        "deepseek-v3-671b": (640e9, 700e9),
+        "seamless-m4t-medium": (0.7e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, (arch, f"{n:,}")
+
+
+def test_active_params_moe():
+    from repro.models.params import active_param_count
+    cfg = get_config("qwen3-moe-30b-a3b")
+    total = param_count(cfg)
+    active = active_param_count(cfg)
+    assert active < 0.2 * total  # ~3B of ~30B
+    cfg2 = get_config("deepseek-v3-671b")
+    a2 = active_param_count(cfg2)
+    assert 30e9 < a2 < 50e9  # ~37B advertised

@@ -1,0 +1,77 @@
+"""LP scores / losses / metrics: analytical properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import (contrastive_lp_loss, cross_entropy_lp_loss,
+                           distmult_score, dot_score, hits_at_k, mrr,
+                           weighted_cross_entropy_lp_loss)
+
+RNG = np.random.default_rng(3)
+
+
+def test_dot_vs_distmult_identity_relation():
+    src = jnp.asarray(RNG.normal(size=(8, 16)), jnp.float32)
+    dst = jnp.asarray(RNG.normal(size=(8, 16)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(dot_score(src, dst)),
+        np.asarray(distmult_score(src, dst, jnp.ones(16))), rtol=1e-6)
+
+
+@given(st.integers(1, 32), st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_contrastive_loss_bounds(b, k, seed):
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.normal(size=(b,)), jnp.float32)
+    neg = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    loss = float(contrastive_lp_loss(pos, neg))
+    assert np.isfinite(loss) and loss >= 0.0
+    # perfect separation -> loss ~ 0
+    loss2 = float(contrastive_lp_loss(pos + 100.0, neg))
+    assert loss2 < 1e-3
+
+
+def test_contrastive_monotone_in_pos_score():
+    pos = jnp.asarray([0.0, 0.0], jnp.float32)
+    neg = jnp.asarray(RNG.normal(size=(2, 8)), jnp.float32)
+    l1 = float(contrastive_lp_loss(pos, neg))
+    l2 = float(contrastive_lp_loss(pos + 1.0, neg))
+    assert l2 < l1
+
+
+def test_cross_entropy_weighting():
+    pos = jnp.asarray([1.0, -1.0], jnp.float32)
+    neg = jnp.asarray(RNG.normal(size=(2, 4)), jnp.float32)
+    base = float(cross_entropy_lp_loss(pos, neg))
+    # zero weights kill the positive term
+    w0 = float(weighted_cross_entropy_lp_loss(pos, neg,
+                                              jnp.zeros(2)))
+    w1 = float(weighted_cross_entropy_lp_loss(pos, neg, jnp.ones(2)))
+    assert abs(w1 - base) < 1e-6
+    assert w0 < w1 + 1e-6
+
+
+def test_neg_mask_respected():
+    pos = jnp.asarray([0.0], jnp.float32)
+    neg = jnp.asarray([[100.0, -100.0]], jnp.float32)
+    m_all = jnp.asarray([[True, True]])
+    m_first = jnp.asarray([[False, True]])  # mask out the hard negative
+    l_all = float(contrastive_lp_loss(pos, neg, m_all))
+    l_masked = float(contrastive_lp_loss(pos, neg, m_first))
+    assert l_masked < l_all
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_mrr_bounds_and_perfect_rank(b, k, seed):
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.normal(size=(b,)), jnp.float32)
+    neg = jnp.asarray(rng.normal(size=(b, k)), jnp.float32)
+    v = float(mrr(pos, neg))
+    assert 0.0 < v <= 1.0 + 1e-6
+    # fp32 mean: exact rank-1 MRR may round to 1 ± ulp at large b
+    assert abs(float(mrr(pos + 1000.0, neg)) - 1.0) < 1e-5
+    assert abs(float(hits_at_k(pos + 1000.0, neg, 1)) - 1.0) < 1e-5
+    assert abs(float(mrr(pos - 1000.0, neg)) - 1.0 / (k + 1)) < 1e-5

@@ -1,0 +1,73 @@
+"""Hypothesis property tests on the four negative samplers (Appendix A)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.negative_sampling import (in_batch_negatives, joint_negatives,
+                                          local_joint_negatives,
+                                          sampled_node_count,
+                                          uniform_negatives)
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(2, 1000),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_uniform_shapes_and_range(n, k, num_nodes, seed):
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, num_nodes, n)
+    neg, mask = uniform_negatives(rng, num_nodes, dst, k)
+    assert neg.shape == (n, k) and mask.shape == (n, k)
+    assert mask.all()
+    assert (neg >= 0).all() and (neg < num_nodes).all()
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(2, 1000),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_joint_shares_within_group(groups, k, num_nodes, seed):
+    rng = np.random.default_rng(seed)
+    n = groups * k
+    dst = rng.integers(0, num_nodes, n)
+    neg, mask = joint_negatives(rng, num_nodes, dst, k)
+    assert neg.shape == (n, k) and mask.all()
+    # every edge in a group of k shares the same negative set
+    for g in range(groups):
+        rows = neg[g * k:(g + 1) * k]
+        assert (rows == rows[0]).all()
+    # distinct groups are (almost surely) different for large num_nodes
+    if groups > 1 and num_nodes > 500:
+        assert not (neg[0] == neg[-1]).all() or k * groups <= 2
+
+
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_local_joint_only_local_nodes(groups, k, seed):
+    rng = np.random.default_rng(seed)
+    local = np.array([5, 17, 23, 42, 99])
+    dst = rng.integers(0, 1000, groups * k)
+    neg, mask = local_joint_negatives(rng, local, dst, k)
+    assert np.isin(neg, local).all()
+    assert mask.all()
+
+
+@given(st.integers(2, 64), st.integers(1, 80), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_in_batch_negatives_are_batch_dsts(n, k, seed):
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, 10000, n)
+    neg, mask = in_batch_negatives(rng, 10000, dst, k)
+    assert neg.shape == (n, k) and mask.shape == (n, k)
+    take = min(k, n - 1)
+    # the first `take` negatives of row i are other batch rows' dsts,
+    # and never the positive itself at the same position
+    for i in range(min(n, 10)):
+        assert np.isin(neg[i, :take], dst).all()
+        expect = dst[(i + 1 + np.arange(take)) % n]
+        np.testing.assert_array_equal(neg[i, :take], expect)
+
+
+def test_sampled_node_count_ordering():
+    """The data-movement ordering the paper argues: uniform > joint > in-batch."""
+    b, k = 1024, 32
+    assert sampled_node_count("uniform", b, k) == b * k
+    assert sampled_node_count("joint", b, k) == b
+    assert sampled_node_count("in_batch", b, k) == 0

@@ -1,0 +1,62 @@
+"""Optimizers converge on a quadratic; checkpoints round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.optim import adafactor, adamw, sgd, cosine_schedule
+
+
+@pytest.mark.parametrize("opt_fn", [adamw, sgd, adafactor])
+def test_optimizer_minimizes_quadratic(opt_fn):
+    opt = opt_fn()
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32),
+              "b": jnp.ones((8,), jnp.float32)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+
+    step = jnp.zeros((), jnp.int32)
+    l0 = float(loss_fn(params))
+    for i in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, step, 0.05)
+        step = step + 1
+    l1 = float(loss_fn(params))
+    assert l1 < 0.05 * l0, (opt.name, l0, l1)
+
+
+def test_optimizer_tuple_params():
+    """Params pytrees containing tuples must unzip correctly (regression
+    for the _Cell container)."""
+    opt = adamw()
+    params = ({"w": jnp.ones((4,))}, {"h": jnp.ones((2, 2))})
+    state = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    p2, s2 = opt.update(g, state, params, jnp.zeros((), jnp.int32), 0.1)
+    assert isinstance(p2, tuple) and len(p2) == 2
+    assert not np.allclose(np.asarray(p2[0]["w"]), 1.0)
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(jnp.asarray(0), 10, 100, 1.0))
+    lr_peak = float(cosine_schedule(jnp.asarray(10), 10, 100, 1.0))
+    lr_end = float(cosine_schedule(jnp.asarray(100), 10, 100, 1.0))
+    assert lr0 < lr_peak
+    assert abs(lr_peak - 1.0) < 1e-5
+    assert lr_end < 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": [jnp.ones((4,)), jnp.zeros((2, 2), jnp.int32)]}
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(tree, p)
+    back = load_pytree(p, like=tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
