@@ -1,6 +1,7 @@
-"""Shared benchmark plumbing: CSV emission in the required format."""
+"""Shared benchmark plumbing: CSV emission + JSON snapshots."""
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -17,6 +18,15 @@ class Bench:
 
     def header(self):
         print("name,us_per_call,derived", flush=True)
+
+    def to_json(self, path: str):
+        """Checked-in perf baselines (e.g. BENCH_pipeline.json) so future
+        PRs have a trajectory to diff against."""
+        rows = [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                for n, us, d in self.rows]
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
 
 
 def timed(fn, *args, repeat: int = 1, **kw):

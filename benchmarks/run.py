@@ -32,6 +32,8 @@ def main() -> None:
                     help="paper-scale (slow) sizes instead of CI sizes")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite keys, e.g. t4,t6")
+    ap.add_argument("--json", default=None,
+                    help="also write collected rows to this JSON file")
     args = ap.parse_args()
 
     keys = list(SUITES) if not args.only else args.only.split(",")
@@ -46,6 +48,9 @@ def main() -> None:
         mod.run(bench, fast=not args.full)
         print(f"# {key} done in {time.time() - t1:.1f}s", flush=True)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        bench.to_json(args.json)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,12 @@ def add_common_args(ap: argparse.ArgumentParser):
     ap.add_argument("--save-embed-path", default=None)
     ap.add_argument("--inference", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--device-features", action="store_true",
+                    help="keep feature tables device-resident and gather "
+                         "in-jit (ships only int32 index blocks per batch)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="double-buffer depth for the sampler thread "
+                         "(0 = synchronous)")
 
 
 def build_dataset(args):

@@ -14,6 +14,7 @@ from repro.checkpoint import load_trainer, save_trainer
 from repro.cli.common import (DATASET_TARGETS, add_common_args, build_dataset,
                               fanout_of, featureless_ntypes)
 from repro.core.embedding import SparseEmbedding
+from repro.core.feature_store import DeviceFeatureStore
 from repro.core.spot_target import exclude_eval_edges, split_edges
 from repro.gnn.model import model_meta_from_graph
 from repro.trainer import (GSgnnData, GSgnnLinkPredictionDataLoader,
@@ -47,9 +48,12 @@ def main():
     model = model_meta_from_graph(
         graph, args.model, hidden=args.hidden, num_layers=args.num_layers,
         extra_feat_dims={nt: emb_dim for nt in fl})
+    store = DeviceFeatureStore(graph) if args.device_features else None
     trainer = GSgnnLinkPredictionTrainer(
         model, target_etype, loss=args.loss, lr=args.lr,
-        sparse_embeds=sparse, evaluator=GSgnnMrrEvaluator())
+        sparse_embeds=sparse, evaluator=GSgnnMrrEvaluator(),
+        feature_store=store)
+    host_feats = store is None
     if args.restore_model_path:
         load_trainer(trainer, args.restore_model_path)
 
@@ -58,7 +62,7 @@ def main():
         test_loader = GSgnnLinkPredictionDataLoader(
             data, target_etype, te_e, fanout, args.batch_size,
             num_negatives=args.num_negatives, neg_method=args.neg_method,
-            shuffle=False)
+            shuffle=False, host_features=host_feats)
         mrr = trainer.evaluate(test_loader)
         print(f"test MRR: {mrr:.4f}")
         return
@@ -68,12 +72,14 @@ def main():
     loader = GSgnnLinkPredictionDataLoader(
         data, target_etype, tr_e, fanout, args.batch_size,
         num_negatives=args.num_negatives, neg_method=args.neg_method,
-        seed=args.seed, restrict_graph=train_graph)
+        seed=args.seed, restrict_graph=train_graph,
+        host_features=host_feats)
     val_loader = GSgnnLinkPredictionDataLoader(
         data, target_etype, va_e, fanout, args.batch_size,
         num_negatives=args.num_negatives, neg_method=args.neg_method,
-        shuffle=False)
-    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True)
+        shuffle=False, host_features=host_feats)
+    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True,
+                prefetch=args.prefetch)
     if args.save_model_path:
         save_trainer(trainer, args.save_model_path)
         print(f"saved model -> {args.save_model_path}")

@@ -16,6 +16,7 @@ from repro.checkpoint import load_trainer, save_trainer
 from repro.cli.common import (DATASET_TARGETS, add_common_args, build_dataset,
                               fanout_of, featureless_ntypes)
 from repro.core.embedding import SparseEmbedding
+from repro.core.feature_store import DeviceFeatureStore
 from repro.gnn.model import model_meta_from_graph
 from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
                            GSgnnNodeTrainer)
@@ -39,16 +40,20 @@ def main():
     model = model_meta_from_graph(
         graph, args.model, hidden=args.hidden, num_layers=args.num_layers,
         extra_feat_dims={nt: emb_dim for nt in fl})
+    store = DeviceFeatureStore(graph) if args.device_features else None
     trainer = GSgnnNodeTrainer(model, target_ntype, num_classes=num_classes,
                                lr=args.lr, sparse_embeds=sparse,
-                               evaluator=GSgnnAccEvaluator())
+                               evaluator=GSgnnAccEvaluator(),
+                               feature_store=store)
+    host_feats = store is None
     if args.restore_model_path:
         load_trainer(trainer, args.restore_model_path)
 
     if args.inference:
         loader = GSgnnNodeDataLoader(
             data, target_ntype, np.arange(graph.num_nodes[target_ntype]),
-            fanout, args.batch_size, shuffle=False)
+            fanout, args.batch_size, shuffle=False,
+            host_features=host_feats)
         embs = []
         for batch in loader:
             emb = trainer.embed_batch(batch)
@@ -59,15 +64,18 @@ def main():
             print(f"saved embeddings {out.shape} -> {args.save_embed_path}")
         acc = trainer.evaluate(GSgnnNodeDataLoader(
             data, target_ntype, test_idx, fanout, args.batch_size,
-            shuffle=False))
+            shuffle=False, host_features=host_feats))
         print(f"test accuracy: {acc:.4f}")
         return
 
     loader = GSgnnNodeDataLoader(data, target_ntype, train_idx, fanout,
-                                 args.batch_size, seed=args.seed)
+                                 args.batch_size, seed=args.seed,
+                                 host_features=host_feats)
     val_loader = GSgnnNodeDataLoader(data, target_ntype, val_idx, fanout,
-                                     args.batch_size, shuffle=False)
-    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True)
+                                     args.batch_size, shuffle=False,
+                                     host_features=host_feats)
+    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True,
+                prefetch=args.prefetch)
     if args.save_model_path:
         save_trainer(trainer, args.save_model_path)
         print(f"saved model -> {args.save_model_path}")

@@ -78,3 +78,12 @@ def with_sharding(mesh: Mesh, x, spec: P):
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
+
+
+def shard_rows(mesh: Mesh, x, axis: AxisLike = "data"):
+    """Place a (rows, dim) table on the mesh, rows split over ``axis``
+    (replicating if the axis does not divide the row count).  Gathers by
+    global row id against such a table lower to all-to-all/all-gather
+    collectives — the JAX analogue of DistDGL's kvstore feature pull."""
+    spec = best_spec(mesh, x.shape, (axis,) + (None,) * (x.ndim - 1))
+    return jax.device_put(x, NamedSharding(mesh, spec))

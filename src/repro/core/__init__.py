@@ -5,6 +5,7 @@ fixed-fanout sampling, sharded embedding tables), link-prediction
 machinery (scores / losses / negative samplers), and the built-in
 modeling techniques (LM+GNN, featureless-node handling, distillation).
 """
+from repro.core.feature_store import DeviceFeatureStore
 from repro.core.graph import HeteroGraph
 from repro.core.sampling import NeighborSampler, MFGBlock
 from repro.core.negative_sampling import (uniform_negatives, joint_negatives,
@@ -14,7 +15,7 @@ from repro.core.lp import (dot_score, distmult_score, cross_entropy_lp_loss,
                            weighted_cross_entropy_lp_loss, contrastive_lp_loss)
 
 __all__ = [
-    "HeteroGraph", "NeighborSampler", "MFGBlock",
+    "HeteroGraph", "NeighborSampler", "MFGBlock", "DeviceFeatureStore",
     "uniform_negatives", "joint_negatives", "local_joint_negatives",
     "in_batch_negatives",
     "dot_score", "distmult_score", "cross_entropy_lp_loss",

@@ -102,7 +102,11 @@ class PartitionedGraph:
     def save(self, path: str):
         os.makedirs(path, exist_ok=True)
         meta = {"num_parts": self.num_parts,
-                "num_nodes": self.full.num_nodes,
+                "num_nodes": {nt: int(n)
+                              for nt, n in self.full.num_nodes.items()},
+                # load() must discover assignment files from the *assigned*
+                # ntypes, which may be a strict subset of the graph's ntypes
+                "assigned_ntypes": sorted(self.assignments),
                 "etypes": [list(et) for et in self.full.etypes]}
         with open(os.path.join(path, "metadata.json"), "w") as f:
             json.dump(meta, f)
@@ -120,6 +124,14 @@ class PartitionedGraph:
     def load(path: str, graph: HeteroGraph) -> "PartitionedGraph":
         with open(os.path.join(path, "metadata.json")) as f:
             meta = json.load(f)
+        # legacy metadata (pre assigned_ntypes) iterated num_nodes, which
+        # breaks when assignments cover a subset of ntypes; fall back to
+        # the assignment files actually present on disk
+        ntypes = meta.get("assigned_ntypes")
+        if ntypes is None:
+            ntypes = sorted(
+                f[len("assign_"):-len(".npy")] for f in os.listdir(path)
+                if f.startswith("assign_") and f.endswith(".npy"))
         assignments = {nt: np.load(os.path.join(path, f"assign_{nt}.npy"))
-                       for nt in meta["num_nodes"]}
+                       for nt in ntypes}
         return PartitionedGraph(graph, assignments, meta["num_parts"])

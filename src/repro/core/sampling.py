@@ -13,8 +13,12 @@ so each MFG block only needs offsets + masks — neighbor *positions* are
 implicit, and the aggregation becomes a dense (num_dst, fanout, dim)
 masked mean: exactly the seg_aggr Pallas kernel's layout.
 
-Sampling stays on the host (numpy), mirroring DistDGL's CPU samplers; the
-padded blocks are what cross into jit.
+Sampling stays on the host (numpy), mirroring DistDGL's CPU samplers.
+What crosses into jit depends on the feed mode (docs/pipeline.md): the
+host path ships gathered feature blocks (``fetch_features``), the
+device-resident path ships only the int32 frontier index arrays and bool
+masks — raw features live on device in a
+``repro.core.feature_store.DeviceFeatureStore`` and are gathered in-jit.
 """
 from __future__ import annotations
 

@@ -9,19 +9,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_USE_PALLAS = False  # flipped by repro.kernels.seg_aggr.enable() on TPU
+_USE_PALLAS = False    # flipped by set_use_pallas(True) on TPU
+_INTERPRET = True      # pass interpret=False there too: compiled kernels
 
 
-def set_use_pallas(flag: bool):
-    global _USE_PALLAS
+def set_use_pallas(flag: bool, interpret: bool = True):
+    """Route aggregations through the Pallas kernels.  On real TPU call
+    ``set_use_pallas(True, interpret=False)``; interpret=True keeps the
+    (slow) interpreter path for kernel debugging on CPU."""
+    global _USE_PALLAS, _INTERPRET
     _USE_PALLAS = flag
+    _INTERPRET = interpret
+
+
+def pallas_enabled() -> bool:
+    return _USE_PALLAS
 
 
 def masked_mean(nbr_h, mask):
     """nbr_h: (n, f, d), mask: (n, f) -> (n, d)."""
     if _USE_PALLAS:
         from repro.kernels.seg_aggr.ops import seg_aggr
-        return seg_aggr(nbr_h, mask, reduce="mean")
+        return seg_aggr(nbr_h, mask, reduce="mean", interpret=_INTERPRET)
     m = mask[..., None].astype(nbr_h.dtype)
     s = (nbr_h * m).sum(axis=1)
     return s / jnp.maximum(m.sum(axis=1), 1.0)
@@ -30,8 +39,28 @@ def masked_mean(nbr_h, mask):
 def masked_sum(nbr_h, mask):
     if _USE_PALLAS:
         from repro.kernels.seg_aggr.ops import seg_aggr
-        return seg_aggr(nbr_h, mask, reduce="sum")
+        return seg_aggr(nbr_h, mask, reduce="sum", interpret=_INTERPRET)
     return (nbr_h * mask[..., None].astype(nbr_h.dtype)).sum(axis=1)
+
+
+def fanout_indices(offset: int, num_dst: int, fanout: int):
+    """Row indices of an edge block's sampled neighbors in the frontier:
+    the sampler lays them out contiguously at ``offset`` (see
+    repro.core.sampling), so the gather index block is a reshaped iota."""
+    idx = offset + jnp.arange(num_dst * fanout, dtype=jnp.int32)
+    return idx.reshape(num_dst, fanout)
+
+
+def gather_masked_agg(table, idx, mask, reduce: str = "mean"):
+    """Fused ``table[idx]`` gather + masked fanout reduce: (N, d) x (n, f)
+    -> (n, d) without materializing the (n, f, d) intermediate in HBM
+    (the Pallas ``gather_seg_aggr`` kernel; jnp oracle on CPU)."""
+    if _USE_PALLAS:
+        from repro.kernels.seg_aggr.ops import gather_seg_aggr
+        return gather_seg_aggr(table, idx, mask, reduce=reduce,
+                               interpret=_INTERPRET)
+    from repro.kernels.seg_aggr.ref import gather_seg_aggr_ref
+    return gather_seg_aggr_ref(table, idx, mask, reduce)
 
 
 def masked_max(nbr_h, mask):

@@ -19,7 +19,9 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.gnn.aggregate import masked_mean, masked_softmax, masked_sum
+from repro.gnn.aggregate import (fanout_indices, gather_masked_agg,
+                                 masked_mean, masked_softmax, masked_sum,
+                                 pallas_enabled)
 from repro.gnn.schema import LayerSchema
 
 
@@ -28,6 +30,19 @@ def _nbr_rows(src_h, em):
     rows = jax.lax.slice_in_dim(h, em.src_offset,
                                 em.src_offset + em.num_dst * em.fanout, axis=0)
     return rows.reshape(em.num_dst, em.fanout, h.shape[-1])
+
+
+def _agg_fanout(src_h, em, mask, reduce: str):
+    """Aggregate an edge block's fanout rows.  With the Pallas kernels
+    enabled this is the fused gather_seg_aggr (no (num_dst, fanout, d)
+    intermediate in HBM); on the default XLA path the old contiguous
+    slice + masked reduce is kept — a static slice is free, whereas a row
+    gather is not guaranteed to simplify back to one."""
+    if pallas_enabled():
+        idx = fanout_indices(em.src_offset, em.num_dst, em.fanout)
+        return gather_masked_agg(src_h[em.src_t], idx, mask, reduce)
+    nbr = _nbr_rows(src_h, em)
+    return (masked_mean if reduce == "mean" else masked_sum)(nbr, mask)
 
 
 def _self_rows(src_h, lsch: LayerSchema, nt: str):
@@ -61,11 +76,10 @@ def gcn_init(rng, ntypes, etypes, d_in, d_out, nheads=1):
 def gcn_apply(params, lsch: LayerSchema, arrays_l, src_h):
     out = {}
     for em in lsch.edges:
-        nbr = _nbr_rows(src_h, em)                     # (n, f, d)
         mask = arrays_l["masks"][em.ekey]
         # include self in the mean (Â = A + I normalization, fixed-fanout)
         selfh = _self_rows(src_h, lsch, em.dst_t)
-        s = masked_sum(nbr, mask) + selfh
+        s = _agg_fanout(src_h, em, mask, "sum") + selfh
         cnt = mask.sum(axis=1).astype(s.dtype) + 1.0
         agg = s / cnt[:, None]
         msg = agg @ params["w"][em.ekey]
@@ -90,8 +104,7 @@ def sage_init(rng, ntypes, etypes, d_in, d_out, nheads=1):
 def sage_apply(params, lsch: LayerSchema, arrays_l, src_h):
     out = {}
     for em in lsch.edges:
-        nbr = _nbr_rows(src_h, em)
-        agg = masked_mean(nbr, arrays_l["masks"][em.ekey])
+        agg = _agg_fanout(src_h, em, arrays_l["masks"][em.ekey], "mean")
         out[em.dst_t] = out.get(em.dst_t, 0.0) + agg @ params["w_nbr"][em.ekey]
     res = {}
     for nt, v in out.items():
@@ -158,8 +171,7 @@ def rgcn_init(rng, ntypes, etypes, d_in, d_out, nheads=1):
 def rgcn_apply(params, lsch: LayerSchema, arrays_l, src_h):
     out = {}
     for em in lsch.edges:
-        nbr = _nbr_rows(src_h, em)
-        agg = masked_mean(nbr, arrays_l["masks"][em.ekey])
+        agg = _agg_fanout(src_h, em, arrays_l["masks"][em.ekey], "mean")
         out[em.dst_t] = out.get(em.dst_t, 0.0) + agg @ params["w_rel"][em.ekey]
     res = {}
     for nt in dict(lsch.dst_counts):

@@ -9,9 +9,18 @@ import functools
 
 import jax
 
-from repro.kernels.seg_aggr.kernel import seg_aggr_pallas
+from repro.kernels.seg_aggr.kernel import (gather_seg_aggr_pallas,
+                                           seg_aggr_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("reduce", "interpret"))
 def seg_aggr(nbr, mask, reduce: str = "mean", interpret: bool = True):
     return seg_aggr_pallas(nbr, mask, reduce=reduce, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce", "interpret"))
+def gather_seg_aggr(table, idx, mask, reduce: str = "mean",
+                    interpret: bool = True):
+    """Fused table[idx] gather + masked fanout reduce; see kernel.py."""
+    return gather_seg_aggr_pallas(table, idx, mask, reduce=reduce,
+                                  interpret=interpret)

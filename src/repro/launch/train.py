@@ -58,6 +58,9 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="batches built ahead on a host thread while the "
+                         "device runs the current step (0 = synchronous)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,8 +74,13 @@ def main():
     stepno = jnp.zeros((), jnp.int32)
     losses = []
     t0 = time.time()
-    for i in range(args.steps):
-        batch = synth_batch(cfg, rng, args.batch_size, args.seq_len)
+    # overlap host-side batch construction with the device step
+    from repro.trainer.dataloading import PrefetchIterator
+    batches = (synth_batch(cfg, rng, args.batch_size, args.seq_len)
+               for _ in range(args.steps))
+    if args.prefetch > 0:
+        batches = iter(PrefetchIterator(batches, depth=args.prefetch))
+    for i, batch in enumerate(batches):
         params, opt_state, stepno, metrics = step_fn(params, opt_state,
                                                      stepno, batch)
         losses.append(float(metrics["lm_loss"]))

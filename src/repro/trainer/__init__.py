@@ -1,6 +1,7 @@
 from repro.trainer.dataloading import (GSgnnData, GSgnnNodeDataLoader,
                                        GSgnnEdgeDataLoader,
-                                       GSgnnLinkPredictionDataLoader)
+                                       GSgnnLinkPredictionDataLoader,
+                                       PrefetchIterator, host_transfer_bytes)
 from repro.trainer.trainers import (GSgnnNodeTrainer, GSgnnEdgeTrainer,
                                     GSgnnLinkPredictionTrainer)
 from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
@@ -9,6 +10,7 @@ from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
 __all__ = [
     "GSgnnData", "GSgnnNodeDataLoader", "GSgnnEdgeDataLoader",
     "GSgnnLinkPredictionDataLoader",
+    "PrefetchIterator", "host_transfer_bytes",
     "GSgnnNodeTrainer", "GSgnnEdgeTrainer", "GSgnnLinkPredictionTrainer",
     "GSgnnAccEvaluator", "GSgnnMrrEvaluator", "GSgnnRegressionEvaluator",
 ]

@@ -5,11 +5,26 @@ yields static-shape batches: a hashable BlockSchema (jit cache key) plus
 traced arrays.  The LinkPredictionDataLoader is separate from the edge
 loader (as in the paper) because it owns negative construction and the
 seed-role bookkeeping that makes shared-negative methods cheap.
+
+Two feature-delivery modes (docs/pipeline.md):
+
+- ``host_features=True`` (DistDGL-style, the default): the loader gathers
+  raw features host-side via ``fetch_features`` and every batch carries a
+  ``(frontier_rows, feat_dim)`` float block across host->device.
+- ``host_features=False`` (device-resident pipeline): batches carry only
+  index/mask blocks; the trainer gathers from a ``DeviceFeatureStore``
+  inside its jitted step, so only small int32 arrays cross the boundary.
+
+``PrefetchIterator`` double-buffers either mode: a sampler thread produces
+batch t+1 while the device runs step t, hiding the CPU sampling cost that
+GraphStorm attributes to DistDGL's separate sampler processes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+import queue
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,9 +65,11 @@ class GSgnnNodeDataLoader(_BaseLoader):
     def __init__(self, data: GSgnnData, target_ntype: str,
                  seed_ids: np.ndarray, fanout: Sequence[int],
                  batch_size: int, shuffle: bool = True, seed: int = 0,
-                 restrict_graph: Optional[HeteroGraph] = None):
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 host_features: bool = True):
         self.data = data
         self.graph = restrict_graph or data.graph
+        self.host_features = host_features
         self.target_ntype = target_ntype
         self.seed_ids = np.asarray(seed_ids, np.int64)
         self.fanout = list(fanout)
@@ -70,8 +87,9 @@ class GSgnnNodeDataLoader(_BaseLoader):
             idx = order[i * self.batch_size:(i + 1) * self.batch_size]
             ids, mask = pad_seeds(self.seed_ids[idx], self.batch_size)
             mb = self.sampler.sample({self.target_ntype: ids})
-            feats = fetch_features(self.graph, mb.input_nodes,
-                                   self.data.feat_field)
+            feats = (fetch_features(self.graph, mb.input_nodes,
+                                    self.data.feat_field)
+                     if self.host_features else {})
             batch = {
                 "schema": schema_of(mb),
                 "arrays": arrays_of(mb, feats),
@@ -90,9 +108,11 @@ class GSgnnEdgeDataLoader(_BaseLoader):
     def __init__(self, data: GSgnnData, target_etype: EType,
                  seed_eids: np.ndarray, fanout: Sequence[int],
                  batch_size: int, labels: Optional[np.ndarray] = None,
-                 shuffle: bool = True, seed: int = 0):
+                 shuffle: bool = True, seed: int = 0,
+                 host_features: bool = True):
         self.data = data
         self.graph = data.graph
+        self.host_features = host_features
         self.etype = target_etype
         self.seed_eids = np.asarray(seed_eids, np.int64)
         self.fanout = list(fanout)
@@ -115,8 +135,9 @@ class GSgnnEdgeDataLoader(_BaseLoader):
             dst, _ = pad_seeds(d_all[eids], self.batch_size)
             seeds, roles = _role_concat([(src_t, src), (dst_t, dst)])
             mb = self.sampler.sample(seeds)
-            feats = fetch_features(self.graph, mb.input_nodes,
-                                   self.data.feat_field)
+            feats = (fetch_features(self.graph, mb.input_nodes,
+                                    self.data.feat_field)
+                     if self.host_features else {})
             batch = {
                 "schema": schema_of(mb),
                 "arrays": arrays_of(mb, feats),
@@ -143,9 +164,11 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
                  neg_method: str = "joint", shuffle: bool = True,
                  seed: int = 0, exclude_target_edges: bool = True,
                  restrict_graph: Optional[HeteroGraph] = None,
-                 local_nodes: Optional[np.ndarray] = None):
+                 local_nodes: Optional[np.ndarray] = None,
+                 host_features: bool = True):
         self.data = data
         self.graph = restrict_graph or data.graph
+        self.host_features = host_features
         self.etype = target_etype
         self.seed_eids = np.asarray(seed_eids, np.int64)
         self.fanout = list(fanout)
@@ -208,8 +231,9 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
             excl = (batch_exclusions(self.etype, src, dst)
                     if self.exclude_target_edges else None)
             mb = self.sampler.sample(seeds, exclude_pairs=excl)
-            feats = fetch_features(self.graph, mb.input_nodes,
-                                   self.data.feat_field)
+            feats = (fetch_features(self.graph, mb.input_nodes,
+                                    self.data.feat_field)
+                     if self.host_features else {})
             yield {
                 "schema": schema_of(mb),
                 "arrays": arrays_of(mb, feats),
@@ -220,6 +244,101 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
                 "num_negatives": self.k,
                 "sampled_neg_nodes": len(neg_seed),
             }
+
+
+class PrefetchIterator:
+    """Double-buffered loader wrapper: a daemon sampler thread runs the
+    wrapped iterable and keeps up to ``depth`` ready batches in a queue,
+    so CPU sampling for batch t+1 overlaps the device running step t.
+
+    ``transfer`` (optional) runs in the producer thread — e.g. converting
+    index blocks to device arrays so the H2D copy also overlaps compute.
+    Exceptions in the producer re-raise at the consumer's next ``next()``.
+    """
+
+    _POLL_S = 0.1
+
+    def __init__(self, iterable, depth: int = 2,
+                 transfer: Optional[Callable] = None):
+        assert depth >= 1
+        self.iterable = iterable
+        self.depth = depth
+        self.transfer = transfer
+
+    def __len__(self):
+        return len(self.iterable)
+
+    def __iter__(self) -> Iterator:
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+
+        def _put(item) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=self._POLL_S)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer():
+            try:
+                for item in self.iterable:
+                    if self.transfer is not None:
+                        item = self.transfer(item)
+                    if not _put(("item", item)):
+                        return
+            except BaseException as e:  # noqa: BLE001 - re-raised consumer-side
+                _put(("err", e))
+            else:
+                _put(("done", None))
+
+        thread = threading.Thread(target=producer, daemon=True,
+                                  name="prefetch-sampler")
+        thread.start()
+        try:
+            while True:
+                kind, value = q.get()
+                if kind == "done":
+                    return
+                if kind == "err":
+                    raise value
+                yield value
+        finally:
+            stop.set()  # unblock the producer if the consumer bails early
+
+
+def host_transfer_bytes(batch, store_ntypes: Sequence[str] = (),
+                        sparse_dims: Optional[Dict[str, int]] = None) -> int:
+    """Bytes this batch moves host->device when fed to a trainer step.
+
+    Counts the numpy payloads that become jit inputs: gathered features,
+    per-layer masks and Δt, labels/seed masks, the int32 index blocks for
+    ntypes served by a DeviceFeatureStore (``store_ntypes``), and the
+    float32 rows the trainer's SparseEmbedding lookup ships for
+    featureless ntypes (``sparse_dims``: ntype -> embed dim; those rows
+    cross on *both* feed paths).  Device-resident tables themselves never
+    recross the boundary.
+    """
+    total = 0
+    sparse_dims = sparse_dims or {}
+    for f in batch["arrays"]["feats"].values():
+        total += int(np.asarray(f).nbytes)
+    for layer in batch["arrays"]["masks"]:
+        for m in layer.values():
+            total += int(np.asarray(m).nbytes)
+    for layer in batch["arrays"].get("delta_t", []):
+        for dt in layer.values():
+            total += int(np.asarray(dt).nbytes)
+    for nt, ids in batch["input_nodes"].items():
+        if nt in store_ntypes:
+            total += len(ids) * 4  # int32 index block
+        elif nt in sparse_dims and nt not in batch["arrays"]["feats"]:
+            total += len(ids) * sparse_dims[nt] * 4  # looked-up f32 rows
+    for key in ("labels", "seed_mask", "neg_mask"):
+        if key in batch:
+            total += int(np.asarray(batch[key]).nbytes)
+    return total
 
 
 def _role_concat(role_list: List[Tuple[str, np.ndarray]]):

@@ -6,6 +6,14 @@ BlockSchema (schemas are static per loader config, so in practice one),
 and an evaluator.  The same trainer runs on one device or a mesh — the
 step function is jit-compiled against whatever device layout the arrays
 carry (GraphStorm's "no code change across hardware" property).
+
+Device-resident pipeline (docs/pipeline.md): pass ``feature_store=``
+a ``repro.core.feature_store.DeviceFeatureStore`` and pair it with loaders
+built with ``host_features=False``.  Raw-feature gathers then happen
+*inside* the jitted step from device-resident tables, so a batch ships
+only int32 index blocks and bool masks host->device.  The step donates
+params/opt_state buffers on backends that support donation (in-place
+updates, no copy of the model per step).
 """
 from __future__ import annotations
 
@@ -41,7 +49,7 @@ class _TrainerBase:
     def __init__(self, model: GSgnnModel, task: str, out_dim: int = 1,
                  lr: float = 1e-3, rng=None,
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
-                 evaluator=None):
+                 evaluator=None, feature_store=None):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(rng)
         self.model = model
@@ -56,20 +64,44 @@ class _TrainerBase:
         self.lr = lr
         self.stepno = jnp.zeros((), jnp.int32)
         self.sparse_embeds = sparse_embeds or {}
+        self.feature_store = feature_store
         self.evaluator = evaluator
         self._steps: Dict = {}
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
-    def _feats_for(self, batch) -> Tuple[Dict, Dict]:
-        """Compose input features: raw graph feats + embedding-table rows
-        for featureless ntypes. Returns (feats, emb_ids)."""
+    def _feats_for(self, batch) -> Tuple[Dict, Dict, Dict]:
+        """Compose input features: host-gathered raw feats + embedding-table
+        rows for featureless ntypes + int32 index blocks for ntypes served
+        by the device feature store. Returns (feats, emb_ids, gather_idx);
+        the store gather itself happens inside the jitted step."""
         feats = dict(batch["arrays"]["feats"])
         emb_ids = {}
+        gather_idx = {}
+        store = self.feature_store
+        expected = dict(self.model.feat_dims)
         for nt, ids in batch["input_nodes"].items():
-            if nt not in feats and nt in self.sparse_embeds:
+            if nt in feats:
+                continue
+            if store is not None and nt in store:
+                gather_idx[nt] = store.device_ids(ids)
+            elif nt in self.sparse_embeds:
                 feats[nt] = self.sparse_embeds[nt].lookup(ids)
                 emb_ids[nt] = ids
+            elif nt in expected:
+                raise ValueError(
+                    f"ntype {nt!r} has no feature source: the batch carries "
+                    f"no host-gathered feats (loader host_features=False?) "
+                    f"and the trainer has no feature_store/sparse_embeds "
+                    f"entry for it — pass feature_store= (with matching "
+                    f"feat_field) when loaders use host_features=False")
+        return feats, emb_ids, gather_idx
+
+    def _eval_feats(self, batch) -> Tuple[Dict, Dict]:
+        """Eval-path features: store gathers run eagerly (still jitted)."""
+        feats, emb_ids, gather_idx = self._feats_for(batch)
+        if gather_idx:
+            feats.update(self.feature_store.gather(gather_idx))
         return feats, emb_ids
 
     def _apply_sparse(self, emb_ids: Dict, feat_grads: Dict):
@@ -81,23 +113,30 @@ class _TrainerBase:
         raise NotImplementedError
 
     def _make_step(self, schema, roles=None, neg_shape=None, k=0):
-        def loss_fn(params, feats, arrays, aux_in):
+        def loss_fn(params, feats, arrays, aux_in, gather_idx, tables):
             arr = dict(arrays)
-            arr["feats"] = feats
+            # device-resident path: gather raw features from the resident
+            # tables by the batch's int32 frontier indices, in-jit (fuses
+            # with the input encoder; tables take no gradient)
+            gathered = {nt: tables[nt][gather_idx[nt]] for nt in gather_idx}
+            arr["feats"] = {**gathered, **feats}
             emb = gnn_apply_blocks(params["gnn"], self.model, schema, arr)
             return self._task_loss(params, emb, aux_in,
                                    roles=roles, neg_shape=neg_shape, k=k)
 
-        def step(params, opt_state, stepno, feats, arrays, aux_in):
+        def step(params, opt_state, stepno, feats, arrays, aux_in,
+                 gather_idx, tables):
             (loss, out), (gp, gf) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1), has_aux=True)(params, feats, arrays,
-                                                       aux_in)
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, feats, arrays, aux_in, gather_idx, tables)
             lr = cosine_schedule(stepno, 10, 10000, self.lr)
             params, opt_state = self.optimizer.update(gp, opt_state, params,
                                                       stepno, lr)
             return params, opt_state, stepno + 1, loss, out, gf
 
-        return jax.jit(step)
+        # donate params/opt_state/stepno: they are consumed and returned
+        # updated, so XLA can alias the buffers (no per-step model copy)
+        return jax.jit(step, donate_argnums=(0, 1, 2))
 
     def _step_for(self, batch):
         key = (batch["schema"], batch.get("neg_shape"),
@@ -112,21 +151,28 @@ class _TrainerBase:
 
     # ------------------------------------------------------------------
     def fit_batch(self, batch):
-        feats, emb_ids = self._feats_for(batch)
+        feats, emb_ids, gather_idx = self._feats_for(batch)
         step = self._step_for(batch)
         aux_in = self._aux_inputs(batch)
+        tables = self.feature_store.tables if gather_idx else {}
         self.params, self.opt_state, self.stepno, loss, out, gf = step(
             self.params, self.opt_state, self.stepno, feats,
-            batch["arrays"], aux_in)
+            batch["arrays"], aux_in, gather_idx, tables)
         self._apply_sparse(emb_ids, gf)
         return float(loss), out
 
     def fit(self, train_dataloader, val_dataloader=None, num_epochs: int = 1,
-            log_every: int = 0, verbose: bool = False):
+            log_every: int = 0, verbose: bool = False, prefetch: int = 2):
+        """``prefetch > 0`` double-buffers the loader: a sampler thread
+        builds batch t+1 while step t runs (0 = synchronous, the old
+        behavior)."""
+        from repro.trainer.dataloading import PrefetchIterator
         for epoch in range(num_epochs):
             t0 = time.time()
             losses = []
-            for bi, batch in enumerate(train_dataloader):
+            epoch_iter = (PrefetchIterator(train_dataloader, depth=prefetch)
+                          if prefetch > 0 else train_dataloader)
+            for bi, batch in enumerate(epoch_iter):
                 loss, _ = self.fit_batch(batch)
                 losses.append(loss)
                 if log_every and (bi + 1) % log_every == 0 and verbose:
@@ -170,7 +216,7 @@ class GSgnnNodeTrainer(_TrainerBase):
         return loss, out
 
     def eval_batch(self, batch):
-        feats, _ = self._feats_for(batch)
+        feats, _ = self._eval_feats(batch)
         emb = self.embed_batch(batch, feats)
         out = decoder_apply(self.params["dec"], self.task, emb,
                             target_ntype=self.target_ntype)
@@ -178,7 +224,7 @@ class GSgnnNodeTrainer(_TrainerBase):
 
     def embed_batch(self, batch, feats=None):
         if feats is None:
-            feats, _ = self._feats_for(batch)
+            feats, _ = self._eval_feats(batch)
         arr = dict(batch["arrays"])
         arr["feats"] = feats
         return gnn_apply_blocks(self.params["gnn"], self.model,
@@ -209,7 +255,7 @@ class GSgnnEdgeTrainer(_TrainerBase):
         return loss, out
 
     def eval_batch(self, batch):
-        feats, _ = self._feats_for(batch)
+        feats, _ = self._eval_feats(batch)
         arr = dict(batch["arrays"])
         arr["feats"] = feats
         emb = gnn_apply_blocks(self.params["gnn"], self.model,
@@ -284,7 +330,7 @@ class GSgnnLinkPredictionTrainer(_TrainerBase):
         return loss, (pos, nsc)
 
     def eval_batch(self, batch):
-        feats, _ = self._feats_for(batch)
+        feats, _ = self._eval_feats(batch)
         arr = dict(batch["arrays"])
         arr["feats"] = feats
         emb = gnn_apply_blocks(self.params["gnn"], self.model,

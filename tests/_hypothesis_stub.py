@@ -1,0 +1,112 @@
+"""Minimal deterministic fallback for the ``hypothesis`` API surface the
+property tests use (``given`` / ``settings`` / a few strategies).
+
+CI installs real hypothesis via ``pip install -e ".[test]"``; this stub keeps
+the property tests *running* (with a fixed set of pseudo-random examples per
+test, derived from a per-test seed) in environments where hypothesis is not
+available, instead of failing collection or silently skipping coverage.
+"""
+from __future__ import annotations
+
+import string
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def example(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Tuples(_Strategy):
+    def __init__(self, parts):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Text(_Strategy):
+    _ALPHABET = string.ascii_letters + string.digits + "_-"
+
+    def __init__(self, min_size, max_size):
+        self.min_size, self.max_size = min_size, max_size
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return "".join(rng.choice(list(self._ALPHABET), size=max(n, 1))[:n])
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size, max_size, unique):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+        self.unique = unique
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        out, seen = [], set()
+        attempts = 0
+        while len(out) < n and attempts < 50 * (n + 1):
+            v = self.elem.example(rng)
+            attempts += 1
+            if self.unique:
+                key = repr(v)
+                if key in seen:
+                    continue
+                seen.add(key)
+            out.append(v)
+        return out
+
+
+class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Tuples(parts)
+
+    @staticmethod
+    def text(min_size=0, max_size=16):
+        return _Text(min_size, max_size)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=16, unique=False):
+        return _Lists(elem, min_size, max_size, unique)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        max_examples = getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+        def wrapper(*args, **kwargs):
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}".encode())
+            for i in range(max_examples):
+                rng = np.random.default_rng((seed, i))
+                example = [s.example(rng) for s in strats]
+                fn(*args, *example, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -4,3 +4,14 @@ import sys
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see one device; only launch/dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# When hypothesis is absent (CI installs it via the [test] extra), serve
+# the bundled deterministic stub under its name so property-test modules
+# keep a plain `from hypothesis import ...`.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

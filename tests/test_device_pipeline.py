@@ -1,0 +1,160 @@
+"""Device-resident minibatch pipeline: feature store, prefetch, parity.
+
+The contract under test (docs/pipeline.md): training with
+``DeviceFeatureStore`` + ``host_features=False`` loaders must be
+numerically identical to the host-gather path — only the *location* of the
+raw-feature gather moves (host numpy -> in-jit device gather), not the
+math — while the per-batch host->device payload drops to index/mask
+blocks.
+"""
+import numpy as np
+import pytest
+
+from repro.core.embedding import SparseEmbedding
+from repro.core.feature_store import DeviceFeatureStore
+from repro.data import make_mag_like
+from repro.gnn.model import model_meta_from_graph
+from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
+                           GSgnnNodeTrainer, PrefetchIterator,
+                           host_transfer_bytes)
+
+
+@pytest.fixture(scope="module")
+def mag():
+    return make_mag_like(n_paper=120, n_author=60, seed=0)
+
+
+def _trainer(g, store=None):
+    extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+    model = model_meta_from_graph(g, "rgcn", 32, 2, extra_feat_dims=extra)
+    sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+    return GSgnnNodeTrainer(model, "paper", num_classes=8, lr=1e-2,
+                            sparse_embeds=sparse,
+                            evaluator=GSgnnAccEvaluator(),
+                            feature_store=store)
+
+
+def _loader(g, host_features):
+    data = GSgnnData(g)
+    tr, _, _ = data.train_val_test_nodes("paper")
+    return GSgnnNodeDataLoader(data, "paper", tr, [4, 4], 32, shuffle=False,
+                               seed=0, host_features=host_features)
+
+
+def test_device_path_matches_host_path(mag):
+    """Same seeds, same schedule: losses must agree to float tolerance."""
+    host_tr = _trainer(mag)
+    dev_tr = _trainer(mag, store=DeviceFeatureStore(mag))
+    host_losses, dev_losses = [], []
+    for batch in _loader(mag, host_features=True):
+        host_losses.append(host_tr.fit_batch(batch)[0])
+    for batch in _loader(mag, host_features=False):
+        dev_losses.append(dev_tr.fit_batch(batch)[0])
+    np.testing.assert_allclose(host_losses, dev_losses, rtol=1e-4, atol=1e-5)
+
+
+def test_device_batches_ship_fewer_bytes(mag):
+    store = DeviceFeatureStore(mag)
+    host_b = next(iter(_loader(mag, host_features=True)))
+    dev_b = next(iter(_loader(mag, host_features=False)))
+    host_bytes = host_transfer_bytes(host_b)
+    dev_bytes = host_transfer_bytes(dev_b, store_ntypes=store.ntypes)
+    assert dev_b["arrays"]["feats"] == {}
+    assert dev_bytes < host_bytes / 2, (dev_bytes, host_bytes)
+
+
+def test_device_eval_matches_host_eval(mag):
+    """Eval path (eager store gather) parity after identical training."""
+    data = GSgnnData(mag)
+    _, va, _ = data.train_val_test_nodes("paper")
+    host_tr = _trainer(mag)
+    dev_tr = _trainer(mag, store=DeviceFeatureStore(mag))
+    for batch in _loader(mag, host_features=True):
+        host_tr.fit_batch(batch)
+    for batch in _loader(mag, host_features=False):
+        dev_tr.fit_batch(batch)
+    val_host = GSgnnNodeDataLoader(data, "paper", va, [4, 4], 32,
+                                   shuffle=False, host_features=True)
+    val_dev = GSgnnNodeDataLoader(data, "paper", va, [4, 4], 32,
+                                  shuffle=False, host_features=False)
+    assert host_tr.evaluate(val_host) == pytest.approx(
+        dev_tr.evaluate(val_dev), abs=1e-6)
+
+
+def test_missing_feature_source_raises_helpfully(mag):
+    """host_features=False loaders without a feature_store must fail with
+    guidance, not a bare KeyError deep inside the GNN apply."""
+    trainer = _trainer(mag, store=None)
+    batch = next(iter(_loader(mag, host_features=False)))
+    with pytest.raises(ValueError, match="feature_store"):
+        trainer.fit_batch(batch)
+
+
+def test_device_ids_rejects_int32_overflow():
+    with pytest.raises(ValueError, match="int32"):
+        DeviceFeatureStore.device_ids(np.array([0, 2 ** 31]))
+
+
+def test_pallas_toggle_layer_parity(mag):
+    """sage layer output must be identical with the fused Pallas path
+    (interpret mode) and the default slice+reduce path."""
+    from repro.gnn import aggregate
+    trainer = _trainer(mag, store=DeviceFeatureStore(mag))
+    batch = next(iter(_loader(mag, host_features=False)))
+    default = np.asarray(trainer.embed_batch(batch)["paper"])
+    aggregate.set_use_pallas(True, interpret=True)
+    try:
+        fused = np.asarray(trainer.embed_batch(batch)["paper"])
+    finally:
+        aggregate.set_use_pallas(False)
+    np.testing.assert_allclose(default, fused, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PrefetchIterator semantics
+# ---------------------------------------------------------------------------
+def test_prefetch_preserves_order_and_len():
+    items = list(range(57))
+    out = list(PrefetchIterator(items, depth=3))
+    assert out == items
+    assert len(PrefetchIterator(items, depth=3)) == len(items)
+
+
+def test_prefetch_applies_transfer_in_producer():
+    out = list(PrefetchIterator(range(10), depth=2, transfer=lambda x: x * 2))
+    assert out == [2 * i for i in range(10)]
+
+
+def test_prefetch_propagates_producer_errors():
+    def gen():
+        yield 1
+        raise RuntimeError("sampler died")
+
+    it = iter(PrefetchIterator(gen(), depth=2))
+    assert next(it) == 1
+    with pytest.raises(RuntimeError, match="sampler died"):
+        list(it)
+
+
+def test_prefetch_consumer_can_bail_early():
+    """Abandoning iteration must not deadlock the producer thread."""
+    it = iter(PrefetchIterator(range(10_000), depth=2))
+    for _ in range(3):
+        next(it)
+    it.close()  # generator close -> stop event -> producer exits
+
+
+def test_prefetch_with_dataloader_matches_sync(mag):
+    loader = _loader(mag, host_features=True)
+    sync = [b["seeds"] for b in loader]
+    pref = [b["seeds"] for b in PrefetchIterator(loader, depth=2)]
+    assert len(sync) == len(pref)
+    for a, b in zip(sync, pref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fit_with_prefetch_converges(mag):
+    trainer = _trainer(mag, store=DeviceFeatureStore(mag))
+    loader = _loader(mag, host_features=False)
+    hist = trainer.fit(loader, num_epochs=3, prefetch=2)
+    assert hist[-1]["loss"] < hist[0]["loss"]

@@ -1,0 +1,80 @@
+"""Regression tests: PartitionedGraph.save/load round-trip.
+
+The original load() discovered assignment files by iterating
+``meta["num_nodes"]`` (every ntype in the graph) while save() only wrote
+files for the *assigned* ntypes — a graph with an ntype that never appears
+as an edge destination round-tripped into FileNotFoundError.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.dist_graph import PartitionedGraph
+from repro.core.graph import HeteroGraph
+from repro.data import make_mag_like
+from repro.gconstruct.partition import ldg_partition
+
+
+def _roundtrip(pg, g, tmp_path):
+    d = str(tmp_path / "parts")
+    pg.save(d)
+    return PartitionedGraph.load(d, g)
+
+
+def test_save_load_roundtrip_full(tmp_path):
+    g = make_mag_like(n_paper=60, n_author=30, seed=0)
+    pg = PartitionedGraph(g, ldg_partition(g, 3, seed=0), 3)
+    pg2 = _roundtrip(pg, g, tmp_path)
+    assert pg2.num_parts == pg.num_parts
+    assert sorted(pg2.assignments) == sorted(pg.assignments)
+    for nt, a in pg.assignments.items():
+        np.testing.assert_array_equal(pg2.assignments[nt], a)
+    # per-partition local node sets and edge lists reconstruct identically
+    for p, p2 in zip(pg.partitions, pg2.partitions):
+        for nt in p.local_nodes:
+            np.testing.assert_array_equal(p.local_nodes[nt],
+                                          p2.local_nodes[nt])
+        for et, (s, d) in p.edges.items():
+            np.testing.assert_array_equal(s, p2.edges[et][0])
+            np.testing.assert_array_equal(d, p2.edges[et][1])
+
+
+def test_save_load_partial_assignments(tmp_path):
+    """Assignments covering a subset of ntypes must round-trip (the bug)."""
+    g = HeteroGraph(
+        {"a": 6, "b": 4, "island": 3},  # "island" has no edges at all
+        {("a", "r", "b"): (np.array([0, 1, 2, 3]), np.array([0, 1, 2, 3]))})
+    assign = {"a": np.array([0, 0, 1, 1, 0, 1]),
+              "b": np.array([0, 1, 0, 1])}
+    pg = PartitionedGraph(g, assign, 2)
+    pg2 = _roundtrip(pg, g, tmp_path)
+    assert sorted(pg2.assignments) == ["a", "b"]
+    np.testing.assert_array_equal(pg2.assignments["a"], assign["a"])
+
+
+def test_load_legacy_metadata(tmp_path):
+    """Old metadata.json without assigned_ntypes: discover from files."""
+    g = make_mag_like(n_paper=40, n_author=20, seed=1)
+    pg = PartitionedGraph(g, ldg_partition(g, 2, seed=0), 2)
+    d = str(tmp_path / "parts")
+    pg.save(d)
+    meta_path = os.path.join(d, "metadata.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["assigned_ntypes"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    pg2 = PartitionedGraph.load(d, g)
+    assert sorted(pg2.assignments) == sorted(pg.assignments)
+
+
+def test_metadata_json_serializable(tmp_path):
+    """num_nodes with numpy integer values must not break json.dump."""
+    g = HeteroGraph({"a": np.int64(5), "b": np.int64(5)},
+                    {("a", "r", "b"): (np.array([0, 1]), np.array([0, 1]))})
+    assign = {"a": np.zeros(5, np.int64), "b": np.zeros(5, np.int64)}
+    pg = PartitionedGraph(g, assign, 1)
+    pg2 = _roundtrip(pg, g, tmp_path)
+    assert pg2.num_parts == 1

@@ -2,6 +2,7 @@
 invariants (hypothesis where it matters)."""
 import numpy as np
 import pytest
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dist_graph import PartitionedGraph

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.seg_aggr import seg_aggr, seg_aggr_ref
+from repro.kernels.seg_aggr import (gather_seg_aggr, gather_seg_aggr_ref,
+                                    seg_aggr, seg_aggr_ref)
 from repro.kernels.ssd_scan import ssd_forward, ssd_ref_sequential
 
 RNG = np.random.default_rng(0)
@@ -33,6 +34,60 @@ def test_seg_aggr_all_masked_rows():
     m = jnp.zeros((8, 4), bool)
     out = seg_aggr(x, m, "mean")
     np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# gather_seg_aggr: fused row-gather + masked fanout reduce
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [
+    (64, 16, 4, 32),      # small, everything divides
+    (500, 130, 7, 96),    # odd fanout, n/d not multiples of the block
+    (1000, 256, 32, 128), # block-sized tiles
+    (37, 10, 1, 300),     # fanout 1, wide d
+    (128, 1, 5, 16),      # single dst row
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("reduce", ["mean", "sum", "max"])
+def test_gather_seg_aggr(shape, dtype, reduce):
+    N, n, f, d = shape
+    table = jnp.asarray(RNG.normal(size=(N, d)), dtype)
+    idx = jnp.asarray(RNG.integers(0, N, (n, f)), jnp.int32)
+    m = jnp.asarray(RNG.random((n, f)) < 0.7)
+    out = gather_seg_aggr(table, idx, m, reduce)
+    ref = gather_seg_aggr_ref(table, idx, m, reduce)
+    assert out.shape == (n, d) and out.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("reduce", ["mean", "sum", "max"])
+def test_gather_seg_aggr_empty_neighbor_rows(reduce):
+    """Fully-masked rows (isolated nodes) must emit exactly 0."""
+    table = jnp.asarray(RNG.normal(size=(32, 24)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 32, (10, 6)), jnp.int32)
+    m = np.ones((10, 6), bool)
+    m[3] = False          # one isolated node
+    m[7, 1:] = False      # one node with a single neighbor
+    m = jnp.asarray(m)
+    out = np.asarray(gather_seg_aggr(table, idx, m, reduce))
+    np.testing.assert_allclose(out[3], 0.0)
+    ref = np.asarray(gather_seg_aggr_ref(table, idx, m, reduce))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_gather_seg_aggr_matches_unfused():
+    """gather+seg_aggr fused == gather then seg_aggr (mean/sum)."""
+    table = jnp.asarray(RNG.normal(size=(200, 48)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 200, (33, 9)), jnp.int32)
+    m = jnp.asarray(RNG.random((33, 9)) < 0.5)
+    rows = jnp.take(table, idx.reshape(-1), axis=0).reshape(33, 9, 48)
+    for reduce in ("mean", "sum"):
+        fused = gather_seg_aggr(table, idx, m, reduce)
+        unfused = seg_aggr(rows, m, reduce)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("cfg", [

@@ -1,6 +1,7 @@
 """Hypothesis property tests on the sampler / graph invariants."""
 import numpy as np
 import pytest
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import CSC, HeteroGraph
