@@ -1,3 +1,8 @@
-from repro.checkpoint.io import save_pytree, load_pytree, save_trainer, load_trainer
+from repro.checkpoint.io import (load_multitask_trainer, load_pytree,
+                                 load_run_config, load_trainer,
+                                 save_multitask_trainer, save_pytree,
+                                 save_run_config, save_trainer)
 
-__all__ = ["save_pytree", "load_pytree", "save_trainer", "load_trainer"]
+__all__ = ["save_pytree", "load_pytree", "save_trainer", "load_trainer",
+           "save_run_config", "load_run_config",
+           "save_multitask_trainer", "load_multitask_trainer"]

@@ -55,7 +55,10 @@ def load_pytree(path: str, like=None):
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
-def save_trainer(trainer, path: str):
+def save_trainer(trainer, path: str, config: Dict[str, Any] = None):
+    """Write a trainer checkpoint; ``config`` (a resolved GSConfig dict)
+    is persisted alongside it so inference can restore the full run from
+    the artifact alone (no flag re-specification)."""
     os.makedirs(path, exist_ok=True)
     save_pytree(trainer.params, os.path.join(path, "params.npz"))
     save_pytree(trainer.opt_state, os.path.join(path, "opt_state.npz"))
@@ -66,6 +69,8 @@ def save_trainer(trainer, path: str):
         meta.setdefault("sparse", []).append(nt)
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f)
+    if config is not None:
+        save_run_config(config, path)
 
 
 def load_trainer(trainer, path: str):
@@ -81,3 +86,57 @@ def load_trainer(trainer, path: str):
         st = load_pytree(os.path.join(path, f"emb_{nt}.npz"))
         trainer.sparse_embeds[nt].load_state_dict(st)
     return trainer
+
+
+# ---------------------------------------------------------------------------
+# run-config persistence: the declarative GSConfig travels with the model
+# ---------------------------------------------------------------------------
+def save_run_config(config: Dict[str, Any], path: str):
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "config.json"), "w") as f:
+        json.dump(config, f, indent=2, sort_keys=True)
+
+
+def load_run_config(path: str) -> Dict[str, Any]:
+    """Read the resolved config persisted next to a checkpoint.  Raises
+    FileNotFoundError for pre-config checkpoints (restore those with the
+    legacy per-task CLIs, which re-specify hyperparameters by flag)."""
+    with open(os.path.join(path, "config.json")) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# multi-task checkpoints: shared encoder + one sub-checkpoint per task
+# ---------------------------------------------------------------------------
+def save_multitask_trainer(mt, path: str, config: Dict[str, Any] = None):
+    """Checkpoint a GSgnnMultiTaskTrainer: each task trainer saves under
+    ``task_<name>/`` (with the shared encoder written into its params), so
+    every sub-checkpoint is independently loadable by the single-task
+    tooling."""
+    os.makedirs(path, exist_ok=True)
+    meta = {"multitask": True,
+            "tasks": [{"name": t.name, "kind": t.kind, "weight": t.weight}
+                      for t in mt.tasks],
+            "history": mt.history}
+    for t in mt.tasks:
+        t.trainer.params["gnn"] = mt.shared_gnn
+        save_trainer(t.trainer, os.path.join(path, f"task_{t.name}"))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if config is not None:
+        save_run_config(config, path)
+
+
+def load_multitask_trainer(mt, path: str):
+    """Restore a GSgnnMultiTaskTrainer saved by save_multitask_trainer;
+    ``mt`` must be constructed with the same task names/model."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    saved = {t["name"] for t in meta["tasks"]}
+    have = {t.name for t in mt.tasks}
+    assert saved == have, (sorted(saved), sorted(have))
+    for t in mt.tasks:
+        load_trainer(t.trainer, os.path.join(path, f"task_{t.name}"))
+    mt.shared_gnn = mt.tasks[0].trainer.params["gnn"]
+    mt.history = meta.get("history", [])
+    return mt

@@ -1,13 +1,17 @@
-"""Shared CLI plumbing: dataset resolution + standard arguments."""
+"""Legacy CLI plumbing: the pre-GSConfig argparse surface, kept so
+existing `gs_node_classification` / `gs_link_prediction` invocations work
+unchanged.  The flags are translated into a ``GSConfig`` dict
+(``config_from_legacy_args``) and dispatched through the shared runner —
+all assembly logic lives in ``repro.runner`` now."""
 from __future__ import annotations
 
 import argparse
 import json
 
-import numpy as np
+from repro.config import DATASET_TARGETS  # re-export (legacy import site)
 
-from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
-                        make_temporal_graph)
+__all__ = ["DATASET_TARGETS", "add_common_args", "fanout_of",
+           "config_from_legacy_args"]
 
 
 def add_common_args(ap: argparse.ArgumentParser):
@@ -41,30 +45,30 @@ def add_common_args(ap: argparse.ArgumentParser):
                          "(0 = synchronous)")
 
 
-def build_dataset(args):
-    kw = json.loads(args.dataset_conf)
-    if args.dataset == "mag":
-        return make_mag_like(seed=args.seed, **kw)
-    if args.dataset == "amazon":
-        return make_amazon_like(seed=args.seed, **kw)
-    if args.dataset == "scaling":
-        kw.setdefault("n_nodes", 10000)
-        kw.setdefault("avg_degree", 20)
-        return make_scaling_graph(seed=args.seed, **kw)
-    return make_temporal_graph(seed=args.seed, **kw)
+def config_from_legacy_args(args: argparse.Namespace, task: str,
+                            task_section: dict = None) -> dict:
+    """Translate the legacy flag namespace into a GSConfig dict."""
+    output = {k: v for k, v in
+              {"save_model_path": args.save_model_path,
+               "restore_model_path": args.restore_model_path,
+               "save_embed_path": args.save_embed_path}.items()
+              if v is not None}
+    return {
+        "task": task,
+        "gnn": {"model": args.model, "hidden": args.hidden,
+                "num_layers": args.num_layers, "fanout": fanout_of(args)},
+        "hyperparam": {"lr": args.lr, "batch_size": args.batch_size,
+                       "num_epochs": args.num_epochs, "seed": args.seed,
+                       "prefetch": args.prefetch},
+        "input": {"dataset": args.dataset,
+                  "dataset_conf": json.loads(args.dataset_conf),
+                  "num_parts": args.num_trainers,
+                  "part_method": args.part_method},
+        "output": output,
+        "device_features": bool(args.device_features),
+        task: task_section or {},
+    }
 
 
 def fanout_of(args):
     return [int(x) for x in args.fanout.split(",")]
-
-
-DATASET_TARGETS = {
-    "mag": ("paper", ("paper", "cites", "paper"), 8),
-    "amazon": ("item", ("item", "also_buy", "item"), 32),
-    "scaling": ("node", ("node", "edge", "node"), 16),
-    "temporal": ("user", ("user", "interacts", "user"), 4),
-}
-
-
-def featureless_ntypes(graph):
-    return [nt for nt in graph.ntypes if not graph.has_feat(nt)]

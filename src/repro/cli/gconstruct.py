@@ -2,18 +2,24 @@
 
   PYTHONPATH=src python -m repro.cli.gconstruct \
       --conf graph_schema.json --num-parts 4 --part-method ldg --out out/
+
+Construction also chains directly into training: set
+``input.gconstruct_conf`` in a GSConfig and `python -m repro.cli.gs` runs
+construct -> train -> inference as one command.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
+from repro.config import load_config_dict
 from repro.gconstruct import construct_graph
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--conf", required=True, help="graph schema JSON")
+    ap.add_argument("--conf", required=True,
+                    help="graph schema file (JSON or YAML)")
     ap.add_argument("--num-parts", type=int, default=1)
     ap.add_argument("--part-method", default="random",
                     choices=["random", "ldg", "metis"])
@@ -21,8 +27,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    with open(args.conf) as f:
-        config = json.load(f)
+    config = load_config_dict(args.conf)
     graph, pg, report = construct_graph(
         config, num_parts=args.num_parts, part_method=args.part_method,
         out_dir=args.out, seed=args.seed)

@@ -3,22 +3,19 @@
   PYTHONPATH=src python -m repro.cli.gs_link_prediction \
       --dataset amazon --loss contrastive --neg-method joint \
       --num-negatives 32
+
+Legacy shim: the flags translate into a declarative ``GSConfig`` and run
+through the shared runner — identical to `python -m repro.cli.gs --cf`
+with an equivalent YAML (the recommended surface; see docs/config.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
-import numpy as np
-
-from repro.checkpoint import load_trainer, save_trainer
-from repro.cli.common import (DATASET_TARGETS, add_common_args, build_dataset,
-                              fanout_of, featureless_ntypes)
-from repro.core.embedding import SparseEmbedding
-from repro.core.feature_store import DeviceFeatureStore
-from repro.core.spot_target import exclude_eval_edges, split_edges
-from repro.gnn.model import model_meta_from_graph
-from repro.trainer import (GSgnnData, GSgnnLinkPredictionDataLoader,
-                           GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator)
+from repro.cli.common import add_common_args, config_from_legacy_args
+from repro.config import GSConfig
+from repro.runner import run_config
 
 
 def main():
@@ -32,57 +29,13 @@ def main():
     ap.add_argument("--no-exclude-eval", action="store_true",
                     help="disable val/test edge exclusion (leakage!)")
     args = ap.parse_args()
-
-    graph = build_dataset(args)
-    _, target_etype, _ = DATASET_TARGETS[args.dataset]
-    rng = np.random.default_rng(args.seed)
-    tr_e, va_e, te_e = split_edges(rng, graph, target_etype)
-    train_graph = graph if args.no_exclude_eval else \
-        exclude_eval_edges(graph, target_etype, va_e, te_e)
-
-    data = GSgnnData(graph)
-    fl = featureless_ntypes(graph)
-    emb_dim = 16
-    sparse = {nt: SparseEmbedding(graph.num_nodes[nt], emb_dim, name=nt)
-              for nt in fl}
-    model = model_meta_from_graph(
-        graph, args.model, hidden=args.hidden, num_layers=args.num_layers,
-        extra_feat_dims={nt: emb_dim for nt in fl})
-    store = DeviceFeatureStore(graph) if args.device_features else None
-    trainer = GSgnnLinkPredictionTrainer(
-        model, target_etype, loss=args.loss, lr=args.lr,
-        sparse_embeds=sparse, evaluator=GSgnnMrrEvaluator(),
-        feature_store=store)
-    host_feats = store is None
-    if args.restore_model_path:
-        load_trainer(trainer, args.restore_model_path)
-
-    fanout = fanout_of(args)
-    if args.inference:
-        test_loader = GSgnnLinkPredictionDataLoader(
-            data, target_etype, te_e, fanout, args.batch_size,
-            num_negatives=args.num_negatives, neg_method=args.neg_method,
-            shuffle=False, host_features=host_feats)
-        mrr = trainer.evaluate(test_loader)
-        print(f"test MRR: {mrr:.4f}")
-        return
-
-    # note: training samples blocks from the *train* graph (eval edges
-    # excluded) while positives come from the train split
-    loader = GSgnnLinkPredictionDataLoader(
-        data, target_etype, tr_e, fanout, args.batch_size,
-        num_negatives=args.num_negatives, neg_method=args.neg_method,
-        seed=args.seed, restrict_graph=train_graph,
-        host_features=host_feats)
-    val_loader = GSgnnLinkPredictionDataLoader(
-        data, target_etype, va_e, fanout, args.batch_size,
-        num_negatives=args.num_negatives, neg_method=args.neg_method,
-        shuffle=False, host_features=host_feats)
-    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True,
-                prefetch=args.prefetch)
-    if args.save_model_path:
-        save_trainer(trainer, args.save_model_path)
-        print(f"saved model -> {args.save_model_path}")
+    cfg = GSConfig.from_dict(config_from_legacy_args(
+        args, "link_prediction",
+        task_section={"loss": args.loss, "neg_method": args.neg_method,
+                      "num_negatives": args.num_negatives,
+                      "exclude_eval_edges": not args.no_exclude_eval}))
+    result = run_config(cfg, inference=args.inference)
+    print(json.dumps(result, indent=2, default=str))
 
 
 if __name__ == "__main__":

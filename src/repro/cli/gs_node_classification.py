@@ -3,82 +3,28 @@
   PYTHONPATH=src python -m repro.cli.gs_node_classification \
       --dataset mag --model rgcn --fanout 8,8 --num-epochs 5
 
-Train and inference share the module; --inference restores a model and
-writes node embeddings (--save-embed-path).
+Legacy shim: the flags translate into a declarative ``GSConfig`` and run
+through the shared runner — identical to `python -m repro.cli.gs --cf`
+with an equivalent YAML (the recommended surface; see docs/config.md).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
-import numpy as np
-
-from repro.checkpoint import load_trainer, save_trainer
-from repro.cli.common import (DATASET_TARGETS, add_common_args, build_dataset,
-                              fanout_of, featureless_ntypes)
-from repro.core.embedding import SparseEmbedding
-from repro.core.feature_store import DeviceFeatureStore
-from repro.gnn.model import model_meta_from_graph
-from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
-                           GSgnnNodeTrainer)
+from repro.cli.common import add_common_args, config_from_legacy_args
+from repro.config import GSConfig
+from repro.runner import run_config
 
 
 def main():
     ap = argparse.ArgumentParser()
     add_common_args(ap)
     args = ap.parse_args()
-
-    graph = build_dataset(args)
-    target_ntype, _, num_classes = DATASET_TARGETS[args.dataset]
-    data = GSgnnData(graph)
-    train_idx, val_idx, test_idx = data.train_val_test_nodes(target_ntype)
-    fanout = fanout_of(args)
-
-    fl = featureless_ntypes(graph)
-    emb_dim = 16
-    sparse = {nt: SparseEmbedding(graph.num_nodes[nt], emb_dim, name=nt)
-              for nt in fl}
-    model = model_meta_from_graph(
-        graph, args.model, hidden=args.hidden, num_layers=args.num_layers,
-        extra_feat_dims={nt: emb_dim for nt in fl})
-    store = DeviceFeatureStore(graph) if args.device_features else None
-    trainer = GSgnnNodeTrainer(model, target_ntype, num_classes=num_classes,
-                               lr=args.lr, sparse_embeds=sparse,
-                               evaluator=GSgnnAccEvaluator(),
-                               feature_store=store)
-    host_feats = store is None
-    if args.restore_model_path:
-        load_trainer(trainer, args.restore_model_path)
-
-    if args.inference:
-        loader = GSgnnNodeDataLoader(
-            data, target_ntype, np.arange(graph.num_nodes[target_ntype]),
-            fanout, args.batch_size, shuffle=False,
-            host_features=host_feats)
-        embs = []
-        for batch in loader:
-            emb = trainer.embed_batch(batch)
-            embs.append(np.asarray(emb[target_ntype]))
-        out = np.concatenate(embs)[:graph.num_nodes[target_ntype]]
-        if args.save_embed_path:
-            np.save(args.save_embed_path, out)
-            print(f"saved embeddings {out.shape} -> {args.save_embed_path}")
-        acc = trainer.evaluate(GSgnnNodeDataLoader(
-            data, target_ntype, test_idx, fanout, args.batch_size,
-            shuffle=False, host_features=host_feats))
-        print(f"test accuracy: {acc:.4f}")
-        return
-
-    loader = GSgnnNodeDataLoader(data, target_ntype, train_idx, fanout,
-                                 args.batch_size, seed=args.seed,
-                                 host_features=host_feats)
-    val_loader = GSgnnNodeDataLoader(data, target_ntype, val_idx, fanout,
-                                     args.batch_size, shuffle=False,
-                                     host_features=host_feats)
-    trainer.fit(loader, val_loader, num_epochs=args.num_epochs, verbose=True,
-                prefetch=args.prefetch)
-    if args.save_model_path:
-        save_trainer(trainer, args.save_model_path)
-        print(f"saved model -> {args.save_model_path}")
+    cfg = GSConfig.from_dict(
+        config_from_legacy_args(args, "node_classification"))
+    result = run_config(cfg, inference=args.inference)
+    print(json.dumps(result, indent=2, default=str))
 
 
 if __name__ == "__main__":

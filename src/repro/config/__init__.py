@@ -1,0 +1,13 @@
+from repro.config.gsconfig import (ConfigError, DATASET_TARGETS, GnnConfig,
+                                   GSConfig, HyperparamConfig, InputConfig,
+                                   LinkPredictionConfig, MultiTaskConfig,
+                                   NodeClassificationConfig, OutputConfig,
+                                   TaskSpecConfig, apply_overrides,
+                                   load_config_dict)
+
+__all__ = [
+    "ConfigError", "DATASET_TARGETS", "GSConfig", "GnnConfig",
+    "HyperparamConfig", "InputConfig", "LinkPredictionConfig",
+    "MultiTaskConfig", "NodeClassificationConfig", "OutputConfig",
+    "TaskSpecConfig", "apply_overrides", "load_config_dict",
+]

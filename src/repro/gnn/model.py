@@ -77,11 +77,11 @@ def gnn_apply_blocks(params, model: GSgnnModel, schema: BlockSchema,
 
 def model_meta_from_graph(graph, kind: str, hidden: int, num_layers: int,
                           nheads: int = 4,
-                          extra_feat_dims: Optional[Dict[str, int]] = None
-                          ) -> GSgnnModel:
+                          extra_feat_dims: Optional[Dict[str, int]] = None,
+                          feat_field: str = "feat") -> GSgnnModel:
     from repro.gnn.schema import ekey
-    feat_dims = {nt: graph.feat_dim(nt) for nt in graph.ntypes
-                 if graph.feat_dim(nt)}
+    feat_dims = {nt: graph.feat_dim(nt, feat_field) for nt in graph.ntypes
+                 if graph.feat_dim(nt, feat_field)}
     if extra_feat_dims:
         feat_dims.update(extra_feat_dims)
     return GSgnnModel(

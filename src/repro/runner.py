@@ -1,0 +1,331 @@
+"""Task registry + shared run assembly behind `python -m repro.cli.gs`.
+
+One resolved ``GSConfig`` drives the whole pipeline (paper §3.2.1):
+
+  input section  -> graph (built-in synthetic family, or the gconstruct
+                    construction pipeline chained in via
+                    ``input.gconstruct_conf``)
+  gnn section    -> GSgnnModel meta + sparse embedding tables for
+                    featureless node types
+  task section   -> a registered TaskRunner (node_classification /
+                    link_prediction / multi_task) that owns loaders,
+                    trainer, train loop, checkpointing, and inference
+
+New workloads register with ``@register_task("name")`` and become config
+entries — no new CLI.  ``run_config`` is the single programmatic entry
+point; the legacy per-task CLIs are thin flag translators on top of it.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Type
+
+import numpy as np
+
+from repro.checkpoint import (load_multitask_trainer, load_trainer,
+                              save_multitask_trainer, save_trainer)
+from repro.config import GSConfig, load_config_dict
+from repro.core.embedding import SparseEmbedding
+from repro.core.feature_store import DeviceFeatureStore
+from repro.core.graph import HeteroGraph
+from repro.core.spot_target import exclude_eval_edges, split_edges
+from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
+                        make_temporal_graph)
+from repro.gnn.model import model_meta_from_graph
+from repro.trainer import (GSgnnAccEvaluator, GSgnnData,
+                           GSgnnLinkPredictionDataLoader,
+                           GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator,
+                           GSgnnNodeDataLoader, GSgnnNodeTrainer)
+from repro.trainer.multitask import GSgnnMultiTaskTrainer, MultiTaskSpec
+
+TASK_REGISTRY: Dict[str, Type["TaskRunner"]] = {}
+
+
+def register_task(name: str):
+    def deco(cls):
+        TASK_REGISTRY[name] = cls
+        cls.task_name = name
+        return cls
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# shared assembly helpers
+# ---------------------------------------------------------------------------
+_SYNTHETIC = {"mag": make_mag_like, "amazon": make_amazon_like,
+              "scaling": make_scaling_graph, "temporal": make_temporal_graph}
+
+
+def build_graph(cfg: GSConfig) -> HeteroGraph:
+    """input section -> HeteroGraph: either a built-in synthetic family or
+    a full gconstruct run (transform -> id-map -> partition -> shuffle)."""
+    inp = cfg.input
+    if inp.gconstruct_conf is not None:
+        from repro.gconstruct import construct_graph
+        conf = inp.gconstruct_conf
+        if isinstance(conf, str):
+            conf = load_config_dict(conf)
+        graph, _, report = construct_graph(
+            conf, num_parts=inp.num_parts, part_method=inp.part_method,
+            out_dir=inp.save_graph_path, seed=cfg.hyperparam.seed)
+        print(f"gconstruct: nodes={report['num_nodes']} "
+              f"edges={report['num_edges']} "
+              f"edge_cut={report['edge_cut']:.3f} "
+              f"t={report['t_total_s']:.2f}s")
+        return graph
+    kw = dict(inp.dataset_conf)
+    if inp.dataset == "scaling":
+        kw.setdefault("n_nodes", 10000)
+        kw.setdefault("avg_degree", 20)
+    return _SYNTHETIC[inp.dataset](seed=cfg.hyperparam.seed, **kw)
+
+
+def sparse_embeds_for(graph: HeteroGraph, dim: int,
+                      feat_field: str = "feat"
+                      ) -> Dict[str, SparseEmbedding]:
+    """One learnable table per featureless node type (§3.3.2) — the single
+    construction point for what used to be duplicated `emb_dim = 16`."""
+    return {nt: SparseEmbedding(graph.num_nodes[nt], dim, name=nt)
+            for nt in graph.ntypes if not graph.has_feat(nt, feat_field)}
+
+
+def build_model_and_embeds(cfg: GSConfig, graph: HeteroGraph):
+    ff = cfg.input.feat_field
+    sparse = sparse_embeds_for(graph, cfg.gnn.sparse_embed_dim, ff)
+    model = model_meta_from_graph(
+        graph, cfg.gnn.model, hidden=cfg.gnn.hidden,
+        num_layers=cfg.gnn.num_layers, nheads=cfg.gnn.nheads,
+        extra_feat_dims={nt: cfg.gnn.sparse_embed_dim for nt in sparse},
+        feat_field=ff)
+    return model, sparse
+
+
+# ---------------------------------------------------------------------------
+# task runners
+# ---------------------------------------------------------------------------
+class TaskRunner:
+    """Owns the per-task assembly the two legacy CLIs used to duplicate:
+    data facade, model, sparse tables, feature store, loaders, trainer."""
+
+    task_name = "?"
+
+    def __init__(self, cfg: GSConfig, graph: HeteroGraph):
+        self.cfg = cfg
+        self.graph = graph
+        self.data = GSgnnData(graph, label_field=cfg.input.label_field,
+                              feat_field=cfg.input.feat_field)
+        self.model, self.sparse = build_model_and_embeds(cfg, graph)
+        self.store = DeviceFeatureStore(
+            graph, feat_field=cfg.input.feat_field) \
+            if cfg.device_features else None
+        self.host_features = self.store is None
+        self.hp = cfg.hyperparam
+
+    # subclasses implement
+    def train(self) -> dict:
+        raise NotImplementedError
+
+    def inference(self) -> dict:
+        raise NotImplementedError
+
+    def restore(self, path: str):
+        load_trainer(self.trainer, path)
+
+    def save(self, path: str):
+        save_trainer(self.trainer, path, config=self.cfg.to_dict())
+
+
+@register_task("node_classification")
+class NodeClassificationRunner(TaskRunner):
+    def __init__(self, cfg, graph):
+        super().__init__(cfg, graph)
+        nc = cfg.node_classification
+        self.target_ntype = nc.target_ntype
+        self.trainer = GSgnnNodeTrainer(
+            self.model, nc.target_ntype, num_classes=nc.num_classes,
+            lr=self.hp.lr, sparse_embeds=self.sparse,
+            evaluator=GSgnnAccEvaluator(), feature_store=self.store)
+
+    def _loader(self, ids, shuffle=True):
+        return GSgnnNodeDataLoader(
+            self.data, self.target_ntype, ids, self.cfg.gnn.fanout,
+            self.hp.batch_size, shuffle=shuffle, seed=self.hp.seed,
+            host_features=self.host_features)
+
+    def train(self) -> dict:
+        tr, va, _ = self.data.train_val_test_nodes(self.target_ntype)
+        hist = self.trainer.fit(self._loader(tr), self._loader(va, False),
+                                num_epochs=self.hp.num_epochs, verbose=True,
+                                prefetch=self.hp.prefetch)
+        return {"task": self.task_name, "history": hist}
+
+    def inference(self) -> dict:
+        nt = self.target_ntype
+        out = {"task": self.task_name}
+        if self.cfg.output.save_embed_path:
+            loader = self._loader(np.arange(self.graph.num_nodes[nt]), False)
+            embs = [np.asarray(self.trainer.embed_batch(b)[nt])
+                    for b in loader]
+            emb = np.concatenate(embs)[:self.graph.num_nodes[nt]]
+            np.save(self.cfg.output.save_embed_path, emb)
+            out["embed_shape"] = list(emb.shape)
+            out["save_embed_path"] = self.cfg.output.save_embed_path
+        _, _, te = self.data.train_val_test_nodes(nt)
+        out["accuracy"] = float(self.trainer.evaluate(
+            self._loader(te, False)))
+        return out
+
+
+@register_task("link_prediction")
+class LinkPredictionRunner(TaskRunner):
+    def __init__(self, cfg, graph):
+        super().__init__(cfg, graph)
+        lp = cfg.link_prediction
+        self.lp = lp
+        self.etype = tuple(lp.target_etype)
+        rng = np.random.default_rng(self.hp.seed)
+        self.tr_e, self.va_e, self.te_e = split_edges(rng, graph, self.etype)
+        self.train_graph = exclude_eval_edges(
+            graph, self.etype, self.va_e, self.te_e) \
+            if lp.exclude_eval_edges else graph
+        self.trainer = GSgnnLinkPredictionTrainer(
+            self.model, self.etype, loss=lp.loss, lr=self.hp.lr,
+            sparse_embeds=self.sparse, evaluator=GSgnnMrrEvaluator(),
+            feature_store=self.store)
+
+    def _loader(self, eids, shuffle=True, restrict=None):
+        return GSgnnLinkPredictionDataLoader(
+            self.data, self.etype, eids, self.cfg.gnn.fanout,
+            self.hp.batch_size, num_negatives=self.lp.num_negatives,
+            neg_method=self.lp.neg_method, shuffle=shuffle,
+            seed=self.hp.seed, restrict_graph=restrict,
+            host_features=self.host_features)
+
+    def train(self) -> dict:
+        # message passing samples the train graph (eval edges excluded);
+        # positives come from the train split of the full edge list
+        loader = self._loader(self.tr_e, restrict=self.train_graph)
+        val_loader = self._loader(self.va_e, shuffle=False)
+        hist = self.trainer.fit(loader, val_loader,
+                                num_epochs=self.hp.num_epochs, verbose=True,
+                                prefetch=self.hp.prefetch)
+        return {"task": self.task_name, "history": hist}
+
+    def inference(self) -> dict:
+        mrr = self.trainer.evaluate(self._loader(self.te_e, shuffle=False))
+        return {"task": self.task_name, "mrr": float(mrr)}
+
+
+@register_task("multi_task")
+class MultiTaskRunner(TaskRunner):
+    """The multi-task trainer (shared encoder, round-robin heads), reachable
+    from config for the first time: each entry of ``multi_task.tasks``
+    becomes a MultiTaskSpec with its own trainer/loader/eval split."""
+
+    def __init__(self, cfg, graph):
+        super().__init__(cfg, graph)
+        specs, self._evals = [], {}
+        for t in cfg.multi_task.tasks:
+            if t.kind == "node_classification":
+                spec, evals = self._build_nc(t)
+            else:
+                spec, evals = self._build_lp(t)
+            specs.append(spec)
+            self._evals[t.name] = evals
+        self.trainer = GSgnnMultiTaskTrainer(self.model, specs,
+                                             sparse_embeds=self.sparse)
+
+    def _build_nc(self, t):
+        nc = t.node_classification
+        tr, va, te = self.data.train_val_test_nodes(nc.target_ntype)
+        trainer = GSgnnNodeTrainer(
+            self.model, nc.target_ntype, num_classes=nc.num_classes,
+            lr=self.hp.lr, evaluator=GSgnnAccEvaluator(),
+            feature_store=self.store)
+
+        def loader(ids, shuffle=True):
+            return GSgnnNodeDataLoader(
+                self.data, nc.target_ntype, ids, self.cfg.gnn.fanout,
+                self.hp.batch_size, shuffle=shuffle, seed=self.hp.seed,
+                host_features=self.host_features)
+
+        spec = MultiTaskSpec(name=t.name, kind=t.kind, trainer=trainer,
+                             loader=loader(tr), weight=t.weight)
+        return spec, {"metric": "accuracy",
+                      "val": loader(va, False), "test": loader(te, False)}
+
+    def _build_lp(self, t):
+        lp = t.link_prediction
+        etype = tuple(lp.target_etype)
+        rng = np.random.default_rng(self.hp.seed)
+        tr_e, va_e, te_e = split_edges(rng, self.graph, etype)
+        train_graph = exclude_eval_edges(self.graph, etype, va_e, te_e) \
+            if lp.exclude_eval_edges else None
+        trainer = GSgnnLinkPredictionTrainer(
+            self.model, etype, loss=lp.loss, lr=self.hp.lr,
+            evaluator=GSgnnMrrEvaluator(), feature_store=self.store)
+
+        def loader(eids, shuffle=True, restrict=None):
+            return GSgnnLinkPredictionDataLoader(
+                self.data, etype, eids, self.cfg.gnn.fanout,
+                self.hp.batch_size, num_negatives=lp.num_negatives,
+                neg_method=lp.neg_method, shuffle=shuffle, seed=self.hp.seed,
+                restrict_graph=restrict, host_features=self.host_features)
+
+        spec = MultiTaskSpec(name=t.name, kind=t.kind, trainer=trainer,
+                             loader=loader(tr_e, restrict=train_graph),
+                             weight=t.weight)
+        return spec, {"metric": "mrr",
+                      "val": loader(va_e, False), "test": loader(te_e, False)}
+
+    def _evaluate(self, split: str) -> dict:
+        return {name: {ev["metric"]:
+                       float(self.trainer.evaluate(name, ev[split]))}
+                for name, ev in self._evals.items()}
+
+    def train(self) -> dict:
+        hist = self.trainer.fit(num_epochs=self.hp.num_epochs, verbose=True)
+        return {"task": self.task_name, "history": hist,
+                "val": self._evaluate("val")}
+
+    def inference(self) -> dict:
+        return {"task": self.task_name, "test": self._evaluate("test")}
+
+    def restore(self, path: str):
+        load_multitask_trainer(self.trainer, path)
+
+    def save(self, path: str):
+        save_multitask_trainer(self.trainer, path,
+                               config=self.cfg.to_dict())
+
+
+# ---------------------------------------------------------------------------
+def run_config(cfg: GSConfig, inference: bool = False) -> dict:
+    """The single programmatic entry point: resolve the config, build the
+    graph, dispatch through the registry, train or infer, persist."""
+    cfg = cfg.resolved()
+    if cfg.task not in TASK_REGISTRY:
+        raise KeyError(f"task {cfg.task!r} is not registered; "
+                       f"known tasks: {sorted(TASK_REGISTRY)}")
+    graph = build_graph(cfg)
+    runner = TASK_REGISTRY[cfg.task](cfg, graph)
+    if cfg.output.restore_model_path:
+        runner.restore(cfg.output.restore_model_path)
+    if inference:
+        result = runner.inference()
+    else:
+        result = runner.train()
+        if cfg.output.save_model_path:
+            runner.save(cfg.output.save_model_path)
+            result["save_model_path"] = cfg.output.save_model_path
+    return result
+
+
+def run_config_dict(raw: dict, inference: bool = False) -> dict:
+    return run_config(GSConfig.from_dict(raw), inference=inference)
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(run_config(GSConfig.from_file(sys.argv[1])),
+                     default=str))

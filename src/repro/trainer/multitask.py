@@ -6,52 +6,83 @@ Tasks alternate at the mini-batch level (round-robin over their
 dataloaders), sharing trainer state; each task keeps its own decoder
 params and evaluator.  This mirrors GraphStorm's multi-task trainer where
 LP pre-training regularizes NC on the same graph.
+
+Task specs are typed (``MultiTaskSpec``) so the config layer can declare
+them schema-checked; plain dicts with the same keys are still accepted.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.embedding import SparseEmbedding
 from repro.gnn.model import GSgnnModel, init_gnn_model
-from repro.optim import adamw
-from repro.trainer.trainers import (GSgnnLinkPredictionTrainer,
-                                    GSgnnNodeTrainer, _TrainerBase)
+
+TASK_KINDS = ("node_classification", "link_prediction")
+
+
+@dataclasses.dataclass
+class MultiTaskSpec:
+    """One task of a multi-task run: a constructed single-task trainer, its
+    dataloader, and a loss weight.  All task trainers must be built with
+    the same ``GSgnnModel``; their ``params["gnn"]`` is replaced by the
+    shared encoder params."""
+    name: str
+    kind: str  # node_classification | link_prediction
+    trainer: Any
+    loader: Any
+    weight: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in TASK_KINDS:
+            raise ValueError(f"task {self.name!r}: unknown kind "
+                             f"{self.kind!r}; expected one of {TASK_KINDS}")
+
+
+def _as_spec(t: Union[MultiTaskSpec, dict]) -> MultiTaskSpec:
+    if isinstance(t, MultiTaskSpec):
+        return t
+    return MultiTaskSpec(name=t["name"], kind=t["kind"],
+                         trainer=t["trainer"], loader=t["loader"],
+                         weight=t.get("weight", 1.0))
 
 
 class GSgnnMultiTaskTrainer:
-    """Shared-encoder multi-task trainer.
+    """Shared-encoder multi-task trainer over a list of ``MultiTaskSpec``
+    (or equivalent dicts, for backward compatibility)."""
 
-    tasks: list of dicts
-      {"name", "kind": "node_classification"|"link_prediction",
-       "weight": float, "trainer": constructed single-task trainer,
-       "loader": dataloader}
-    All task trainers must be built with the same GSgnnModel; their
-    ``params["gnn"]`` is replaced by the shared encoder params.
-    """
-
-    def __init__(self, model: GSgnnModel, tasks: List[dict],
+    def __init__(self, model: GSgnnModel,
+                 tasks: Sequence[Union[MultiTaskSpec, dict]],
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
                  rng=None):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.model = model
-        self.tasks = tasks
+        self.tasks: List[MultiTaskSpec] = [_as_spec(t) for t in tasks]
+        names = [t.name for t in self.tasks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate task names: {names}")
         self.shared_gnn = init_gnn_model(rng, model)
         self.sparse_embeds = sparse_embeds or {}
-        for t in tasks:
-            t["trainer"].sparse_embeds = self.sparse_embeds
-            t["trainer"].params["gnn"] = self.shared_gnn
+        for t in self.tasks:
+            t.trainer.sparse_embeds = self.sparse_embeds
+            t.trainer.params["gnn"] = self.shared_gnn
         self.history: List[dict] = []
+
+    def task(self, name: str) -> MultiTaskSpec:
+        for t in self.tasks:
+            if t.name == name:
+                return t
+        raise KeyError(name)
 
     def fit(self, num_epochs: int = 1, verbose: bool = False):
         for epoch in range(num_epochs):
             t0 = time.time()
-            iters = [(t, iter(t["loader"])) for t in self.tasks]
-            losses = {t["name"]: [] for t in self.tasks}
+            iters = [(t, iter(t.loader)) for t in self.tasks]
+            losses = {t.name: [] for t in self.tasks}
             live = True
             while live:
                 live = False
@@ -60,12 +91,12 @@ class GSgnnMultiTaskTrainer:
                     if batch is None:
                         continue
                     live = True
-                    tr = t["trainer"]
+                    tr = t.trainer
                     # share the encoder: write it in, step, read it out
                     tr.params["gnn"] = self.shared_gnn
                     loss, _ = tr.fit_batch(batch)
                     self.shared_gnn = tr.params["gnn"]
-                    losses[t["name"]].append(t["weight"] * loss)
+                    losses[t.name].append(t.weight * loss)
             rec = {"epoch": epoch,
                    **{f"loss_{k}": float(np.mean(v)) if v else None
                       for k, v in losses.items()},
@@ -76,8 +107,6 @@ class GSgnnMultiTaskTrainer:
         return self.history
 
     def evaluate(self, name: str, loader) -> float:
-        for t in self.tasks:
-            if t["name"] == name:
-                t["trainer"].params["gnn"] = self.shared_gnn
-                return t["trainer"].evaluate(loader)
-        raise KeyError(name)
+        t = self.task(name)
+        t.trainer.params["gnn"] = self.shared_gnn
+        return t.trainer.evaluate(loader)

@@ -1,0 +1,253 @@
+"""GSConfig: round-trips, strict validation with actionable messages,
+CLI overrides, dataset-default resolution, legacy-flag shim equivalence."""
+import argparse
+import json
+
+import pytest
+
+from repro.config import (ConfigError, GSConfig, apply_overrides,
+                          load_config_dict)
+
+
+def _nc_dict(**kw):
+    d = {"task": "node_classification",
+         "input": {"dataset": "mag"},
+         "node_classification": {}}
+    d.update(kw)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# round-trips
+# ---------------------------------------------------------------------------
+def test_yaml_roundtrip(tmp_path):
+    p = tmp_path / "conf.yaml"
+    p.write_text("""
+task: link_prediction
+gnn: {model: rgcn, hidden: 32, fanout: [4, 4]}
+hyperparam: {lr: 0.005, batch_size: 64, num_epochs: 3}
+input:
+  dataset: amazon
+  dataset_conf: {n_item: 100}
+link_prediction:
+  target_etype: [item, also_buy, item]
+  neg_method: joint
+  num_negatives: 16
+""")
+    cfg = GSConfig.from_file(str(p))
+    assert cfg.gnn.hidden == 32
+    assert cfg.link_prediction.target_etype == ("item", "also_buy", "item")
+    # YAML -> GSConfig -> dict -> GSConfig is the identity
+    assert GSConfig.from_dict(cfg.to_dict()) == cfg
+    # ...and the dict is JSON-serializable (checkpoint persistence path)
+    assert GSConfig.from_dict(json.loads(cfg.to_json())) == cfg
+
+
+def test_json_config_file(tmp_path):
+    p = tmp_path / "conf.json"
+    p.write_text(json.dumps(_nc_dict()))
+    assert GSConfig.from_file(str(p)).task == "node_classification"
+
+
+def test_resolved_fills_dataset_defaults():
+    nc = GSConfig.from_dict(_nc_dict()).resolved().node_classification
+    assert (nc.target_ntype, nc.num_classes) == ("paper", 8)
+    lp = GSConfig.from_dict(
+        {"task": "link_prediction", "input": {"dataset": "amazon"},
+         "link_prediction": {}}).resolved().link_prediction
+    assert lp.target_etype == ("item", "also_buy", "item")
+
+
+def test_resolved_ignores_unused_task_sections():
+    # an extra (schema-valid) section for a task that won't run must not
+    # be validated/filled
+    cfg = GSConfig.from_dict({
+        "task": "node_classification",
+        "input": {"gconstruct_conf": "schema.json"},
+        "node_classification": {"target_ntype": "a", "num_classes": 3},
+        "link_prediction": {}})
+    r = cfg.resolved()
+    assert r.node_classification.target_ntype == "a"
+    assert r.link_prediction.target_etype is None
+
+
+def test_resolved_requires_targets_without_builtin_dataset():
+    cfg = GSConfig.from_dict(
+        {"task": "node_classification",
+         "input": {"gconstruct_conf": "schema.json"},
+         "node_classification": {}})
+    with pytest.raises(ConfigError, match="target_ntype"):
+        cfg.resolved()
+
+
+# ---------------------------------------------------------------------------
+# validation errors are actionable
+# ---------------------------------------------------------------------------
+def test_unknown_key_suggests_fix():
+    with pytest.raises(ConfigError, match=r"did you mean 'hidden'"):
+        GSConfig.from_dict(_nc_dict(gnn={"hiden": 128}))
+
+
+def test_unknown_key_reports_dotted_path():
+    with pytest.raises(ConfigError, match=r"hyperparam\.lrr"):
+        GSConfig.from_dict(_nc_dict(hyperparam={"lrr": 0.1}))
+
+
+def test_bad_fanout_length():
+    with pytest.raises(ConfigError, match=r"gnn\.fanout.*num_layers=2"):
+        GSConfig.from_dict(_nc_dict(gnn={"fanout": [8, 8, 8]}))
+
+
+def test_negative_fanout():
+    with pytest.raises(ConfigError, match="positive"):
+        GSConfig.from_dict(_nc_dict(gnn={"fanout": [8, -1]}))
+
+
+def test_missing_task_section():
+    with pytest.raises(ConfigError, match="requires a 'link_prediction'"):
+        GSConfig.from_dict({"task": "link_prediction",
+                            "input": {"dataset": "amazon"}})
+
+
+def test_task_choices():
+    with pytest.raises(ConfigError, match="not one of"):
+        GSConfig.from_dict(_nc_dict(task="node_classificaton"))
+
+
+def test_exactly_one_graph_source():
+    with pytest.raises(ConfigError, match="exactly one"):
+        GSConfig.from_dict({"task": "node_classification",
+                            "input": {}, "node_classification": {}})
+    with pytest.raises(ConfigError, match="exactly one"):
+        GSConfig.from_dict(
+            {"task": "node_classification",
+             "input": {"dataset": "mag", "gconstruct_conf": "x.json"},
+             "node_classification": {}})
+
+
+def test_joint_negatives_divisibility():
+    with pytest.raises(ConfigError, match="divisible"):
+        GSConfig.from_dict(
+            {"task": "link_prediction", "input": {"dataset": "amazon"},
+             "hyperparam": {"batch_size": 100},
+             "link_prediction": {"neg_method": "joint",
+                                 "num_negatives": 32}})
+    # num_negatives >= batch_size is the one-group case: allowed
+    GSConfig.from_dict(
+        {"task": "link_prediction", "input": {"dataset": "amazon"},
+         "hyperparam": {"batch_size": 16},
+         "link_prediction": {"neg_method": "joint", "num_negatives": 32}})
+
+
+def test_type_errors():
+    with pytest.raises(ConfigError, match="expected an integer"):
+        GSConfig.from_dict(_nc_dict(gnn={"hidden": "big"}))
+    with pytest.raises(ConfigError, match="expected true/false"):
+        GSConfig.from_dict(_nc_dict(device_features="yes"))
+
+
+def test_multitask_validation():
+    base = {"task": "multi_task", "input": {"dataset": "mag"}}
+    with pytest.raises(ConfigError, match="at least one task"):
+        GSConfig.from_dict({**base, "multi_task": {"tasks": []}})
+    with pytest.raises(ConfigError, match="no 'link_prediction' section"):
+        GSConfig.from_dict({**base, "multi_task": {"tasks": [
+            {"name": "lp", "kind": "link_prediction"}]}})
+    with pytest.raises(ConfigError, match="unique"):
+        GSConfig.from_dict({**base, "multi_task": {"tasks": [
+            {"name": "t", "kind": "node_classification",
+             "node_classification": {}},
+            {"name": "t", "kind": "node_classification",
+             "node_classification": {}}]}})
+
+
+# ---------------------------------------------------------------------------
+# CLI overrides
+# ---------------------------------------------------------------------------
+def test_overrides_pairs_and_tokens():
+    raw = apply_overrides(_nc_dict(), [
+        "--gnn.hidden", "128", "gnn.fanout=4,4",
+        "--hyperparam.lr", "0.001", "--device_features", "true"])
+    cfg = GSConfig.from_dict(raw)
+    assert cfg.gnn.hidden == 128
+    assert cfg.gnn.fanout == [4, 4]
+    assert cfg.hyperparam.lr == 0.001
+    assert cfg.device_features is True
+
+
+def test_overrides_do_not_mutate_input():
+    base = _nc_dict()
+    apply_overrides(base, ["--gnn.hidden", "128"])
+    assert "gnn" not in base
+
+
+def test_override_typo_caught_at_load():
+    raw = apply_overrides(_nc_dict(), ["--gnn.hiden", "128"])
+    with pytest.raises(ConfigError, match="did you mean"):
+        GSConfig.from_dict(raw)
+
+
+def test_override_missing_value():
+    with pytest.raises(ConfigError, match="missing a value"):
+        apply_overrides(_nc_dict(), ["--gnn.hidden"])
+
+
+# ---------------------------------------------------------------------------
+# legacy shim equivalence: old flags produce the same GSConfig as YAML
+# ---------------------------------------------------------------------------
+def _legacy_parse(extra_args, argv):
+    from repro.cli.common import add_common_args
+    ap = argparse.ArgumentParser()
+    add_common_args(ap)
+    for name, kw in extra_args:
+        ap.add_argument(name, **kw)
+    return ap.parse_args(argv)
+
+
+def test_legacy_nc_flags_match_declarative_config():
+    from repro.cli.common import config_from_legacy_args
+    args = _legacy_parse([], [
+        "--dataset", "mag", "--model", "rgcn", "--hidden", "32",
+        "--fanout", "4,4", "--batch-size", "64", "--num-epochs", "3",
+        "--lr", "0.005", "--save-model-path", "out/m"])
+    legacy = GSConfig.from_dict(
+        config_from_legacy_args(args, "node_classification"))
+    declarative = GSConfig.from_dict({
+        "task": "node_classification",
+        "gnn": {"model": "rgcn", "hidden": 32, "fanout": [4, 4]},
+        "hyperparam": {"lr": 0.005, "batch_size": 64, "num_epochs": 3},
+        "input": {"dataset": "mag"},
+        "output": {"save_model_path": "out/m"},
+        "node_classification": {}})
+    assert legacy == declarative
+    assert legacy.resolved() == declarative.resolved()
+
+
+def test_legacy_lp_flags_match_declarative_config():
+    from repro.cli.common import config_from_legacy_args
+    args = _legacy_parse(
+        [("--loss", {"default": "contrastive"}),
+         ("--neg-method", {"default": "joint"}),
+         ("--num-negatives", {"type": int, "default": 32}),
+         ("--no-exclude-eval", {"action": "store_true"})],
+        ["--dataset", "amazon", "--num-negatives", "16",
+         "--neg-method", "uniform", "--no-exclude-eval"])
+    legacy = GSConfig.from_dict(config_from_legacy_args(
+        args, "link_prediction",
+        task_section={"loss": args.loss, "neg_method": args.neg_method,
+                      "num_negatives": args.num_negatives,
+                      "exclude_eval_edges": not args.no_exclude_eval}))
+    declarative = GSConfig.from_dict({
+        "task": "link_prediction",
+        "input": {"dataset": "amazon"},
+        "link_prediction": {"loss": "contrastive", "neg_method": "uniform",
+                            "num_negatives": 16,
+                            "exclude_eval_edges": False}})
+    assert legacy == declarative
+
+
+def test_load_config_dict_rejects_non_mapping(tmp_path):
+    p = tmp_path / "bad.yaml"
+    p.write_text("- just\n- a\n- list\n")
+    with pytest.raises(ConfigError, match="mapping"):
+        load_config_dict(str(p))

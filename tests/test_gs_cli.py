@@ -1,0 +1,205 @@
+"""The single `repro.cli.gs` entrypoint: registry dispatch for every
+registered task, config persistence with checkpoints, inference from the
+artifact alone, and gconstruct->train chaining."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.config import GSConfig
+from repro.runner import (TASK_REGISTRY, TaskRunner, build_graph,
+                          run_config, sparse_embeds_for)
+
+
+def _tiny_nc(tmp_path=None, **kw):
+    d = {"task": "node_classification",
+         "gnn": {"hidden": 16, "fanout": [2, 2]},
+         "hyperparam": {"batch_size": 32, "num_epochs": 1},
+         "input": {"dataset": "mag",
+                   "dataset_conf": {"n_paper": 80, "n_author": 40}},
+         "node_classification": {}}
+    if tmp_path is not None:
+        d["output"] = {
+            "save_model_path": str(tmp_path / "model"),
+            "save_embed_path": str(tmp_path / "emb.npy")}
+    d.update(kw)
+    return d
+
+
+def _tiny_lp(tmp_path=None):
+    d = {"task": "link_prediction",
+         "gnn": {"hidden": 16, "fanout": [2, 2]},
+         "hyperparam": {"batch_size": 16, "num_epochs": 1},
+         "input": {"dataset": "amazon",
+                   "dataset_conf": {"n_item": 80, "n_review": 160,
+                                    "n_customer": 40}},
+         "link_prediction": {"num_negatives": 8}}
+    if tmp_path is not None:
+        d["output"] = {"save_model_path": str(tmp_path / "model")}
+    return d
+
+
+def _tiny_mt(tmp_path=None):
+    d = {"task": "multi_task",
+         "gnn": {"hidden": 16, "fanout": [2, 2]},
+         "hyperparam": {"batch_size": 16, "num_epochs": 1},
+         "input": {"dataset": "mag",
+                   "dataset_conf": {"n_paper": 80, "n_author": 40}},
+         "multi_task": {"tasks": [
+             {"name": "nc", "kind": "node_classification",
+              "node_classification": {}},
+             {"name": "lp", "kind": "link_prediction", "weight": 0.5,
+              "link_prediction": {"num_negatives": 8}}]}}
+    if tmp_path is not None:
+        d["output"] = {"save_model_path": str(tmp_path / "model")}
+    return d
+
+
+# ---------------------------------------------------------------------------
+# registry dispatch
+# ---------------------------------------------------------------------------
+def test_registry_covers_all_config_tasks():
+    from repro.config.gsconfig import TASK_KINDS
+    assert set(TASK_REGISTRY) == set(TASK_KINDS)
+    for cls in TASK_REGISTRY.values():
+        assert issubclass(cls, TaskRunner)
+
+
+@pytest.mark.parametrize("raw,trainer_cls", [
+    (_tiny_nc(), "GSgnnNodeTrainer"),
+    (_tiny_lp(), "GSgnnLinkPredictionTrainer"),
+    (_tiny_mt(), "GSgnnMultiTaskTrainer"),
+])
+def test_registry_dispatch_builds_task_trainer(raw, trainer_cls):
+    cfg = GSConfig.from_dict(raw).resolved()
+    runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
+    assert type(runner.trainer).__name__ == trainer_cls
+
+
+def test_feat_field_threads_through_assembly():
+    from repro.core.feature_store import DeviceFeatureStore
+    from repro.data import make_mag_like
+    from repro.runner import build_model_and_embeds
+    graph = make_mag_like(n_paper=50, n_author=25)
+    graph.node_feats["paper"]["emb"] = graph.node_feats["paper"].pop("feat")
+    cfg = GSConfig.from_dict(_tiny_nc(
+        input={"dataset": "mag", "feat_field": "emb"})).resolved()
+    model, sparse = build_model_and_embeds(cfg, graph)
+    # paper carries real features under "emb": modeled as featured, no
+    # sparse table allocated, and the device store serves it
+    assert "paper" in dict(model.feat_dims)
+    assert "paper" not in sparse
+    assert "paper" in DeviceFeatureStore(graph,
+                                         feat_field=cfg.input.feat_field)
+
+
+def test_sparse_embeds_helper_uses_config_dim():
+    cfg = GSConfig.from_dict(_tiny_nc(gnn={"hidden": 16, "fanout": [2, 2],
+                                           "sparse_embed_dim": 8}))
+    graph = build_graph(cfg.resolved())
+    sparse = sparse_embeds_for(graph, cfg.gnn.sparse_embed_dim)
+    featureless = [nt for nt in graph.ntypes if not graph.has_feat(nt)]
+    assert sorted(sparse) == sorted(featureless)
+    assert all(e.dim == 8 for e in sparse.values())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end per task: train -> persisted config -> artifact-only inference
+# ---------------------------------------------------------------------------
+def test_nc_train_then_artifact_only_inference(tmp_path):
+    from repro.cli.gs import main
+    conf = tmp_path / "nc.yaml"
+    conf.write_text(json.dumps(_tiny_nc(tmp_path)))  # JSON is valid YAML
+    result = main(["--cf", str(conf)])
+    assert result["task"] == "node_classification"
+    model_dir = str(tmp_path / "model")
+    # the resolved config travels with the checkpoint
+    with open(os.path.join(model_dir, "config.json")) as f:
+        persisted = json.load(f)
+    assert persisted["gnn"]["fanout"] == [2, 2]
+    assert persisted["node_classification"]["target_ntype"] == "paper"
+    # inference needs only the artifact: no --cf, no task flags
+    r2 = main(["--inference", "--restore-model-path", model_dir])
+    assert 0.0 <= r2["accuracy"] <= 1.0
+    emb = np.load(tmp_path / "emb.npy")
+    assert emb.shape == (80, 16)
+
+
+def test_lp_train_then_artifact_only_inference(tmp_path):
+    r = run_config(GSConfig.from_dict(_tiny_lp(tmp_path)))
+    assert r["history"]
+    from repro.cli.gs import main
+    r2 = main(["--inference",
+               "--restore-model-path", str(tmp_path / "model")])
+    assert 0.0 <= r2["mrr"] <= 1.0
+
+
+def test_multitask_train_then_artifact_only_inference(tmp_path):
+    r = run_config(GSConfig.from_dict(_tiny_mt(tmp_path)))
+    assert set(r["val"]) == {"nc", "lp"}
+    model_dir = str(tmp_path / "model")
+    assert os.path.isdir(os.path.join(model_dir, "task_nc"))
+    assert os.path.isdir(os.path.join(model_dir, "task_lp"))
+    from repro.cli.gs import main
+    r2 = main(["--inference", "--restore-model-path", model_dir])
+    assert 0.0 <= r2["test"]["nc"]["accuracy"] <= 1.0
+    assert 0.0 <= r2["test"]["lp"]["mrr"] <= 1.0
+
+
+def test_cli_overrides_reach_the_run(tmp_path):
+    from repro.cli.gs import main
+    conf = tmp_path / "nc.yaml"
+    conf.write_text(json.dumps(_tiny_nc(tmp_path)))
+    main(["--cf", str(conf), "--gnn.sparse_embed_dim", "8"])
+    with open(tmp_path / "model" / "config.json") as f:
+        assert json.load(f)["gnn"]["sparse_embed_dim"] == 8
+
+
+# ---------------------------------------------------------------------------
+# gconstruct chaining: one config, construct -> train -> infer
+# ---------------------------------------------------------------------------
+def test_gconstruct_conf_chains_into_training(tmp_path):
+    rng = np.random.default_rng(0)
+    n = 60
+    labels = rng.integers(0, 3, n)
+    feat = (labels[:, None] + rng.normal(0, 0.3, (n, 4))).astype("float32")
+    src = rng.integers(0, n, 300)
+    dst = rng.integers(0, n, 300)
+    schema = {
+        "nodes": [{"node_type": "item",
+                   "data": {"node_id": [f"i{i}" for i in range(n)],
+                            "feat": feat.tolist(),
+                            "label": labels.tolist()},
+                   "features": [{"feature_col": "feat"}],
+                   "labels": [{"label_col": "label",
+                               "task_type": "classification"}]}],
+        "edges": [{"relation": ["item", "rel", "item"],
+                   "data": {"source_id": [f"i{i}" for i in src],
+                            "dest_id": [f"i{i}" for i in dst]}}],
+    }
+    raw = {"task": "node_classification",
+           "gnn": {"hidden": 16, "fanout": [2, 2]},
+           "hyperparam": {"batch_size": 32, "num_epochs": 1},
+           "input": {"gconstruct_conf": schema, "num_parts": 2,
+                     "part_method": "ldg",
+                     "save_graph_path": str(tmp_path / "parts")},
+           "output": {"save_model_path": str(tmp_path / "model")},
+           "node_classification": {"target_ntype": "item",
+                                   "num_classes": 3}}
+    r = run_config(GSConfig.from_dict(raw))
+    assert r["history"]
+    # construction artifacts landed where the config said
+    assert os.path.exists(tmp_path / "parts" / "metadata.json")
+    r2 = run_config(GSConfig.from_dict(
+        json.load(open(tmp_path / "model" / "config.json")) |
+        {"output": {"restore_model_path": str(tmp_path / "model")}}),
+        inference=True)
+    assert 0.0 <= r2["accuracy"] <= 1.0
+
+
+def test_unknown_task_not_in_registry():
+    cfg = GSConfig.from_dict(_tiny_nc())
+    cfg.task = "edge_classification"  # bypass from_dict choice check
+    with pytest.raises(KeyError, match="not registered"):
+        run_config(cfg)
