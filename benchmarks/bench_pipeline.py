@@ -4,17 +4,23 @@ Part 1 (``t2/``): for pre-trained vs fine-tuned LM (+GNN): data-processing
 time, LM time cost, epoch duration, and the task metric — the exact
 columns of the paper's Table 2, at CPU scale.
 
-Part 2 (``pipe/``): the device-resident pipeline (docs/pipeline.md).
-Trains the same GNN twice over identical batches:
+Part 2 (``pipe/``): the three minibatch feed modes (docs/pipeline.md).
+Trains the same GNN over identical seed schedules:
 
-- ``pipe/host_step``   — DistDGL-style: features gathered host-side, the
-  (frontier_rows, dim) float block crosses host->device every batch.
-- ``pipe/device_step`` — feature tables device-resident, in-jit gather +
-  double-buffered prefetch: only int32 index blocks and bool masks cross.
+- ``pipe/host_step``     — DistDGL-style: features gathered host-side,
+  the (frontier_rows, dim) float block crosses host->device every batch.
+- ``pipe/device_step`` / ``pipe/sample_host`` — feature tables
+  device-resident, in-jit gather + double-buffered prefetch, but
+  neighbor sampling still host numpy: int32 index blocks + bool masks
+  cross per batch (one measurement, two row names — ``sample_host`` is
+  the sampling-location baseline for the row below).
+- ``pipe/sample_device`` — feed mode 3: sampling, gather, and the
+  optimizer update all run inside one jitted program; epochs are a
+  ``lax.scan``; only int32 seed ids + labels cross.
 
 The ``derived`` column carries ``h2d_bytes=…/step``: read it as the bytes
 a trainer step forces across the host->device boundary — the quantity the
-device path is built to shrink (step time must not regress).
+device paths are built to shrink (step time must not regress).
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ from benchmarks.common import Bench
 from repro.core.embedding import SparseEmbedding
 from repro.core.feature_store import DeviceFeatureStore
 from repro.core.lm_gnn import compute_lm_embeddings, finetune_lm_nc
+from repro.core.sampling import DeviceNeighborSampler
 from repro.core.text_encoder import bert_tiny_config
 from repro.data import make_mag_like
 from repro.gconstruct.partition import ldg_partition
@@ -33,8 +40,8 @@ from repro.core.dist_graph import PartitionedGraph
 from repro.gnn.model import model_meta_from_graph
 from repro.models.params import init_params
 from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
-                           GSgnnNodeTrainer, PrefetchIterator,
-                           host_transfer_bytes)
+                           GSgnnNodeDeviceDataLoader, GSgnnNodeTrainer,
+                           PrefetchIterator, host_transfer_bytes)
 import jax
 
 
@@ -100,12 +107,41 @@ def _bench_feed_paths(bench: Bench, fast: bool = True):
         resident = store.nbytes() if store is not None else 0
         return np.median(times) / max(n_steps, 1), bytes_step, resident
 
+    def _run_sample_device():
+        """Feed mode 3: the fused sample->gather->step program."""
+        sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+        store = DeviceFeatureStore(g)
+        sampler = DeviceNeighborSampler(g, [5, 5], seed=0)
+        trainer = GSgnnNodeTrainer(model, "paper", num_classes=8, lr=1e-2,
+                                   sparse_embeds=sparse,
+                                   evaluator=GSgnnAccEvaluator(),
+                                   feature_store=store,
+                                   device_sampler=sampler)
+        loader = GSgnnNodeDeviceDataLoader(data, "paper", tr, [5, 5], 128,
+                                           seed=0, sampler=sampler)
+        bytes_step = int(np.mean([host_transfer_bytes(b) for b in loader]))
+        hist = trainer.fit(loader, num_epochs=epochs)
+        t_step = float(np.median(
+            [h["epoch_time_s"] for h in hist[1:]])) / loader.num_batches
+        return t_step, bytes_step, store.nbytes() + sampler.nbytes()
+
     host_t, host_b, _ = _run(host_features=True, prefetch=0)
     dev_t, dev_b, resident = _run(host_features=False, prefetch=2)
+    samp_t, samp_b, samp_res = _run_sample_device()
     bench.add("pipe/host_step", host_t * 1e6, f"h2d_bytes={host_b}/step")
     bench.add("pipe/device_step", dev_t * 1e6,
               f"h2d_bytes={dev_b}/step bytes_saved={1 - dev_b / host_b:.0%}"
               f" resident={resident}B")
+    bench.add("pipe/sample_host", dev_t * 1e6, f"h2d_bytes={dev_b}/step")
+    bench.add("pipe/sample_device", samp_t * 1e6,
+              f"h2d_bytes={samp_b}/step speedup={dev_t / samp_t:.1f}x"
+              f" resident={samp_res}B")
+
+
+def run_smoke(bench: Bench):
+    """CI smoke: the feed-path microbench at tiny size — proves all three
+    feed modes train end to end and emits their h2d/step rows."""
+    _bench_feed_paths(bench, fast=True)
 
 
 def run(bench: Bench, fast: bool = True):

@@ -32,6 +32,9 @@ def main() -> None:
                     help="paper-scale (slow) sizes instead of CI sizes")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite keys, e.g. t4,t6")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: run each selected suite's run_smoke "
+                         "(suites without one are skipped)")
     ap.add_argument("--json", default=None,
                     help="also write collected rows to this JSON file")
     args = ap.parse_args()
@@ -42,10 +45,15 @@ def main() -> None:
     t0 = time.time()
     for key in keys:
         mod_name, desc = SUITES[key]
-        print(f"# === {key}: {desc} ===", flush=True)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        if args.smoke and not hasattr(mod, "run_smoke"):
+            continue
+        print(f"# === {key}: {desc} ===", flush=True)
         t1 = time.time()
-        mod.run(bench, fast=not args.full)
+        if args.smoke:
+            mod.run_smoke(bench)
+        else:
+            mod.run(bench, fast=not args.full)
         print(f"# {key} done in {time.time() - t1:.1f}s", flush=True)
     print(f"# total {time.time() - t0:.1f}s", flush=True)
     if args.json:

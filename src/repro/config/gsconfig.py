@@ -168,6 +168,12 @@ class GnnConfig:
     # embedding dim for featureless node types (learnable sparse tables);
     # previously hardcoded to 16 in each CLI
     sparse_embed_dim: int = _field("int", 16)
+    # Pallas kernel routing (replaces the old set_use_pallas global):
+    # route aggregation/sampling hot loops through the Pallas kernels;
+    # pallas_interpret=true keeps the CPU interpreter (kernel debugging),
+    # set it false on real TPU for compiled kernels
+    use_pallas: bool = _field("bool", False)
+    pallas_interpret: bool = _field("bool", True)
 
 
 @dataclasses.dataclass
@@ -178,6 +184,11 @@ class HyperparamConfig:
     seed: int = _field("int", 0)
     # double-buffer depth for the sampler thread (0 = synchronous)
     prefetch: int = _field("int", 2)
+    # feed mode 3 (docs/pipeline.md): neighbor sampling runs inside the
+    # jitted step against device-resident CSR tables; batches ship only
+    # int32 seed ids + labels, epochs run under lax.scan.  Requires
+    # device_features: true so raw-featured ntypes are store-served.
+    sample_on_device: bool = _field("bool", False)
 
 
 @dataclasses.dataclass
@@ -308,6 +319,16 @@ class GSConfig:
                 raise _err(f"hyperparam.{key}", "must be positive")
         if h.lr <= 0:
             raise _err("hyperparam.lr", "must be positive")
+        if h.sample_on_device:
+            if self.task != "node_classification":
+                raise _err("hyperparam.sample_on_device",
+                           "device-resident sampling currently supports "
+                           "task: node_classification only")
+            if not self.device_features:
+                raise _err("hyperparam.sample_on_device",
+                           "requires device_features: true — in-jit "
+                           "sampling can only gather raw features from "
+                           "device-resident tables")
         if (inp.dataset is None) == (inp.gconstruct_conf is None):
             raise _err("input",
                        "exactly one of 'input.dataset' (built-in synthetic "

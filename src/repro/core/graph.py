@@ -37,6 +37,59 @@ class CSC:
                    edge_ids=order.astype(np.int64))
 
 
+@dataclasses.dataclass
+class DeviceCSR:
+    """Device-resident dst-indexed adjacency for in-jit neighbor sampling.
+
+    The same segments as :class:`CSC`, but int32 jax arrays placed on
+    device once (the sampling analogue of ``DeviceFeatureStore``): a
+    minibatch then ships only seed ids across host->device and the
+    ``repro.kernels.nbr_sample`` draw reads these tables in-jit.
+    ``col_idx``/``edge_id`` are padded to a lane-friendly multiple (tail
+    entries are never addressed by an unmasked draw), so shapes are
+    static and at least length 1 even for empty edge types.  Optionally
+    row-sharded over a mesh axis via ``common/sharding.shard_rows``.
+    """
+    row_ptr: object          # (num_dst + 1,) int32 jax.Array
+    col_idx: object          # (E_pad,) int32 jax.Array
+    edge_id: object          # (E_pad,) int32 jax.Array
+    num_edges: int           # real (unpadded) edge count
+
+    @staticmethod
+    def from_csc(csc: "CSC", mesh=None, row_axis: str = "data",
+                 pad_multiple: int = 128) -> "DeviceCSR":
+        import jax.numpy as jnp
+        e = len(csc.indices)
+        # e itself must fit: row_ptr[-1] == e (one past the largest edge id)
+        checks = [(e, "edge count"), (int(csc.indptr[-1]), "indptr range")]
+        if e:
+            checks += [(int(csc.indices.max()), "node ids"),
+                       (int(csc.edge_ids.max()), "edge ids")]
+        for val, what in checks:
+            if val >= 2 ** 31:
+                raise ValueError(
+                    f"{what} ({val}) exceeds the int32 device CSR range; "
+                    f"graphs beyond 2^31 need an int64 path")
+        e_pad = max(pad_multiple, -(-e // pad_multiple) * pad_multiple)
+        col = np.zeros(e_pad, np.int32)
+        eid = np.zeros(e_pad, np.int32)
+        col[:e] = csc.indices
+        eid[:e] = csc.edge_ids
+        row_ptr = jnp.asarray(csc.indptr.astype(np.int32))
+        col_idx = jnp.asarray(col)
+        edge_id = jnp.asarray(eid)
+        if mesh is not None:
+            from repro.common.sharding import shard_rows
+            col_idx = shard_rows(mesh, col_idx, row_axis)
+            edge_id = shard_rows(mesh, edge_id, row_axis)
+        return DeviceCSR(row_ptr=row_ptr, col_idx=col_idx, edge_id=edge_id,
+                         num_edges=e)
+
+    def nbytes(self) -> int:
+        return sum(int(t.nbytes)
+                   for t in (self.row_ptr, self.col_idx, self.edge_id))
+
+
 class HeteroGraph:
     def __init__(self,
                  num_nodes: Dict[str, int],
@@ -51,6 +104,7 @@ class HeteroGraph:
         self.edge_feats = edge_feats or {}
         self.edge_times = edge_times or {}
         self._csc: Dict[EType, CSC] = {}
+        self._device_csr: Dict[EType, DeviceCSR] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -72,6 +126,20 @@ class HeteroGraph:
             self._csc[etype] = CSC.from_coo(src, dst,
                                             self.num_nodes[etype[2]])
         return self._csc[etype]
+
+    def device_csr(self, etype: EType, mesh=None,
+                   row_axis: str = "data") -> DeviceCSR:
+        """The etype's adjacency as device-resident int32 tables.  The
+        default (unsharded) placement is cached — placed once, like
+        feature-store tables; mesh-sharded requests always build fresh so
+        a cached unsharded table can never masquerade as sharded (or
+        vice versa)."""
+        if mesh is not None:
+            return DeviceCSR.from_csc(self.csc(etype), mesh=mesh,
+                                      row_axis=row_axis)
+        if etype not in self._device_csr:
+            self._device_csr[etype] = DeviceCSR.from_csc(self.csc(etype))
+        return self._device_csr[etype]
 
     def in_degrees(self, etype: EType) -> np.ndarray:
         c = self.csc(etype)

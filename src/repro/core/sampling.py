@@ -177,6 +177,223 @@ class NeighborSampler:
                          seeds=seeds, seed_mask={})
 
 
+# ---------------------------------------------------------------------------
+# device-resident sampling (feed mode 3, docs/pipeline.md)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlanEdge:
+    """Static metadata of one edge block of a planned minibatch."""
+    etype: EType
+    num_dst: int
+    fanout: int
+    src_offset: int
+    has_delta_t: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanLayer:
+    edges: Tuple[PlanEdge, ...]
+    dst_counts: Tuple[Tuple[str, int], ...]
+    src_counts: Tuple[Tuple[str, int], ...]
+    self_offsets: Tuple[Tuple[str, int], ...]
+    # frontier build recipe per src ntype, in concatenation order:
+    # ("self", ntype) -> the layer's dst rows; ("edge", i) -> edges[i] draws
+    parts: Tuple[Tuple[str, Tuple[Tuple[str, int], ...]], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplePlan:
+    """The shapes/offsets side of a device-sampled minibatch.
+
+    Fully determined by (seed counts, fanouts, graph etypes) — the same
+    invariant that makes ``BlockSchema`` a jit cache key — and laid out
+    *identically* to the host sampler's MFG blocks, so the same
+    ``gather_seg_aggr`` kernels consume either path.  ``layers[0]``
+    consumes raw features (host block order).
+    """
+    layers: Tuple[PlanLayer, ...]
+    seed_counts: Tuple[Tuple[str, int], ...]
+
+
+def plan_sample(graph: HeteroGraph, fanouts: Sequence,
+                seed_counts: Dict[str, int]) -> SamplePlan:
+    """Run the host sampler's layer loop symbolically (counts only)."""
+    L = len(fanouts)
+    frontier = {nt: int(c) for nt, c in seed_counts.items()}
+    layers: List[PlanLayer] = []
+    for layer in range(L - 1, -1, -1):
+        fan = fanouts[layer]
+        dst_counts = dict(frontier)
+        parts: Dict[str, List[Tuple[str, int]]] = \
+            {nt: [("self", 0)] for nt in dst_counts}
+        part_counts: Dict[str, List[int]] = \
+            {nt: [c] for nt, c in dst_counts.items()}
+        self_offsets: Dict[str, Optional[int]] = {nt: 0 for nt in dst_counts}
+        edges: List[PlanEdge] = []
+        for etype in graph.etypes:
+            s, r, d = etype
+            if d not in dst_counts or dst_counts[d] == 0:
+                continue
+            f = fan[etype] if isinstance(fan, dict) else int(fan)
+            if s not in part_counts:
+                part_counts[s] = []
+                parts[s] = []
+                self_offsets.setdefault(s, None)
+            offset = sum(part_counts[s])
+            parts[s].append(("edge", len(edges)))
+            part_counts[s].append(dst_counts[d] * f)
+            edges.append(PlanEdge(
+                etype=etype, num_dst=dst_counts[d], fanout=f,
+                src_offset=offset,
+                has_delta_t=etype in graph.edge_times))
+        src_counts = {nt: sum(cs) for nt, cs in part_counts.items()}
+        layers.append(PlanLayer(
+            edges=tuple(edges),
+            dst_counts=tuple(sorted(dst_counts.items())),
+            src_counts=tuple(sorted(src_counts.items())),
+            self_offsets=tuple(sorted(
+                (nt, off) for nt, off in self_offsets.items()
+                if off is not None)),
+            parts=tuple(sorted((nt, tuple(p)) for nt, p in parts.items())),
+        ))
+        frontier = src_counts
+    layers.reverse()
+    return SamplePlan(layers=tuple(layers),
+                      seed_counts=tuple(sorted(
+                          (nt, int(c)) for nt, c in seed_counts.items())))
+
+
+class DeviceNeighborSampler:
+    """Fixed-fanout sampler that draws *inside jit* against device CSR.
+
+    The host :class:`NeighborSampler` runs per-batch numpy on the CPU and
+    ships index/mask blocks host->device every step; this sampler places
+    per-etype ``row_ptr``/``col_idx``/``edge_id`` tables on device once
+    (``HeteroGraph.device_csr``) and draws fanout neighbors with
+    counter-based ``jax.random`` keys (``repro.kernels.nbr_sample``), so
+    sample -> feature gather -> train step fuse into one jitted program
+    and a batch ships only int32 seed ids.  The emitted frontier layout
+    is byte-identical to the host sampler's (same ``BlockSchema``, same
+    mask semantics for zero-degree rows), only the random stream differs.
+    """
+
+    def __init__(self, graph: HeteroGraph, fanouts: Sequence, seed: int = 0,
+                 use_pallas: bool = False, interpret: bool = True,
+                 mesh=None, row_axis: str = "data"):
+        import jax
+        import jax.numpy as jnp
+        self.g = graph
+        self.fanouts = list(fanouts)
+        self.seed = int(seed)
+        self.use_pallas = bool(use_pallas)
+        self.interpret = bool(interpret)
+        self.base_key = jax.random.PRNGKey(self.seed)
+        # device tables: one CSR (+ optional edge-time table) per etype;
+        # passed into the jitted step as a pytree argument, placed once
+        self.tables = {}
+        for et in graph.etypes:
+            csr = graph.device_csr(et, mesh=mesh, row_axis=row_axis)
+            entry = {"row_ptr": csr.row_ptr, "col_idx": csr.col_idx,
+                     "edge_id": csr.edge_id}
+            if et in graph.edge_times:
+                entry["times"] = jnp.asarray(graph.edge_times[et],
+                                             jnp.float32)
+            self.tables[et] = entry
+        self._plans: Dict[Tuple[Tuple[str, int], ...], SamplePlan] = {}
+
+    def nbytes(self) -> int:
+        return sum(int(t.nbytes) for entry in self.tables.values()
+                   for t in entry.values())
+
+    # ------------------------------------------------------------------
+    def plan_for(self, seed_counts: Dict[str, int]) -> SamplePlan:
+        key = tuple(sorted((nt, int(c)) for nt, c in seed_counts.items()))
+        if key not in self._plans:
+            self._plans[key] = plan_sample(self.g, self.fanouts,
+                                           dict(key))
+        return self._plans[key]
+
+    # ------------------------------------------------------------------
+    def sample(self, tables, plan: SamplePlan, seeds, step,
+               exclude=None):
+        """Trace one minibatch draw (call inside jit).
+
+        tables: the sampler's ``.tables`` pytree (passed through the jit
+        boundary so the CSR buffers stay arguments, not baked constants);
+        seeds: {ntype: (count,) int} matching ``plan.seed_counts``;
+        step: traced int32 step counter (the RNG fold-in);
+        exclude: optional {etype: (ex_src (E,), ex_dst (E,)) int32} of
+        target-edge endpoint pairs, padded with -1 (SpotTarget: sampled
+        batch-target edges are masked out; see ``exclusion_pairs``).
+
+        Returns (masks, delta_t, frontier): per-layer {ekey: (n, f)} bool
+        masks and float Δt dicts in block order (``[0]`` consumes raw
+        features), and the frontier[0] int32 ids per ntype — everything
+        the GNN apply + in-jit feature gather need.
+        """
+        import jax
+        import jax.numpy as jnp
+        frontier = {nt: jnp.asarray(seeds[nt]).astype(jnp.int32)
+                    for nt, _ in plan.seed_counts}
+        from repro.kernels.nbr_sample import nbr_sample
+        layer_masks: List[Dict[str, object]] = []
+        layer_dts: List[Dict[str, object]] = []
+        # sampling walks top (seeds) -> bottom; plan stores block order
+        for li, pl_layer in enumerate(reversed(plan.layers)):
+            draws = []
+            masks: Dict[str, object] = {}
+            dts: Dict[str, object] = {}
+            for ei, pe in enumerate(pl_layer.edges):
+                t = tables[pe.etype]
+                key = jax.random.fold_in(
+                    jax.random.fold_in(self.base_key, step),
+                    li * 131071 + ei)
+                dst_ids = frontier[pe.etype[2]]
+                nbr, eid, mask = nbr_sample(
+                    t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids, key,
+                    fanout=pe.fanout, use_pallas=self.use_pallas,
+                    interpret=self.interpret)
+                if exclude is not None and pe.etype in exclude:
+                    ex_src, ex_dst = exclude[pe.etype]
+                    hit = (nbr[:, :, None] == ex_src[None, None, :]) \
+                        & (dst_ids[:, None, None] == ex_dst[None, None, :])
+                    mask = mask & ~hit.any(axis=-1)
+                ek = "___".join(pe.etype)
+                masks[ek] = mask
+                if pe.has_delta_t:
+                    dts[ek] = jnp.take(t["times"], eid.reshape(-1),
+                                       axis=0).reshape(eid.shape)
+                draws.append(nbr)
+            new_frontier = {}
+            for nt, recipe in pl_layer.parts:
+                arrs = [frontier[nt] if kind == "self"
+                        else draws[idx].reshape(-1)
+                        for kind, idx in recipe]
+                new_frontier[nt] = (jnp.concatenate(arrs)
+                                    if len(arrs) > 1 else arrs[0])
+            layer_masks.append(masks)
+            layer_dts.append(dts)
+            frontier = new_frontier
+        layer_masks.reverse()
+        layer_dts.reverse()
+        return layer_masks, layer_dts, frontier
+
+
+def exclusion_pairs(src: np.ndarray, dst: np.ndarray,
+                    pad_to: Optional[int] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(src, dst) target-edge endpoints for the device sampler's
+    exclusion mask, padded with -1 (matches no sampled edge; int32-safe
+    at any graph scale, unlike a combined src*|V|+dst code)."""
+    src = src.astype(np.int32)
+    dst = dst.astype(np.int32)
+    if pad_to is not None and len(src) < pad_to:
+        fill = np.full(pad_to - len(src), -1, np.int32)
+        src = np.concatenate([src, fill])
+        dst = np.concatenate([dst, fill])
+    return src, dst
+
+
 def pad_seeds(ids: np.ndarray, batch_size: int) -> Tuple[np.ndarray, np.ndarray]:
     """Pad a seed array to a static batch size; returns (padded, mask)."""
     n = len(ids)

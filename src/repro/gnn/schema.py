@@ -13,7 +13,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampling import MFGBlock, MiniBatch
+from repro.core.sampling import MFGBlock, MiniBatch, SamplePlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +67,26 @@ def schema_of(mb: MiniBatch) -> BlockSchema:
             dst_counts=tuple(sorted(blk.dst_counts.items())),
             src_counts=tuple(sorted(blk.src_counts.items())),
             self_offsets=tuple(sorted(blk.self_offsets.items())),
+        ))
+    return BlockSchema(layers=tuple(layers))
+
+
+def schema_of_plan(plan: SamplePlan) -> BlockSchema:
+    """A device ``SamplePlan`` and a host-sampled minibatch with the same
+    (seed counts, fanouts, etypes) produce *equal* BlockSchemas — one jit
+    cache entry covers both feed paths."""
+    layers = []
+    for pl_layer in plan.layers:
+        edges = tuple(
+            EdgeMeta(ekey=ekey(pe.etype), src_t=pe.etype[0],
+                     rel=pe.etype[1], dst_t=pe.etype[2], num_dst=pe.num_dst,
+                     fanout=pe.fanout, src_offset=pe.src_offset)
+            for pe in pl_layer.edges)
+        layers.append(LayerSchema(
+            edges=edges,
+            dst_counts=pl_layer.dst_counts,
+            src_counts=pl_layer.src_counts,
+            self_offsets=pl_layer.self_offsets,
         ))
     return BlockSchema(layers=tuple(layers))
 

@@ -1,0 +1,6 @@
+from repro.kernels.nbr_sample.kernel import nbr_sample_pallas
+from repro.kernels.nbr_sample.ops import nbr_sample
+from repro.kernels.nbr_sample.ref import nbr_sample_ref, segment_bounds_ref
+
+__all__ = ["nbr_sample", "nbr_sample_pallas", "nbr_sample_ref",
+           "segment_bounds_ref"]

@@ -1,0 +1,40 @@
+"""jit'd public wrapper for nbr_sample.
+
+The random stream is counter-based: callers derive a fresh
+``jax.random`` key per (step, layer, edge-block) with ``fold_in``, the
+wrapper turns it into one uniform 32-bit word per (dst, fanout) slot, and
+the kernel/oracle map words onto CSR segments.  A config seed therefore
+fully determines the sample stream, on any backend, inside or outside
+jit.
+
+On CPU the kernel body executes in interpret mode (correctness path);
+on TPU set interpret=False for the compiled kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.nbr_sample.kernel import nbr_sample_pallas
+from repro.kernels.nbr_sample.ref import nbr_sample_ref, segment_bounds_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fanout", "use_pallas", "interpret"))
+def nbr_sample(row_ptr, col_idx, edge_id, dst_ids, key, *, fanout: int,
+               use_pallas: bool = False, interpret: bool = True):
+    """Draw ``fanout`` in-neighbors per dst id from a device CSR.
+
+    row_ptr: (num_dst+1,) int32; col_idx/edge_id: (E,) int32 padded
+    tables; dst_ids: (n,) int; key: jax PRNG key ->
+    (nbr (n, fanout) int32, eid (n, fanout) int32, mask (n, fanout) bool).
+    Rows with degree 0 are fully masked (and gather row 0, discarded).
+    """
+    starts, degs = segment_bounds_ref(row_ptr, dst_ids)
+    bits = jax.random.bits(key, (dst_ids.shape[0], fanout), jnp.uint32)
+    if use_pallas:
+        return nbr_sample_pallas(bits, starts, degs, col_idx, edge_id,
+                                 interpret=interpret)
+    return nbr_sample_ref(bits, starts, degs, col_idx, edge_id)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the nbr_sample kernel.
+
+The segmented random-gather: row i owns the CSR segment
+``[starts[i], starts[i] + degs[i])`` of ``col_idx``/``edge_id`` and draws
+``fanout`` entries with replacement, one per uniform 32-bit word in
+``bits``.  The draw is ``bits % deg`` (modulo bias is < deg / 2^32 —
+negligible at any real degree), rows with ``deg == 0`` are fully masked
+and their (clamped) gathers discarded.
+
+The oracle and the Pallas kernel consume the *same* pre-generated bits
+(counter-based ``jax.random`` keys, drawn in ops.py), so kernel-vs-ref
+parity is exact — the kernel fuses draw + double gather, it does not own
+the random stream.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nbr_sample_ref(bits, starts, degs, col_idx, edge_id):
+    """bits: (n, f) uint32; starts/degs: (n,) int32 CSR segment per row;
+    col_idx/edge_id: (E,) int32 tables -> (nbr (n,f), eid (n,f), mask (n,f))."""
+    n, f = bits.shape
+    deg_u = jnp.maximum(degs, 1).astype(jnp.uint32)
+    draw = (bits % deg_u[:, None]).astype(jnp.int32)
+    flat = jnp.clip(starts[:, None] + draw, 0, col_idx.shape[0] - 1)
+    nbr = jnp.take(col_idx, flat.reshape(-1), axis=0).reshape(n, f)
+    eid = jnp.take(edge_id, flat.reshape(-1), axis=0).reshape(n, f)
+    mask = jnp.broadcast_to((degs > 0)[:, None], (n, f))
+    return nbr, eid, mask
+
+
+def segment_bounds_ref(row_ptr, dst_ids):
+    """CSR segment (starts, degs) of each dst id; the cheap XLA prologue
+    shared by the oracle and kernel dispatch paths."""
+    dst_ids = dst_ids.astype(jnp.int32)
+    starts = jnp.take(row_ptr, dst_ids, axis=0)
+    ends = jnp.take(row_ptr, dst_ids + 1, axis=0)
+    return starts, ends - starts

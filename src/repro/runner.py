@@ -20,6 +20,7 @@ from __future__ import annotations
 import json
 from typing import Dict, Type
 
+import jax
 import numpy as np
 
 from repro.checkpoint import (load_multitask_trainer, load_trainer,
@@ -28,6 +29,7 @@ from repro.config import GSConfig, load_config_dict
 from repro.core.embedding import SparseEmbedding
 from repro.core.feature_store import DeviceFeatureStore
 from repro.core.graph import HeteroGraph
+from repro.core.sampling import DeviceNeighborSampler
 from repro.core.spot_target import exclude_eval_edges, split_edges
 from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
                         make_temporal_graph)
@@ -35,7 +37,8 @@ from repro.gnn.model import model_meta_from_graph
 from repro.trainer import (GSgnnAccEvaluator, GSgnnData,
                            GSgnnLinkPredictionDataLoader,
                            GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator,
-                           GSgnnNodeDataLoader, GSgnnNodeTrainer)
+                           GSgnnNodeDataLoader, GSgnnNodeDeviceDataLoader,
+                           GSgnnNodeTrainer)
 from repro.trainer.multitask import GSgnnMultiTaskTrainer, MultiTaskSpec
 
 TASK_REGISTRY: Dict[str, Type["TaskRunner"]] = {}
@@ -81,22 +84,29 @@ def build_graph(cfg: GSConfig) -> HeteroGraph:
 
 
 def sparse_embeds_for(graph: HeteroGraph, dim: int,
-                      feat_field: str = "feat"
+                      feat_field: str = "feat", seed: int = 0
                       ) -> Dict[str, SparseEmbedding]:
     """One learnable table per featureless node type (§3.3.2) — the single
-    construction point for what used to be duplicated `emb_dim = 16`."""
-    return {nt: SparseEmbedding(graph.num_nodes[nt], dim, name=nt)
-            for nt in graph.ntypes if not graph.has_feat(nt, feat_field)}
+    construction point for what used to be duplicated `emb_dim = 16`.
+    ``seed`` (hyperparam.seed) determines every table's init."""
+    featureless = [nt for nt in graph.ntypes
+                   if not graph.has_feat(nt, feat_field)]
+    keys = jax.random.split(jax.random.PRNGKey(seed),
+                            max(len(featureless), 1))
+    return {nt: SparseEmbedding(graph.num_nodes[nt], dim, name=nt, rng=k)
+            for k, nt in zip(keys, featureless)}
 
 
 def build_model_and_embeds(cfg: GSConfig, graph: HeteroGraph):
     ff = cfg.input.feat_field
-    sparse = sparse_embeds_for(graph, cfg.gnn.sparse_embed_dim, ff)
+    sparse = sparse_embeds_for(graph, cfg.gnn.sparse_embed_dim, ff,
+                               seed=cfg.hyperparam.seed)
     model = model_meta_from_graph(
         graph, cfg.gnn.model, hidden=cfg.gnn.hidden,
         num_layers=cfg.gnn.num_layers, nheads=cfg.gnn.nheads,
         extra_feat_dims={nt: cfg.gnn.sparse_embed_dim for nt in sparse},
-        feat_field=ff)
+        feat_field=ff, use_pallas=cfg.gnn.use_pallas,
+        pallas_interpret=cfg.gnn.pallas_interpret)
     return model, sparse
 
 
@@ -120,6 +130,21 @@ class TaskRunner:
             if cfg.device_features else None
         self.host_features = self.store is None
         self.hp = cfg.hyperparam
+        # feed mode 3: CSR tables on device, sampling inside the jitted
+        # step (validated: requires device_features + a node task)
+        self.device_sampler = DeviceNeighborSampler(
+            graph, cfg.gnn.fanout, seed=self.hp.seed,
+            use_pallas=cfg.gnn.use_pallas,
+            interpret=cfg.gnn.pallas_interpret) \
+            if self.hp.sample_on_device else None
+        # hyperparam.seed determines every host-side stream: splits,
+        # shuffling, samplers, negatives, and trainer/embedding init
+        self.trainer_rng = jax.random.PRNGKey(self.hp.seed)
+
+    def _split_rng(self):
+        """Fresh generator per call so repeated splits (train vs
+        inference) reproduce the same partition for one config."""
+        return np.random.default_rng(self.hp.seed)
 
     # subclasses implement
     def train(self) -> dict:
@@ -143,8 +168,9 @@ class NodeClassificationRunner(TaskRunner):
         self.target_ntype = nc.target_ntype
         self.trainer = GSgnnNodeTrainer(
             self.model, nc.target_ntype, num_classes=nc.num_classes,
-            lr=self.hp.lr, sparse_embeds=self.sparse,
-            evaluator=GSgnnAccEvaluator(), feature_store=self.store)
+            lr=self.hp.lr, rng=self.trainer_rng, sparse_embeds=self.sparse,
+            evaluator=GSgnnAccEvaluator(), feature_store=self.store,
+            device_sampler=self.device_sampler)
 
     def _loader(self, ids, shuffle=True):
         return GSgnnNodeDataLoader(
@@ -152,9 +178,19 @@ class NodeClassificationRunner(TaskRunner):
             self.hp.batch_size, shuffle=shuffle, seed=self.hp.seed,
             host_features=self.host_features)
 
+    def _train_loader(self, ids):
+        if self.device_sampler is not None:
+            return GSgnnNodeDeviceDataLoader(
+                self.data, self.target_ntype, ids, self.cfg.gnn.fanout,
+                self.hp.batch_size, seed=self.hp.seed,
+                sampler=self.device_sampler)
+        return self._loader(ids)
+
     def train(self) -> dict:
-        tr, va, _ = self.data.train_val_test_nodes(self.target_ntype)
-        hist = self.trainer.fit(self._loader(tr), self._loader(va, False),
+        tr, va, _ = self.data.train_val_test_nodes(self.target_ntype,
+                                                   rng=self._split_rng())
+        hist = self.trainer.fit(self._train_loader(tr),
+                                self._loader(va, False),
                                 num_epochs=self.hp.num_epochs, verbose=True,
                                 prefetch=self.hp.prefetch)
         return {"task": self.task_name, "history": hist}
@@ -170,7 +206,7 @@ class NodeClassificationRunner(TaskRunner):
             np.save(self.cfg.output.save_embed_path, emb)
             out["embed_shape"] = list(emb.shape)
             out["save_embed_path"] = self.cfg.output.save_embed_path
-        _, _, te = self.data.train_val_test_nodes(nt)
+        _, _, te = self.data.train_val_test_nodes(nt, rng=self._split_rng())
         out["accuracy"] = float(self.trainer.evaluate(
             self._loader(te, False)))
         return out
@@ -183,15 +219,15 @@ class LinkPredictionRunner(TaskRunner):
         lp = cfg.link_prediction
         self.lp = lp
         self.etype = tuple(lp.target_etype)
-        rng = np.random.default_rng(self.hp.seed)
-        self.tr_e, self.va_e, self.te_e = split_edges(rng, graph, self.etype)
+        self.tr_e, self.va_e, self.te_e = split_edges(self._split_rng(),
+                                                      graph, self.etype)
         self.train_graph = exclude_eval_edges(
             graph, self.etype, self.va_e, self.te_e) \
             if lp.exclude_eval_edges else graph
         self.trainer = GSgnnLinkPredictionTrainer(
             self.model, self.etype, loss=lp.loss, lr=self.hp.lr,
-            sparse_embeds=self.sparse, evaluator=GSgnnMrrEvaluator(),
-            feature_store=self.store)
+            rng=self.trainer_rng, sparse_embeds=self.sparse,
+            evaluator=GSgnnMrrEvaluator(), feature_store=self.store)
 
     def _loader(self, eids, shuffle=True, restrict=None):
         return GSgnnLinkPredictionDataLoader(
@@ -233,15 +269,17 @@ class MultiTaskRunner(TaskRunner):
             specs.append(spec)
             self._evals[t.name] = evals
         self.trainer = GSgnnMultiTaskTrainer(self.model, specs,
-                                             sparse_embeds=self.sparse)
+                                             sparse_embeds=self.sparse,
+                                             rng=self.trainer_rng)
 
     def _build_nc(self, t):
         nc = t.node_classification
-        tr, va, te = self.data.train_val_test_nodes(nc.target_ntype)
+        tr, va, te = self.data.train_val_test_nodes(nc.target_ntype,
+                                                    rng=self._split_rng())
         trainer = GSgnnNodeTrainer(
             self.model, nc.target_ntype, num_classes=nc.num_classes,
-            lr=self.hp.lr, evaluator=GSgnnAccEvaluator(),
-            feature_store=self.store)
+            lr=self.hp.lr, rng=self.trainer_rng,
+            evaluator=GSgnnAccEvaluator(), feature_store=self.store)
 
         def loader(ids, shuffle=True):
             return GSgnnNodeDataLoader(
@@ -257,13 +295,13 @@ class MultiTaskRunner(TaskRunner):
     def _build_lp(self, t):
         lp = t.link_prediction
         etype = tuple(lp.target_etype)
-        rng = np.random.default_rng(self.hp.seed)
-        tr_e, va_e, te_e = split_edges(rng, self.graph, etype)
+        tr_e, va_e, te_e = split_edges(self._split_rng(), self.graph, etype)
         train_graph = exclude_eval_edges(self.graph, etype, va_e, te_e) \
             if lp.exclude_eval_edges else None
         trainer = GSgnnLinkPredictionTrainer(
             self.model, etype, loss=lp.loss, lr=self.hp.lr,
-            evaluator=GSgnnMrrEvaluator(), feature_store=self.store)
+            rng=self.trainer_rng, evaluator=GSgnnMrrEvaluator(),
+            feature_store=self.store)
 
         def loader(eids, shuffle=True, restrict=None):
             return GSgnnLinkPredictionDataLoader(

@@ -1,4 +1,5 @@
 from repro.trainer.dataloading import (GSgnnData, GSgnnNodeDataLoader,
+                                       GSgnnNodeDeviceDataLoader,
                                        GSgnnEdgeDataLoader,
                                        GSgnnLinkPredictionDataLoader,
                                        PrefetchIterator, host_transfer_bytes)
@@ -8,8 +9,8 @@ from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
                                       GSgnnRegressionEvaluator)
 
 __all__ = [
-    "GSgnnData", "GSgnnNodeDataLoader", "GSgnnEdgeDataLoader",
-    "GSgnnLinkPredictionDataLoader",
+    "GSgnnData", "GSgnnNodeDataLoader", "GSgnnNodeDeviceDataLoader",
+    "GSgnnEdgeDataLoader", "GSgnnLinkPredictionDataLoader",
     "PrefetchIterator", "host_transfer_bytes",
     "GSgnnNodeTrainer", "GSgnnEdgeTrainer", "GSgnnLinkPredictionTrainer",
     "GSgnnAccEvaluator", "GSgnnMrrEvaluator", "GSgnnRegressionEvaluator",

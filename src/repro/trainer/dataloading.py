@@ -32,9 +32,10 @@ from repro.core.graph import EType, HeteroGraph
 from repro.core.negative_sampling import (in_batch_negatives, joint_negatives,
                                           local_joint_negatives,
                                           uniform_negatives)
-from repro.core.sampling import NeighborSampler, fetch_features, pad_seeds
+from repro.core.sampling import (DeviceNeighborSampler, NeighborSampler,
+                                 fetch_features, pad_seeds)
 from repro.core.spot_target import batch_exclusions
-from repro.gnn.schema import arrays_of, schema_of
+from repro.gnn.schema import arrays_of, schema_of, schema_of_plan
 
 
 @dataclasses.dataclass
@@ -100,6 +101,79 @@ class GSgnnNodeDataLoader(_BaseLoader):
             if labels is not None:
                 batch["labels"] = labels[ids]
             yield batch
+
+
+class GSgnnNodeDeviceDataLoader(_BaseLoader):
+    """Feed mode 3 (docs/pipeline.md): device-resident sampling.
+
+    The loader does no sampling at all — neighbor draws, feature gathers,
+    and the optimizer update all run inside the trainer's jitted step
+    against device-resident CSR/feature tables.  A batch therefore ships
+    only the int32 seed ids, their labels, and the padding mask
+    host->device; ``epoch_arrays`` stacks a whole epoch of them so
+    ``Trainer.fit`` can run the epoch as one ``lax.scan``.
+
+    ``sampler`` must be the same ``DeviceNeighborSampler`` the trainer
+    was built with (the step draws with the trainer's; the trainer
+    rejects a mismatch at fit time).  ``seed`` here governs only batch
+    shuffling — the sample stream comes from the sampler's seed.
+    """
+
+    sample_on_device = True
+
+    def __init__(self, data: GSgnnData, target_ntype: str,
+                 seed_ids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, shuffle: bool = True, seed: int = 0,
+                 sampler: Optional[DeviceNeighborSampler] = None,
+                 restrict_graph: Optional[HeteroGraph] = None):
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.target_ntype = target_ntype
+        self.seed_ids = np.asarray(seed_ids, np.int64)
+        self.fanout = list(fanout)
+        self.batch_size = batch_size
+        self.shuffle = shuffle
+        self.rng = np.random.default_rng(seed)
+        self.sampler = sampler if sampler is not None else \
+            DeviceNeighborSampler(self.graph, fanout, seed=seed)
+        self.plan = self.sampler.plan_for({target_ntype: batch_size})
+        self.schema = schema_of_plan(self.plan)
+        self.num_batches = -(-len(self.seed_ids) // batch_size)
+
+    def epoch_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One (shuffled) epoch as stacked (num_batches, batch_size)
+        arrays: int32 seeds, labels, bool seed masks — the only tensors
+        that cross host->device all epoch."""
+        order = (self.rng.permutation(len(self.seed_ids))
+                 if self.shuffle else np.arange(len(self.seed_ids)))
+        B = self.batch_size
+        seeds = np.zeros((self.num_batches, B), np.int32)
+        masks = np.zeros((self.num_batches, B), bool)
+        for i in range(self.num_batches):
+            idx = order[i * B:(i + 1) * B]
+            ids, m = pad_seeds(self.seed_ids[idx], B)
+            seeds[i], masks[i] = ids.astype(np.int32), m
+        labels = self.data.node_labels(self.target_ntype)
+        if labels is None:
+            labs = np.zeros_like(seeds)
+        elif np.issubdtype(labels.dtype, np.integer):
+            labs = labels[seeds].astype(np.int32)   # ship 4B, not host int64
+        else:
+            labs = labels[seeds].astype(np.float32)
+        return seeds, labs, masks
+
+    def __iter__(self) -> Iterator[dict]:
+        seeds, labs, masks = self.epoch_arrays()
+        for i in range(self.num_batches):
+            yield {
+                "schema": self.schema,
+                "plan": self.plan,
+                "sampler": self.sampler,
+                "sample_on_device": True,
+                "seeds": seeds[i],
+                "labels": labs[i],
+                "seed_mask": masks[i],
+            }
 
 
 class GSgnnEdgeDataLoader(_BaseLoader):
@@ -321,6 +395,13 @@ def host_transfer_bytes(batch, store_ntypes: Sequence[str] = (),
     recross the boundary.
     """
     total = 0
+    if batch.get("sample_on_device"):
+        # feed mode 3: seeds + labels + padding mask are the entire
+        # host->device payload (sampling/gather/update run in-jit)
+        for key in ("seeds", "labels", "seed_mask"):
+            if key in batch:
+                total += int(np.asarray(batch[key]).nbytes)
+        return total
     sparse_dims = sparse_dims or {}
     for f in batch["arrays"]["feats"].values():
         total += int(np.asarray(f).nbytes)

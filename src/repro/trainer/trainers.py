@@ -45,11 +45,44 @@ def _mse(preds, labels, mask):
     return (se * m).sum() / jnp.maximum(m.sum(), 1.0)
 
 
+def _sparse_adagrad(table, gsum, ids, grad_rows, lr):
+    """In-jit sparse adagrad with ``SparseEmbedding.apply_sparse_grad``'s
+    exact semantics: dedupe ids, sum duplicate-row grads, one adagrad
+    step per unique row, untouched rows untouched.  Two equivalent
+    lowerings, picked on static shapes: a dense table-shaped scatter
+    when the table is minibatch-sized (cheapest — no sort), and an
+    O(frontier) sort + segment-sum + row scatter when the table dwarfs
+    the frontier, so the step never scales with total embedding rows."""
+    if table.shape[0] <= 4 * ids.shape[0]:
+        summed = jnp.zeros_like(table).at[ids].add(
+            grad_rows.astype(table.dtype))
+        gnorm = jnp.sum(summed.astype(jnp.float32) ** 2, axis=1)
+        gsum = gsum + gnorm      # untouched rows: gnorm == 0, unchanged
+        scale = lr / (jnp.sqrt(gsum) + 1e-10)
+        return table - (scale[:, None] * summed).astype(table.dtype), gsum
+    n = ids.shape[0]
+    order = jnp.argsort(ids)
+    sid = ids[order]
+    gs = grad_rows[order].astype(jnp.float32)
+    starts = jnp.concatenate([jnp.ones((1,), bool), sid[1:] != sid[:-1]])
+    seg = jnp.cumsum(starts) - 1                     # segment per sorted row
+    summed = jax.ops.segment_sum(gs, seg, num_segments=n)   # (n, dim)
+    # representative id per segment; padding segments -> num_rows (dropped)
+    rep = jnp.full((n,), table.shape[0], sid.dtype).at[seg].min(sid)
+    gnorm = jnp.sum(summed ** 2, axis=1)
+    new_gsum = gsum[jnp.clip(rep, 0, table.shape[0] - 1)] + gnorm
+    scale = lr / (jnp.sqrt(new_gsum) + 1e-10)
+    table = table.at[rep].add(-(scale[:, None] * summed).astype(table.dtype),
+                              mode="drop")
+    gsum = gsum.at[rep].set(new_gsum, mode="drop")
+    return table, gsum
+
+
 class _TrainerBase:
     def __init__(self, model: GSgnnModel, task: str, out_dim: int = 1,
                  lr: float = 1e-3, rng=None,
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
-                 evaluator=None, feature_store=None):
+                 evaluator=None, feature_store=None, device_sampler=None):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(rng)
         self.model = model
@@ -65,6 +98,7 @@ class _TrainerBase:
         self.stepno = jnp.zeros((), jnp.int32)
         self.sparse_embeds = sparse_embeds or {}
         self.feature_store = feature_store
+        self.device_sampler = device_sampler
         self.evaluator = evaluator
         self._steps: Dict = {}
         self.history: List[dict] = []
@@ -112,7 +146,7 @@ class _TrainerBase:
     def _loss_and_out(self, params, feats, batch):
         raise NotImplementedError
 
-    def _make_step(self, schema, roles=None, neg_shape=None, k=0):
+    def _build_loss_fn(self, schema, roles=None, neg_shape=None, k=0):
         def loss_fn(params, feats, arrays, aux_in, gather_idx, tables):
             arr = dict(arrays)
             # device-resident path: gather raw features from the resident
@@ -123,6 +157,11 @@ class _TrainerBase:
             emb = gnn_apply_blocks(params["gnn"], self.model, schema, arr)
             return self._task_loss(params, emb, aux_in,
                                    roles=roles, neg_shape=neg_shape, k=k)
+        return loss_fn
+
+    def _make_step(self, schema, roles=None, neg_shape=None, k=0):
+        loss_fn = self._build_loss_fn(schema, roles=roles,
+                                      neg_shape=neg_shape, k=k)
 
         def step(params, opt_state, stepno, feats, arrays, aux_in,
                  gather_idx, tables):
@@ -150,7 +189,154 @@ class _TrainerBase:
         return self._steps[key]
 
     # ------------------------------------------------------------------
+    # device-resident sampling (feed mode 3, docs/pipeline.md): the whole
+    # sample -> gather -> loss -> optimizer chain is one jitted program;
+    # a batch ships only int32 seed ids (+ labels/seed mask).
+    # ------------------------------------------------------------------
+    def _device_seed_ntype(self) -> str:
+        raise NotImplementedError(
+            "sample_on_device currently supports node tasks only")
+
+    def _make_device_step(self, schema, plan):
+        sampler, store = self.device_sampler, self.feature_store
+        target_nt = self._device_seed_ntype()
+        input_nts = [nt for nt, _ in plan.layers[0].src_counts]
+        store_nts = tuple(nt for nt in input_nts
+                          if store is not None and nt in store)
+        sparse_nts = tuple(nt for nt in input_nts
+                           if nt not in store_nts and nt in self.sparse_embeds)
+        expected = dict(self.model.feat_dims)
+        missing = [nt for nt in input_nts
+                   if nt not in store_nts and nt not in sparse_nts
+                   and nt in expected]
+        if missing:
+            raise ValueError(
+                f"sample_on_device needs every featured ntype served "
+                f"in-jit, but {missing} have no feature_store/"
+                f"sparse_embeds entry — pass feature_store= (device "
+                f"features) for raw-featured ntypes")
+        loss_fn = self._build_loss_fn(schema)
+        sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+
+        def step(params, opt_state, stepno, sparse_state, tables, csr,
+                 seeds, labels, seed_mask):
+            masks, dts, frontier = sampler.sample(
+                csr, plan, {target_nt: seeds}, stepno)
+            arrays = {"masks": masks, "delta_t": dts}
+            gather_idx = {nt: frontier[nt] for nt in store_nts}
+            feats = {nt: sparse_state[nt][0][frontier[nt]]
+                     for nt in sparse_nts}
+            aux_in = {"labels": labels, "mask": seed_mask}
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, feats, arrays, aux_in, gather_idx, tables)
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state, params,
+                                                      stepno, lr)
+            sparse_state = dict(sparse_state)
+            for nt in sparse_nts:
+                sparse_state[nt] = _sparse_adagrad(
+                    *sparse_state[nt], frontier[nt], gf[nt], sparse_lrs[nt])
+            return params, opt_state, stepno + 1, sparse_state, loss, out
+        return step
+
+    @staticmethod
+    def _make_device_epoch(step):
+        """lax.scan the device step over a stacked epoch of seed batches:
+        one dispatch, zero host round-trips between minibatches."""
+        def epoch(params, opt_state, stepno, sparse_state, tables, csr,
+                  seeds, labels, seed_mask):
+            def body(carry, xs):
+                p, o, s, sp = carry
+                p, o, s, sp, loss, _ = step(p, o, s, sp, tables, csr, *xs)
+                return (p, o, s, sp), loss
+            (params, opt_state, stepno, sparse_state), losses = jax.lax.scan(
+                body, (params, opt_state, stepno, sparse_state),
+                (seeds, labels, seed_mask))
+            return params, opt_state, stepno, sparse_state, losses
+        return epoch
+
+    def _check_device_sampler(self, sampler):
+        """The jitted step draws with the *trainer's* sampler; a loader
+        built around a different one would silently train on a different
+        sample stream — fail loudly instead."""
+        if self.device_sampler is None:
+            raise ValueError(
+                "sample_on_device needs the trainer built with "
+                "device_sampler= (the same DeviceNeighborSampler as the "
+                "loader)")
+        if sampler is not None and sampler is not self.device_sampler:
+            raise ValueError(
+                "the loader's DeviceNeighborSampler is not the trainer's "
+                "device_sampler — the step draws with the trainer's, so "
+                "the loader's seed/tables would be silently ignored; "
+                "build the loader with sampler=trainer.device_sampler")
+
+    def _device_fns_for(self, schema, plan):
+        key = ("device", schema)
+        if key not in self._steps:
+            raw = self._make_device_step(schema, plan)
+            self._steps[key] = {
+                "step": jax.jit(raw, donate_argnums=(0, 1, 2, 3)),
+                "epoch": jax.jit(self._make_device_epoch(raw),
+                                 donate_argnums=(0, 1, 2, 3)),
+            }
+        return self._steps[key]
+
+    def _sparse_pack(self):
+        return {nt: (emb.table, emb.gsum)
+                for nt, emb in self.sparse_embeds.items()}
+
+    def _sparse_unpack(self, state):
+        for nt, (table, gsum) in state.items():
+            self.sparse_embeds[nt].table = table
+            self.sparse_embeds[nt].gsum = gsum
+
+    def _fit_batch_device(self, batch):
+        self._check_device_sampler(batch.get("sampler"))
+        fns = self._device_fns_for(batch["schema"], batch["plan"])
+        tables = (self.feature_store.tables
+                  if self.feature_store is not None else {})
+        state = self._sparse_pack()
+        self.params, self.opt_state, self.stepno, state, loss, out = \
+            fns["step"](self.params, self.opt_state, self.stepno, state,
+                        tables, self.device_sampler.tables,
+                        jnp.asarray(batch["seeds"], jnp.int32),
+                        jnp.asarray(batch["labels"]),
+                        jnp.asarray(batch["seed_mask"]))
+        self._sparse_unpack(state)
+        return float(loss), out
+
+    def _fit_device(self, loader, val_loader=None, num_epochs: int = 1,
+                    verbose: bool = False):
+        self._check_device_sampler(getattr(loader, "sampler", None))
+        fns = self._device_fns_for(loader.schema, loader.plan)
+        tables = (self.feature_store.tables
+                  if self.feature_store is not None else {})
+        csr = self.device_sampler.tables
+        for epoch in range(num_epochs):
+            seeds, labels, seed_mask = loader.epoch_arrays()
+            t0 = time.time()
+            state = self._sparse_pack()
+            self.params, self.opt_state, self.stepno, state, losses = \
+                fns["epoch"](self.params, self.opt_state, self.stepno,
+                             state, tables, csr, jnp.asarray(seeds),
+                             jnp.asarray(labels), jnp.asarray(seed_mask))
+            self._sparse_unpack(state)
+            losses = np.asarray(losses)  # forces completion of the scan
+            rec = {"epoch": epoch, "loss": float(losses.mean()),
+                   "epoch_time_s": time.time() - t0}
+            if val_loader is not None and self.evaluator is not None:
+                rec[self.evaluator.name] = self.evaluate(val_loader)
+            self.history.append(rec)
+            if verbose:
+                print(rec)
+        return self.history
+
+    # ------------------------------------------------------------------
     def fit_batch(self, batch):
+        if batch.get("sample_on_device"):
+            return self._fit_batch_device(batch)
         feats, emb_ids, gather_idx = self._feats_for(batch)
         step = self._step_for(batch)
         aux_in = self._aux_inputs(batch)
@@ -165,7 +351,11 @@ class _TrainerBase:
             log_every: int = 0, verbose: bool = False, prefetch: int = 2):
         """``prefetch > 0`` double-buffers the loader: a sampler thread
         builds batch t+1 while step t runs (0 = synchronous, the old
-        behavior)."""
+        behavior).  A device-sampling loader instead runs each epoch as
+        one fused ``lax.scan`` — there is nothing left to prefetch."""
+        if getattr(train_dataloader, "sample_on_device", False):
+            return self._fit_device(train_dataloader, val_dataloader,
+                                    num_epochs=num_epochs, verbose=verbose)
         from repro.trainer.dataloading import PrefetchIterator
         for epoch in range(num_epochs):
             t0 = time.time()
@@ -201,6 +391,9 @@ class GSgnnNodeTrainer(_TrainerBase):
         out_dim = num_classes if "classification" in task else 1
         super().__init__(model, task, out_dim=out_dim, **kw)
         self.target_ntype = target_ntype
+
+    def _device_seed_ntype(self) -> str:
+        return self.target_ntype
 
     def _aux_inputs(self, batch):
         return {"labels": jnp.asarray(batch["labels"]),

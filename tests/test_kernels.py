@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.nbr_sample import nbr_sample, segment_bounds_ref
 from repro.kernels.seg_aggr import (gather_seg_aggr, gather_seg_aggr_ref,
                                     seg_aggr, seg_aggr_ref)
 from repro.kernels.ssd_scan import ssd_forward, ssd_ref_sequential
@@ -88,6 +89,79 @@ def test_gather_seg_aggr_matches_unfused():
         unfused = seg_aggr(rows, m, reduce)
         np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
                                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# nbr_sample: segmented random-gather (device-resident neighbor sampling)
+# ---------------------------------------------------------------------------
+def _random_csr(num_dst, max_deg, num_src, rng, force_zero=()):
+    degs = rng.integers(0, max_deg + 1, num_dst)
+    for i in force_zero:
+        degs[i] = 0
+    row_ptr = np.zeros(num_dst + 1, np.int32)
+    row_ptr[1:] = np.cumsum(degs)
+    e = int(row_ptr[-1])
+    col = rng.integers(0, num_src, e).astype(np.int32)
+    eid = rng.permutation(e).astype(np.int32)
+    return row_ptr, col, eid, degs
+
+
+@pytest.mark.parametrize("shape", [
+    (40, 13, 4),       # small
+    (300, 257, 7),     # n not a block multiple, odd fanout
+    (64, 128, 32),     # block-sized rows
+    (10, 1, 1),        # single dst / fanout 1
+])
+def test_nbr_sample_kernel_matches_ref(shape):
+    """Kernel (interpret) and jnp oracle consume the same uniform bits,
+    so their draws must be bit-identical."""
+    num_dst, n, f = shape
+    rng = np.random.default_rng(3)
+    row_ptr, col, eid, _ = _random_csr(num_dst, 6, 99, rng, force_zero=(0,))
+    dst = jnp.asarray(rng.integers(0, num_dst, n), jnp.int32)
+    key = jax.random.PRNGKey(11)
+    out_ref = nbr_sample(jnp.asarray(row_ptr), jnp.asarray(col),
+                         jnp.asarray(eid), dst, key, fanout=f)
+    out_ker = nbr_sample(jnp.asarray(row_ptr), jnp.asarray(col),
+                         jnp.asarray(eid), dst, key, fanout=f,
+                         use_pallas=True)
+    for a, b in zip(out_ref, out_ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nbr_sample_draws_stay_in_segment():
+    rng = np.random.default_rng(5)
+    row_ptr, col, eid, degs = _random_csr(30, 5, 70, rng,
+                                          force_zero=(2, 9))
+    dst_np = rng.integers(0, 30, 50)
+    dst = jnp.asarray(dst_np, jnp.int32)
+    key = jax.random.PRNGKey(0)
+    nbr, e, m = nbr_sample(jnp.asarray(row_ptr), jnp.asarray(col),
+                           jnp.asarray(eid), dst, key, fanout=6)
+    nbr, e, m = np.asarray(nbr), np.asarray(e), np.asarray(m)
+    starts, dd = segment_bounds_ref(jnp.asarray(row_ptr), dst)
+    starts, dd = np.asarray(starts), np.asarray(dd)
+    # zero-degree rows fully masked, others fully valid (with replacement)
+    np.testing.assert_array_equal(m.all(axis=1), degs[dst_np] > 0)
+    np.testing.assert_array_equal(m.any(axis=1), degs[dst_np] > 0)
+    for i in range(50):
+        if dd[i]:
+            seg = set(col[starts[i]:starts[i] + dd[i]].tolist())
+            eseg = set(eid[starts[i]:starts[i] + dd[i]].tolist())
+            assert set(nbr[i].tolist()) <= seg
+            assert set(e[i].tolist()) <= eseg
+
+
+def test_nbr_sample_key_determines_stream():
+    rng = np.random.default_rng(6)
+    row_ptr, col, eid, _ = _random_csr(20, 8, 40, rng)
+    dst = jnp.asarray(rng.integers(0, 20, 32), jnp.int32)
+    args = (jnp.asarray(row_ptr), jnp.asarray(col), jnp.asarray(eid), dst)
+    a = nbr_sample(*args, jax.random.PRNGKey(1), fanout=5)
+    b = nbr_sample(*args, jax.random.PRNGKey(1), fanout=5)
+    c = nbr_sample(*args, jax.random.PRNGKey(2), fanout=5)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    assert (np.asarray(a[0]) != np.asarray(c[0])).any()
 
 
 @pytest.mark.parametrize("cfg", [

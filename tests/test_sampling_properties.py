@@ -5,7 +5,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import CSC, HeteroGraph
-from repro.core.sampling import NeighborSampler, pad_seeds
+from repro.core.sampling import (DeviceNeighborSampler, NeighborSampler,
+                                 exclusion_pairs, pad_seeds)
 from repro.data import make_mag_like
 
 
@@ -111,3 +112,135 @@ def test_exclude_pairs_masks_target_edges():
     eb = mb.blocks[0].edge_blocks[0]
     hit = eb.nbr_global[eb.mask]
     assert not np.isin(hit, [0, 1]).any()  # excluded srcs never pass mask
+
+
+# ---------------------------------------------------------------------------
+# device sampler parity vs the host sampler (same layout, same semantics;
+# only the random stream differs)
+# ---------------------------------------------------------------------------
+def _dev_sample(sampler, plan, seeds, step=0, exclude=None):
+    import jax.numpy as jnp
+    seeds = {nt: jnp.asarray(ids, jnp.int32) for nt, ids in seeds.items()}
+    masks, dts, frontier = sampler.sample(sampler.tables, plan, seeds,
+                                          jnp.int32(step), exclude=exclude)
+    return ([{k: np.asarray(v) for k, v in m.items()} for m in masks],
+            {nt: np.asarray(v) for nt, v in frontier.items()})
+
+
+@given(st.integers(1, 8), st.integers(2, 6), st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_device_schema_matches_host(fanout, batch, gseed):
+    """Self-row offsets, frontier sizes, edge offsets: the device plan's
+    BlockSchema must equal the host sampler's for the same seed counts."""
+    from repro.gnn.schema import schema_of, schema_of_plan
+    g = make_mag_like(n_paper=50, n_author=30, n_inst=8, n_field=4,
+                      avg_cites=3, seed=gseed)
+    host = NeighborSampler(g, [fanout, fanout], seed=0)
+    ids, _ = pad_seeds(np.arange(batch), batch)
+    mb = host.sample({"paper": ids})
+    dev = DeviceNeighborSampler(g, [fanout, fanout], seed=0)
+    plan = dev.plan_for({"paper": batch})
+    assert schema_of_plan(plan) == schema_of(mb)
+
+
+def test_device_zero_degree_rows_fully_masked():
+    """Isolated seeds get all-false mask rows at the exact same positions
+    as the host sampler; connected rows are all-true (with replacement)."""
+    g = HeteroGraph({"a": 5, "b": 5},
+                    {("a", "r", "b"): (np.array([0, 1]), np.array([0, 1]))})
+    host = NeighborSampler(g, [4], seed=0)
+    seeds = np.array([0, 1, 4])  # node 4 isolated
+    mb = host.sample({"b": seeds})
+    dev = DeviceNeighborSampler(g, [4], seed=0)
+    plan = dev.plan_for({"b": 3})
+    masks, _ = _dev_sample(dev, plan, {"b": seeds})
+    hm = mb.blocks[0].edge_blocks[0].mask
+    np.testing.assert_array_equal(masks[0]["a___r___b"], hm)
+    assert not masks[0]["a___r___b"][2].any()
+
+
+def test_device_sampled_neighbors_are_real_edges():
+    """Decode the frontier through the plan's offsets: every unmasked
+    draw must be an existing (src, dst) edge, and padded layout must put
+    each edge block's rows at its recorded src_offset."""
+    g = make_mag_like(n_paper=50, n_author=30, n_inst=8, n_field=4,
+                      avg_cites=3, seed=7)
+    dev = DeviceNeighborSampler(g, [5], seed=3)
+    seeds = np.arange(8)
+    plan = dev.plan_for({"paper": 8})
+    masks, frontier = _dev_sample(dev, plan, {"paper": seeds}, step=11)
+    edge_sets = {et: set(zip(s.tolist(), d.tolist()))
+                 for et, (s, d) in g.edges.items()}
+    for pe in plan.layers[0].edges:
+        ek = "___".join(pe.etype)
+        rows = frontier[pe.etype[0]][
+            pe.src_offset:pe.src_offset + pe.num_dst * pe.fanout]
+        nbr = rows.reshape(pe.num_dst, pe.fanout)
+        m = masks[0][ek]
+        for i in range(pe.num_dst):
+            for f in range(pe.fanout):
+                if m[i, f]:
+                    assert (int(nbr[i, f]), int(seeds[i])) \
+                        in edge_sets[pe.etype]
+
+
+def test_device_exclusion_masks_target_edges():
+    """SpotTarget parity: excluded (src, dst) codes never survive the
+    device sampler's mask."""
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([0, 0, 0, 0])
+    g = HeteroGraph({"a": 5, "b": 1}, {("a", "r", "b"): (src, dst)})
+    dev = DeviceNeighborSampler(g, [16], seed=0)
+    plan = dev.plan_for({"b": 1})
+    import jax.numpy as jnp
+    ex = tuple(jnp.asarray(a) for a in exclusion_pairs(
+        np.array([0, 1]), np.array([0, 0]), pad_to=4))
+    for step in range(5):
+        masks, frontier = _dev_sample(dev, plan, {"b": np.array([0])},
+                                      step=step,
+                                      exclude={("a", "r", "b"): ex})
+        pe = plan.layers[0].edges[0]
+        nbr = frontier["a"][pe.src_offset:pe.src_offset + 16]
+        hit = nbr[masks[0]["a___r___b"][0]]
+        assert not np.isin(hit, [0, 1]).any()
+        assert masks[0]["a___r___b"].any()  # srcs 2, 3 still sampled
+
+
+def test_device_sampler_unbiased_marginals():
+    """Per-neighbor marginal frequency over many counter steps must be
+    uniform over the dst's CSR segment (with-replacement draw)."""
+    deg = 5
+    g = HeteroGraph({"a": deg, "b": 1},
+                    {("a", "r", "b"): (np.arange(deg),
+                                       np.zeros(deg, np.int64))})
+    dev = DeviceNeighborSampler(g, [4], seed=0)
+    plan = dev.plan_for({"b": 64})
+    counts = np.zeros(deg)
+    steps = 12
+    for step in range(steps):
+        _, frontier = _dev_sample(dev, plan,
+                                  {"b": np.zeros(64, np.int64)}, step=step)
+        pe = plan.layers[0].edges[0]
+        nbr = frontier["a"][pe.src_offset:pe.src_offset + 64 * 4]
+        counts += np.bincount(nbr, minlength=deg)
+    freq = counts / counts.sum()
+    np.testing.assert_allclose(freq, 1.0 / deg, atol=0.04)
+
+
+def test_device_sampler_stream_is_counter_based():
+    """One config seed fully determines the stream: same (seed, step) ->
+    identical draws; different steps or seeds -> different draws."""
+    g = make_mag_like(n_paper=50, n_author=30, n_inst=8, n_field=4, seed=1)
+    seeds = np.arange(16)
+    dev = DeviceNeighborSampler(g, [4, 4], seed=5)
+    plan = dev.plan_for({"paper": 16})
+    _, f0 = _dev_sample(dev, plan, {"paper": seeds}, step=0)
+    _, f0b = _dev_sample(dev, plan, {"paper": seeds}, step=0)
+    _, f1 = _dev_sample(dev, plan, {"paper": seeds}, step=1)
+    for nt in f0:
+        np.testing.assert_array_equal(f0[nt], f0b[nt])
+    assert any((f0[nt] != f1[nt]).any() for nt in f0)
+    dev2 = DeviceNeighborSampler(g, [4, 4], seed=6)
+    _, g0 = _dev_sample(dev2, dev2.plan_for({"paper": 16}),
+                        {"paper": seeds}, step=0)
+    assert any((f0[nt] != g0[nt]).any() for nt in f0)
