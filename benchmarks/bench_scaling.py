@@ -4,9 +4,22 @@ Phase timings (pre-process / partition / training) across graph sizes
 scaled to CPU (the paper's 1B/10B/100B become 1e5/1e6/1e7 edges); the
 derived column reports the cost growth vs the previous size — the paper's
 headline is that cost grows sub-quadratically with size.
+
+``dp/`` rows: data-parallel device-pipeline step time at 1/2/4/8 fake
+CPU devices with the *global* batch held fixed (the shard_map path of
+docs/pipeline.md §Data-parallel).  Each measurement runs in a
+subprocess because the fake-device flag must be set before jax imports
+(see ``benchmarks/dp_child.py``).  On real multi-chip hardware the
+speedup column is the near-linear scaling claim; on a CI box it
+saturates at the physical core count — the acceptance bar is that every
+sharded row is no slower than the 1-device baseline.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -21,7 +34,51 @@ from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
                            GSgnnNodeTrainer)
 
 
+def _dp_child(dp: int, epochs: int, **kw) -> dict:
+    cmd = [sys.executable, "-m", "benchmarks.dp_child",
+           "--dp", str(dp), "--epochs", str(epochs)]
+    for k, v in kw.items():
+        cmd += [f"--{k.replace('_', '-')}", str(v)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run(cmd, capture_output=True, text=True,
+                         timeout=1200, env=env)
+    lines = [ln for ln in out.stdout.splitlines()
+             if ln.startswith("DPRESULT:")]
+    assert lines, (out.returncode, out.stderr[-2000:])
+    return json.loads(lines[0][len("DPRESULT:"):])
+
+
+def _bench_data_parallel(bench: Bench, fast: bool = True):
+    epochs = 6 if fast else 10   # median over epochs-1 steady epochs
+    base = None
+    for dp in (1, 2, 4, 8):
+        r = _dp_child(dp, epochs)
+        if base is None:
+            base = r["step_us"]
+        bench.add(f"dp/{dp}dev", r["step_us"],
+                  f"speedup={base / r['step_us']:.2f}x "
+                  f"loss={r['loss']:.4f} global_batch=1024")
+
+
+def run_smoke(bench: Bench):
+    """CI smoke: the 1-vs-8-device data-parallel rows at tiny size —
+    proves the sharded step trains end to end and keeps the dp/ rows
+    exercised on every push (loss parity is the tier-1 tests' job)."""
+    base = None
+    for dp in (1, 8):
+        r = _dp_child(dp, epochs=2, n_nodes=2048, batch_size=512)
+        if base is None:
+            base = r["step_us"]
+        bench.add(f"dp/{dp}dev", r["step_us"],
+                  f"speedup={base / r['step_us']:.2f}x "
+                  f"loss={r['loss']:.4f} global_batch=512")
+
+
 def run(bench: Bench, fast: bool = True):
+    _bench_data_parallel(bench, fast)
     sizes = [(1_000, 100), (10_000, 100)] if fast else \
         [(1_000, 100), (10_000, 100), (100_000, 100)]
     prev = {}

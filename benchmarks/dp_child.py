@@ -1,0 +1,71 @@
+"""Subprocess worker for the data-parallel rows of ``bench_scaling``.
+
+Runs one data-parallel training measurement in a fresh process because
+``--xla_force_host_platform_device_count`` must be set before the first
+jax import (the parent bench process is already single-device).  Prints
+one ``DPRESULT:{json}`` line: median steady-state seconds per step
+(epoch 0 compiles and is discarded) and the final loss, so the parent
+can assert loss parity across shard counts as well as timing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dp", type=int, required=True)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--n-nodes", type=int, default=8192)
+    ap.add_argument("--avg-degree", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=1024)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--shard-tables", action="store_true")
+    args = ap.parse_args()
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.devices}")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import numpy as np
+
+    from repro.config import GSConfig
+    from repro.runner import TASK_REGISTRY, build_graph
+
+    raw = {
+        "task": "node_classification",
+        "device_features": True,
+        "gnn": {"model": "gcn", "hidden": args.hidden, "num_layers": 2,
+                "fanout": [5, 5]},
+        "hyperparam": {"batch_size": args.batch_size,
+                       "num_epochs": args.epochs, "seed": 0,
+                       "sample_on_device": True,
+                       "data_parallel": args.dp,
+                       "shard_tables": args.shard_tables},
+        "input": {"dataset": "scaling",
+                  "dataset_conf": {"n_nodes": args.n_nodes,
+                                   "avg_degree": args.avg_degree}},
+        "node_classification": {},
+    }
+    cfg = GSConfig.from_dict(raw).resolved()
+    runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
+    hist = runner.train()["history"]
+    n_tr = int(0.8 * args.n_nodes)
+    n_batches = -(-n_tr // args.batch_size)
+    # epoch_time_s covers only the scanned epoch program (eval excluded);
+    # min over steady epochs: robust to contention spikes on shared CI
+    # boxes (epoch 0 compiles and is discarded)
+    step_s = float(np.min([h["epoch_time_s"] for h in hist[1:]])
+                   ) / n_batches
+    print("DPRESULT:" + json.dumps(
+        {"dp": args.dp, "step_us": step_s * 1e6,
+         "loss": hist[-1]["loss"], "n_batches": n_batches}))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,8 @@ graph construction, training, and inference for every registered task.
       --restore-model-path out/nc_mag
 
 Tasks are registry entries (repro.runner.TASK_REGISTRY):
-node_classification, link_prediction, multi_task.
+node_classification, node_regression, edge_classification,
+edge_regression, link_prediction, multi_task.
 """
 from __future__ import annotations
 

@@ -68,6 +68,11 @@ def best_spec(mesh: Mesh, shape: Sequence[int], wish: Sequence[AxisLike]) -> P:
             continue
         used.update(names)
         parts.append(w)
+    # drop trailing Nones: P("data") and P("data", None) mean the same
+    # placement but compare unequal, and GSPMD returns the trimmed form —
+    # an untrimmed input spec would recompile jits on the second call
+    while parts and parts[-1] is None:
+        parts.pop()
     return P(*parts)
 
 
@@ -87,3 +92,45 @@ def shard_rows(mesh: Mesh, x, axis: AxisLike = "data"):
     collectives — the JAX analogue of DistDGL's kvstore feature pull."""
     spec = best_spec(mesh, x.shape, (axis,) + (None,) * (x.ndim - 1))
     return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def replicate(mesh: Mesh, x):
+    """Place an array (or pytree) fully replicated on every mesh device.
+
+    Under data-parallel jit every argument must live on the *same* device
+    set — a table committed to device 0 next to mesh-sharded seeds is an
+    error, and an uncommitted array re-transfers every dispatch.  Dense
+    params, opt state, and small lookup tables therefore get an explicit
+    replicated placement once, up front."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda a: jax.device_put(a, sh), x)
+
+
+def shard_batch(mesh: Mesh, x, batch_dim: int = 0, axis: AxisLike = "data"):
+    """Split a batch-leading array over the mesh's data axis (the
+    per-shard slice contract of the data-parallel loader).  The batch
+    dimension must divide evenly — a ragged split would silently change
+    the global batch a step sees, so fail loudly instead."""
+    if not hasattr(x, "shape"):
+        import numpy as np
+        x = np.asarray(x)
+    n = axis_size(mesh, axis)
+    if x.shape[batch_dim] % n != 0:
+        raise ValueError(
+            f"batch dim {batch_dim} of shape {tuple(x.shape)} is not "
+            f"divisible by the {n}-way '{axis}' mesh axis; pick a "
+            f"batch_size divisible by data_parallel")
+    wish: list = [None] * x.ndim
+    wish[batch_dim] = axis
+    while wish and wish[-1] is None:   # trimmed specs round-trip GSPMD
+        wish.pop()
+    return jax.device_put(x, NamedSharding(mesh, P(*wish)))
+
+
+def constrain_replicated(mesh: Mesh, tree):
+    """``with_sharding_constraint`` every leaf of a pytree to fully
+    replicated (usable only inside jit).  Pins GSPMD's choice for updated
+    params/opt state so donation can alias buffers deterministically."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.with_sharding_constraint(a, sh), tree)

@@ -33,7 +33,9 @@ DATASET_TARGETS = {
     "temporal": ("user", ("user", "interacts", "user"), 4),
 }
 
-TASK_KINDS = ("node_classification", "link_prediction", "multi_task")
+TASK_KINDS = ("node_classification", "node_regression",
+              "edge_classification", "edge_regression",
+              "link_prediction", "multi_task")
 MODEL_KINDS = ("gcn", "sage", "gat", "rgcn", "rgat", "hgt", "tgat")
 NEG_METHODS = ("uniform", "joint", "local_joint", "in_batch")
 LP_LOSSES = ("contrastive", "cross_entropy")
@@ -189,6 +191,17 @@ class HyperparamConfig:
     # int32 seed ids + labels, epochs run under lax.scan.  Requires
     # device_features: true so raw-featured ntypes are store-served.
     sample_on_device: bool = _field("bool", False)
+    # data-parallel shards over a 1-D ("data",) mesh: 1 = single device
+    # (no mesh), N = exactly N devices, 0 = every attached device (the
+    # paper's "scale without changing code" default).  Each padded batch
+    # is sharded over the mesh; gradients mean-all-reduce; requires
+    # sample_on_device (the fully-jitted path is the one that scales).
+    data_parallel: int = _field("int", 1)
+    # table layout under data_parallel: false replicates feature / CSR /
+    # sparse-embedding tables on every shard (fastest while they fit);
+    # true row-shards them over the data axis (memory scales with
+    # devices; gathers lower to collectives)
+    shard_tables: bool = _field("bool", False)
 
 
 @dataclasses.dataclass
@@ -220,6 +233,37 @@ class NodeClassificationConfig:
     # both default from DATASET_TARGETS when input.dataset is built-in
     target_ntype: Optional[str] = _field("str", None, optional=True)
     num_classes: Optional[int] = _field("int", None, optional=True)
+
+
+@dataclasses.dataclass
+class NodeRegressionConfig:
+    # defaults from DATASET_TARGETS when input.dataset is built-in; the
+    # regression target is input.label_field read as float
+    target_ntype: Optional[str] = _field("str", None, optional=True)
+
+
+@dataclasses.dataclass
+class EdgeClassificationConfig:
+    """Edge classification: predict a class of a (src, rel, dst) edge.
+
+    ``label_field`` names an edge-feature column holding per-edge class
+    ids; when unset (the built-in synthetic families carry no edge
+    labels) the runner derives a 2-class target — "do the endpoints
+    share a node label?" — so the task trains with real signal."""
+    target_etype: Optional[Tuple[str, str, str]] = \
+        _field("etype", None, optional=True)
+    num_classes: Optional[int] = _field("int", None, optional=True)
+    label_field: Optional[str] = _field("str", None, optional=True)
+
+
+@dataclasses.dataclass
+class EdgeRegressionConfig:
+    """Edge regression: same wiring as edge classification with a float
+    target (``label_field`` edge column, or the derived same-label
+    indicator as a float when unset)."""
+    target_etype: Optional[Tuple[str, str, str]] = \
+        _field("etype", None, optional=True)
+    label_field: Optional[str] = _field("str", None, optional=True)
 
 
 @dataclasses.dataclass
@@ -273,6 +317,12 @@ class GSConfig:
                                   default_factory=OutputConfig)
     node_classification: Optional[NodeClassificationConfig] = \
         _field("section", None, optional=True, cls=NodeClassificationConfig)
+    node_regression: Optional[NodeRegressionConfig] = \
+        _field("section", None, optional=True, cls=NodeRegressionConfig)
+    edge_classification: Optional[EdgeClassificationConfig] = \
+        _field("section", None, optional=True, cls=EdgeClassificationConfig)
+    edge_regression: Optional[EdgeRegressionConfig] = \
+        _field("section", None, optional=True, cls=EdgeRegressionConfig)
     link_prediction: Optional[LinkPredictionConfig] = \
         _field("section", None, optional=True, cls=LinkPredictionConfig)
     multi_task: Optional[MultiTaskConfig] = \
@@ -329,6 +379,22 @@ class GSConfig:
                            "requires device_features: true — in-jit "
                            "sampling can only gather raw features from "
                            "device-resident tables")
+        if h.data_parallel < 0:
+            raise _err("hyperparam.data_parallel",
+                       "must be >= 0 (0 = use every attached device)")
+        if h.data_parallel != 1:
+            if not h.sample_on_device:
+                raise _err("hyperparam.data_parallel",
+                           "data-parallel training runs the fully-jitted "
+                           "device pipeline; set hyperparam."
+                           "sample_on_device: true (and device_features: "
+                           "true)")
+            if h.data_parallel > 1 and h.batch_size % h.data_parallel != 0:
+                raise _err("hyperparam.data_parallel",
+                           f"hyperparam.batch_size ({h.batch_size}) must "
+                           f"be divisible by data_parallel "
+                           f"({h.data_parallel}) — every shard carries an "
+                           f"equal slice of the global batch")
         if (inp.dataset is None) == (inp.gconstruct_conf is None):
             raise _err("input",
                        "exactly one of 'input.dataset' (built-in synthetic "
@@ -402,10 +468,50 @@ class GSConfig:
                            "built-in family")
             return lp
 
+        def _fill_nr(nr):
+            if nr is None:
+                return None
+            nr = dataclasses.replace(nr)
+            if target:
+                nr.target_ntype = nr.target_ntype or target[0]
+            if nr.target_ntype is None:
+                raise _err("node_regression.target_ntype",
+                           "must be set when input.dataset is not a "
+                           "built-in family")
+            return nr
+
+        def _fill_edge(ec, path, classes=False):
+            if ec is None:
+                return None
+            ec = dataclasses.replace(ec)
+            if target and ec.target_etype is None:
+                ec.target_etype = target[1]
+            if ec.target_etype is None:
+                raise _err(f"{path}.target_etype",
+                           "must be set when input.dataset is not a "
+                           "built-in family")
+            if classes and ec.num_classes is None:
+                # derived same-label-endpoint target is binary; an edge
+                # label_field supplies its own cardinality explicitly
+                if ec.label_field is not None:
+                    raise _err(f"{path}.num_classes",
+                               "must be set when label_field names an "
+                               "edge label column")
+                ec.num_classes = 2
+            return ec
+
         # only the section(s) the active task will run are resolved (and
         # thereby validated) — an unused extra section stays untouched
         if cfg.task == "node_classification":
             cfg.node_classification = _fill_nc(cfg.node_classification)
+        elif cfg.task == "node_regression":
+            cfg.node_regression = _fill_nr(cfg.node_regression)
+        elif cfg.task == "edge_classification":
+            cfg.edge_classification = _fill_edge(
+                cfg.edge_classification, "edge_classification", classes=True)
+        elif cfg.task == "edge_regression":
+            cfg.edge_regression = _fill_edge(
+                cfg.edge_regression, "edge_regression")
         elif cfg.task == "link_prediction":
             cfg.link_prediction = _fill_lp(cfg.link_prediction)
         elif cfg.task == "multi_task" and cfg.multi_task is not None:

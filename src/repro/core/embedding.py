@@ -20,7 +20,11 @@ class SparseEmbedding:
 
     def __init__(self, num_nodes: int, dim: int, *, name: str = "emb",
                  rng: Optional[jax.Array] = None, lr: float = 0.05,
-                 dtype=jnp.float32, mesh=None):
+                 dtype=jnp.float32, mesh=None, axis: Optional[str] = "model"):
+        """``mesh`` places the table/accumulator on the mesh: rows split
+        over ``axis`` when it exists and divides the row count (the
+        kvstore-style layout; data-parallel runs use ``axis="data"``),
+        fully replicated otherwise (``axis=None`` forces replication)."""
         self.num_nodes = num_nodes
         self.dim = dim
         self.name = name
@@ -29,13 +33,15 @@ class SparseEmbedding:
         table = jax.random.normal(rng, (num_nodes, dim), jnp.float32) * 0.1
         self.table = table.astype(dtype)
         self.gsum = jnp.zeros((num_nodes,), jnp.float32)  # adagrad accum
-        if mesh is not None and "model" in mesh.axis_names \
-                and num_nodes % mesh.shape["model"] == 0:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            sh = NamedSharding(mesh, P("model", None))
-            self.table = jax.device_put(self.table, sh)
-            self.gsum = jax.device_put(
-                self.gsum, NamedSharding(mesh, P("model")))
+        if mesh is not None:
+            from repro.common.sharding import replicate, shard_rows
+            if axis is not None and axis in mesh.axis_names \
+                    and num_nodes % mesh.shape[axis] == 0:
+                self.table = shard_rows(mesh, self.table, axis)
+                self.gsum = shard_rows(mesh, self.gsum, axis)
+            else:
+                self.table = replicate(mesh, self.table)
+                self.gsum = replicate(mesh, self.gsum)
 
     # ------------------------------------------------------------------
     def lookup(self, ids) -> jax.Array:

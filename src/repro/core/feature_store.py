@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.sharding import shard_rows
+from repro.common.sharding import replicate, shard_rows
 
 
 def _gather_all(tables: Dict[str, jax.Array], idx: Dict[str, jax.Array]):
@@ -37,8 +37,12 @@ class DeviceFeatureStore:
     """Per-ntype device feature tables + the jitted gather over them."""
 
     def __init__(self, graph, feat_field: str = "feat", mesh=None,
-                 row_axis: str = "data",
+                 row_axis: Optional[str] = "data",
                  dtype: Optional[jnp.dtype] = None):
+        """``mesh`` places every table on the mesh: rows split over
+        ``row_axis`` (memory scales with device count; gathers become
+        collectives), or fully replicated when ``row_axis=None`` (the
+        fast data-parallel choice whenever tables fit per device)."""
         self.feat_field = feat_field
         self.tables: Dict[str, jax.Array] = {}
         for nt in graph.ntypes:
@@ -47,7 +51,8 @@ class DeviceFeatureStore:
                 continue
             x = jnp.asarray(f, dtype) if dtype is not None else jnp.asarray(f)
             if mesh is not None:
-                x = shard_rows(mesh, x, row_axis)
+                x = (shard_rows(mesh, x, row_axis) if row_axis is not None
+                     else replicate(mesh, x))
             self.tables[nt] = x
 
     def __contains__(self, ntype: str) -> bool:

@@ -56,7 +56,7 @@ class DeviceCSR:
     num_edges: int           # real (unpadded) edge count
 
     @staticmethod
-    def from_csc(csc: "CSC", mesh=None, row_axis: str = "data",
+    def from_csc(csc: "CSC", mesh=None, row_axis: Optional[str] = "data",
                  pad_multiple: int = 128) -> "DeviceCSR":
         import jax.numpy as jnp
         e = len(csc.indices)
@@ -79,9 +79,19 @@ class DeviceCSR:
         col_idx = jnp.asarray(col)
         edge_id = jnp.asarray(eid)
         if mesh is not None:
-            from repro.common.sharding import shard_rows
-            col_idx = shard_rows(mesh, col_idx, row_axis)
-            edge_id = shard_rows(mesh, edge_id, row_axis)
+            from repro.common.sharding import replicate, shard_rows
+            # row_ptr is read by every shard's segment lookup: replicate it
+            # on the mesh (a table committed to a single device cannot be
+            # mixed with mesh-sharded step inputs in one jit call)
+            row_ptr = replicate(mesh, row_ptr)
+            if row_axis is not None:
+                col_idx = shard_rows(mesh, col_idx, row_axis)
+                edge_id = shard_rows(mesh, edge_id, row_axis)
+            else:
+                # row_axis=None: tables replicated across the mesh — the
+                # fast choice whenever the adjacency fits per device
+                col_idx = replicate(mesh, col_idx)
+                edge_id = replicate(mesh, edge_id)
         return DeviceCSR(row_ptr=row_ptr, col_idx=col_idx, edge_id=edge_id,
                          num_edges=e)
 
@@ -128,7 +138,7 @@ class HeteroGraph:
         return self._csc[etype]
 
     def device_csr(self, etype: EType, mesh=None,
-                   row_axis: str = "data") -> DeviceCSR:
+                   row_axis: Optional[str] = "data") -> DeviceCSR:
         """The etype's adjacency as device-resident int32 tables.  The
         default (unsharded) placement is cached — placed once, like
         feature-store tables; mesh-sharded requests always build fresh so

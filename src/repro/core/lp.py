@@ -75,10 +75,15 @@ LOSSES = {
 # metrics
 # ---------------------------------------------------------------------------
 def mrr(pos_score, neg_score, neg_mask=None):
-    """Mean reciprocal rank of the positive among its negatives."""
+    """Mean reciprocal rank of the positive among its negatives.
+
+    Ties take the mid-rank (``1 + #better + 0.5 * #tied``) so degenerate
+    all-equal scores report chance level, not a perfect 1.0 (matches
+    ``GSgnnMrrEvaluator``)."""
     if neg_mask is not None:
         neg_score = jnp.where(neg_mask, neg_score, -jnp.inf)
-    rank = 1 + jnp.sum(neg_score > pos_score[:, None], axis=1)
+    rank = (1.0 + jnp.sum(neg_score > pos_score[:, None], axis=1)
+            + 0.5 * jnp.sum(neg_score == pos_score[:, None], axis=1))
     return jnp.mean(1.0 / rank)
 
 

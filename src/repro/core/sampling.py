@@ -279,7 +279,7 @@ class DeviceNeighborSampler:
 
     def __init__(self, graph: HeteroGraph, fanouts: Sequence, seed: int = 0,
                  use_pallas: bool = False, interpret: bool = True,
-                 mesh=None, row_axis: str = "data"):
+                 mesh=None, row_axis: Optional[str] = "data"):
         import jax
         import jax.numpy as jnp
         self.g = graph
@@ -289,15 +289,21 @@ class DeviceNeighborSampler:
         self.interpret = bool(interpret)
         self.base_key = jax.random.PRNGKey(self.seed)
         # device tables: one CSR (+ optional edge-time table) per etype;
-        # passed into the jitted step as a pytree argument, placed once
+        # passed into the jitted step as a pytree argument, placed once.
+        # With a mesh, tables are row-sharded over ``row_axis`` (memory
+        # scales with devices) or replicated when ``row_axis=None`` (the
+        # fast data-parallel layout when the adjacency fits per device).
         self.tables = {}
         for et in graph.etypes:
             csr = graph.device_csr(et, mesh=mesh, row_axis=row_axis)
             entry = {"row_ptr": csr.row_ptr, "col_idx": csr.col_idx,
                      "edge_id": csr.edge_id}
             if et in graph.edge_times:
-                entry["times"] = jnp.asarray(graph.edge_times[et],
-                                             jnp.float32)
+                times = jnp.asarray(graph.edge_times[et], jnp.float32)
+                if mesh is not None:
+                    from repro.common.sharding import replicate
+                    times = replicate(mesh, times)
+                entry["times"] = times
             self.tables[et] = entry
         self._plans: Dict[Tuple[Tuple[str, int], ...], SamplePlan] = {}
 
@@ -315,7 +321,7 @@ class DeviceNeighborSampler:
 
     # ------------------------------------------------------------------
     def sample(self, tables, plan: SamplePlan, seeds, step,
-               exclude=None):
+               exclude=None, dp=None):
         """Trace one minibatch draw (call inside jit).
 
         tables: the sampler's ``.tables`` pytree (passed through the jit
@@ -325,6 +331,14 @@ class DeviceNeighborSampler:
         exclude: optional {etype: (ex_src (E,), ex_dst (E,)) int32} of
         target-edge endpoint pairs, padded with -1 (SpotTarget: sampled
         batch-target edges are masked out; see ``exclusion_pairs``).
+
+        dp: ``(axis_name, num_shards)`` when tracing inside a
+        ``shard_map`` over a data mesh.  ``plan``/``seeds`` are then the
+        *local* (per-shard) slice of the global batch, and every draw
+        consumes the rows of the *global* batch's counter-based bit
+        stream that belong to this shard, so the union of all shards'
+        draws is bit-identical to the single-device draw (see
+        ``_extend_row_map``).
 
         Returns (masks, delta_t, frontier): per-layer {ekey: (n, f)} bool
         masks and float Δt dicts in block order (``[0]`` consumes raw
@@ -336,6 +350,14 @@ class DeviceNeighborSampler:
         frontier = {nt: jnp.asarray(seeds[nt]).astype(jnp.int32)
                     for nt, _ in plan.seed_counts}
         from repro.kernels.nbr_sample import nbr_sample
+        if dp is not None:
+            axis_name, n_shards = dp
+            shard = jax.lax.axis_index(axis_name)
+            # local row p of the per-ntype frontier sits at global row
+            # base[p] + shard * stride[p] (affine; numpy, trace-time)
+            maps = {nt: (np.arange(c, dtype=np.int64),
+                         np.full(c, c, np.int64))
+                    for nt, c in plan.seed_counts}
         layer_masks: List[Dict[str, object]] = []
         layer_dts: List[Dict[str, object]] = []
         # sampling walks top (seeds) -> bottom; plan stores block order
@@ -349,10 +371,19 @@ class DeviceNeighborSampler:
                     jax.random.fold_in(self.base_key, step),
                     li * 131071 + ei)
                 dst_ids = frontier[pe.etype[2]]
+                bits = None
+                if dp is not None:
+                    # generate the global batch's bits (cheap, counter-
+                    # based, identical on every shard) and keep our rows
+                    base, stride = maps[pe.etype[2]]
+                    rows = jnp.asarray(base) + shard * jnp.asarray(stride)
+                    bits = jax.random.bits(
+                        key, (pe.num_dst * n_shards, pe.fanout),
+                        jnp.uint32)[rows]
                 nbr, eid, mask = nbr_sample(
                     t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids, key,
                     fanout=pe.fanout, use_pallas=self.use_pallas,
-                    interpret=self.interpret)
+                    interpret=self.interpret, bits=bits)
                 if exclude is not None and pe.etype in exclude:
                     ex_src, ex_dst = exclude[pe.etype]
                     hit = (nbr[:, :, None] == ex_src[None, None, :]) \
@@ -365,18 +396,61 @@ class DeviceNeighborSampler:
                                        axis=0).reshape(eid.shape)
                 draws.append(nbr)
             new_frontier = {}
+            new_maps = {}
             for nt, recipe in pl_layer.parts:
                 arrs = [frontier[nt] if kind == "self"
                         else draws[idx].reshape(-1)
                         for kind, idx in recipe]
                 new_frontier[nt] = (jnp.concatenate(arrs)
                                     if len(arrs) > 1 else arrs[0])
+                if dp is not None:
+                    new_maps[nt] = _extend_row_map(
+                        maps, pl_layer, nt, recipe, n_shards)
             layer_masks.append(masks)
             layer_dts.append(dts)
             frontier = new_frontier
+            if dp is not None:
+                maps = new_maps
         layer_masks.reverse()
         layer_dts.reverse()
         return layer_masks, layer_dts, frontier
+
+
+def _extend_row_map(maps, pl_layer: PlanLayer, nt: str, recipe,
+                    n_shards: int):
+    """Affine local->global row map of the next (local) frontier.
+
+    The global frontier is the concatenation of global parts; each part's
+    global length is ``n_shards`` times its local length, and within a
+    part the local rows of shard ``s`` sit at ``s * local_len`` (self
+    parts inherit the dst frontier's map; draw parts expand it by the
+    fanout).  Everything here is trace-time numpy — only the shard index
+    is traced, as the coefficient of ``stride``.
+    """
+    def part_len(kind, idx):
+        if kind == "self":
+            return len(maps[nt][0])
+        pe = pl_layer.edges[idx]
+        return pe.num_dst * pe.fanout
+
+    bases, strides = [], []
+    off_g = 0
+    for kind, idx in recipe:
+        length = part_len(kind, idx)
+        if kind == "self":
+            base, stride = maps[nt]
+            bases.append(off_g + base)
+            strides.append(stride)
+        else:
+            pe = pl_layer.edges[idx]
+            base_d, stride_d = maps[pe.etype[2]]
+            pd = np.arange(length) // pe.fanout
+            j = np.arange(length) % pe.fanout
+            bases.append(off_g + base_d[pd] * pe.fanout + j)
+            strides.append(stride_d[pd] * pe.fanout)
+        off_g += length * n_shards
+    return (np.concatenate(bases) if len(bases) > 1 else bases[0],
+            np.concatenate(strides) if len(strides) > 1 else strides[0])
 
 
 def exclusion_pairs(src: np.ndarray, dst: np.ndarray,

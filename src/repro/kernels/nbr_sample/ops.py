@@ -24,16 +24,23 @@ from repro.kernels.nbr_sample.ref import nbr_sample_ref, segment_bounds_ref
 @functools.partial(jax.jit,
                    static_argnames=("fanout", "use_pallas", "interpret"))
 def nbr_sample(row_ptr, col_idx, edge_id, dst_ids, key, *, fanout: int,
-               use_pallas: bool = False, interpret: bool = True):
+               use_pallas: bool = False, interpret: bool = True,
+               bits=None):
     """Draw ``fanout`` in-neighbors per dst id from a device CSR.
 
     row_ptr: (num_dst+1,) int32; col_idx/edge_id: (E,) int32 padded
     tables; dst_ids: (n,) int; key: jax PRNG key ->
     (nbr (n, fanout) int32, eid (n, fanout) int32, mask (n, fanout) bool).
     Rows with degree 0 are fully masked (and gather row 0, discarded).
+
+    ``bits`` overrides the uniform words (one per (dst, fanout) slot).
+    Data-parallel shards pass the rows of the *global* batch's bit
+    array that belong to them, so the union of all shards' draws is
+    bit-identical to the single-device draw of the global batch.
     """
     starts, degs = segment_bounds_ref(row_ptr, dst_ids)
-    bits = jax.random.bits(key, (dst_ids.shape[0], fanout), jnp.uint32)
+    if bits is None:
+        bits = jax.random.bits(key, (dst_ids.shape[0], fanout), jnp.uint32)
     if use_pallas:
         return nbr_sample_pallas(bits, starts, degs, col_idx, edge_id,
                                  interpret=interpret)

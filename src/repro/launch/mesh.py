@@ -20,6 +20,25 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_data_mesh(num_shards: int = 0):
+    """1-D ``("data",)`` mesh for data-parallel training.
+
+    ``num_shards=0`` takes every local device (the "no code change across
+    hardware" default: the same config scales to whatever is attached);
+    an explicit count must not exceed the devices that exist.  On CPU,
+    fake devices come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    set *before* the first jax import.
+    """
+    avail = len(jax.devices())
+    n = avail if num_shards in (0, None) else int(num_shards)
+    if n > avail:
+        raise ValueError(
+            f"data_parallel={num_shards} but only {avail} device(s) exist; "
+            f"on CPU export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{num_shards} before starting python")
+    return jax.make_mesh((n,), ("data",))
+
+
 def dp_axes(mesh) -> tuple:
     """Mesh axes that carry the batch (data-parallel) dimension."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -8,8 +8,10 @@ One resolved ``GSConfig`` drives the whole pipeline (paper §3.2.1):
   gnn section    -> GSgnnModel meta + sparse embedding tables for
                     featureless node types
   task section   -> a registered TaskRunner (node_classification /
-                    link_prediction / multi_task) that owns loaders,
-                    trainer, train loop, checkpointing, and inference
+                    node_regression / edge_classification /
+                    edge_regression / link_prediction / multi_task) that
+                    owns loaders, trainer, train loop, checkpointing,
+                    and inference
 
 New workloads register with ``@register_task("name")`` and become config
 entries — no new CLI.  ``run_config`` is the single programmatic entry
@@ -34,11 +36,13 @@ from repro.core.spot_target import exclude_eval_edges, split_edges
 from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
                         make_temporal_graph)
 from repro.gnn.model import model_meta_from_graph
+from repro.launch.mesh import make_data_mesh
 from repro.trainer import (GSgnnAccEvaluator, GSgnnData,
+                           GSgnnEdgeDataLoader, GSgnnEdgeTrainer,
                            GSgnnLinkPredictionDataLoader,
                            GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator,
                            GSgnnNodeDataLoader, GSgnnNodeDeviceDataLoader,
-                           GSgnnNodeTrainer)
+                           GSgnnNodeTrainer, GSgnnRegressionEvaluator)
 from repro.trainer.multitask import GSgnnMultiTaskTrainer, MultiTaskSpec
 
 TASK_REGISTRY: Dict[str, Type["TaskRunner"]] = {}
@@ -84,23 +88,29 @@ def build_graph(cfg: GSConfig) -> HeteroGraph:
 
 
 def sparse_embeds_for(graph: HeteroGraph, dim: int,
-                      feat_field: str = "feat", seed: int = 0
+                      feat_field: str = "feat", seed: int = 0,
+                      mesh=None, row_axis: str = None
                       ) -> Dict[str, SparseEmbedding]:
     """One learnable table per featureless node type (§3.3.2) — the single
     construction point for what used to be duplicated `emb_dim = 16`.
-    ``seed`` (hyperparam.seed) determines every table's init."""
+    ``seed`` (hyperparam.seed) determines every table's init.  ``mesh``
+    places each table on the mesh (rows sharded over ``row_axis``, or
+    replicated when it is None) so the data-parallel step can read them."""
     featureless = [nt for nt in graph.ntypes
                    if not graph.has_feat(nt, feat_field)]
     keys = jax.random.split(jax.random.PRNGKey(seed),
                             max(len(featureless), 1))
-    return {nt: SparseEmbedding(graph.num_nodes[nt], dim, name=nt, rng=k)
+    return {nt: SparseEmbedding(graph.num_nodes[nt], dim, name=nt, rng=k,
+                                mesh=mesh, axis=row_axis)
             for k, nt in zip(keys, featureless)}
 
 
-def build_model_and_embeds(cfg: GSConfig, graph: HeteroGraph):
+def build_model_and_embeds(cfg: GSConfig, graph: HeteroGraph,
+                           mesh=None, row_axis: str = None):
     ff = cfg.input.feat_field
     sparse = sparse_embeds_for(graph, cfg.gnn.sparse_embed_dim, ff,
-                               seed=cfg.hyperparam.seed)
+                               seed=cfg.hyperparam.seed,
+                               mesh=mesh, row_axis=row_axis)
     model = model_meta_from_graph(
         graph, cfg.gnn.model, hidden=cfg.gnn.hidden,
         num_layers=cfg.gnn.num_layers, nheads=cfg.gnn.nheads,
@@ -124,18 +134,27 @@ class TaskRunner:
         self.graph = graph
         self.data = GSgnnData(graph, label_field=cfg.input.label_field,
                               feat_field=cfg.input.feat_field)
-        self.model, self.sparse = build_model_and_embeds(cfg, graph)
+        self.hp = cfg.hyperparam
+        # data-parallel mesh (hyperparam.data_parallel): one 1-D ("data",)
+        # mesh drives the whole run — batches shard over it, dense params
+        # replicate, tables are placed per hyperparam.shard_tables
+        self.mesh = make_data_mesh(self.hp.data_parallel) \
+            if self.hp.data_parallel != 1 else None
+        row_axis = "data" if self.hp.shard_tables else None
+        self.model, self.sparse = build_model_and_embeds(
+            cfg, graph, mesh=self.mesh, row_axis=row_axis)
         self.store = DeviceFeatureStore(
-            graph, feat_field=cfg.input.feat_field) \
+            graph, feat_field=cfg.input.feat_field,
+            mesh=self.mesh, row_axis=row_axis) \
             if cfg.device_features else None
         self.host_features = self.store is None
-        self.hp = cfg.hyperparam
         # feed mode 3: CSR tables on device, sampling inside the jitted
         # step (validated: requires device_features + a node task)
         self.device_sampler = DeviceNeighborSampler(
             graph, cfg.gnn.fanout, seed=self.hp.seed,
             use_pallas=cfg.gnn.use_pallas,
-            interpret=cfg.gnn.pallas_interpret) \
+            interpret=cfg.gnn.pallas_interpret,
+            mesh=self.mesh, row_axis=row_axis) \
             if self.hp.sample_on_device else None
         # hyperparam.seed determines every host-side stream: splits,
         # shuffling, samplers, negatives, and trainer/embedding init
@@ -170,7 +189,7 @@ class NodeClassificationRunner(TaskRunner):
             self.model, nc.target_ntype, num_classes=nc.num_classes,
             lr=self.hp.lr, rng=self.trainer_rng, sparse_embeds=self.sparse,
             evaluator=GSgnnAccEvaluator(), feature_store=self.store,
-            device_sampler=self.device_sampler)
+            device_sampler=self.device_sampler, mesh=self.mesh)
 
     def _loader(self, ids, shuffle=True):
         return GSgnnNodeDataLoader(
@@ -183,7 +202,7 @@ class NodeClassificationRunner(TaskRunner):
             return GSgnnNodeDeviceDataLoader(
                 self.data, self.target_ntype, ids, self.cfg.gnn.fanout,
                 self.hp.batch_size, seed=self.hp.seed,
-                sampler=self.device_sampler)
+                sampler=self.device_sampler, mesh=self.mesh)
         return self._loader(ids)
 
     def train(self) -> dict:
@@ -207,9 +226,111 @@ class NodeClassificationRunner(TaskRunner):
             out["embed_shape"] = list(emb.shape)
             out["save_embed_path"] = self.cfg.output.save_embed_path
         _, _, te = self.data.train_val_test_nodes(nt, rng=self._split_rng())
-        out["accuracy"] = float(self.trainer.evaluate(
-            self._loader(te, False)))
+        metric = self.trainer.evaluator.name
+        out[metric] = float(self.trainer.evaluate(self._loader(te, False)))
         return out
+
+
+@register_task("node_regression")
+class NodeRegressionRunner(NodeClassificationRunner):
+    """Same assembly as node classification with a scalar head and an
+    RMSE evaluator; the label field is read as float.  The decoder and
+    trainer support existed — this entry makes the task name reachable."""
+
+    def __init__(self, cfg, graph):
+        TaskRunner.__init__(self, cfg, graph)
+        nr = cfg.node_regression
+        self.target_ntype = nr.target_ntype
+        self.trainer = GSgnnNodeTrainer(
+            self.model, nr.target_ntype, task="node_regression",
+            lr=self.hp.lr, rng=self.trainer_rng, sparse_embeds=self.sparse,
+            evaluator=GSgnnRegressionEvaluator(), feature_store=self.store,
+            device_sampler=self.device_sampler, mesh=self.mesh)
+
+
+# ---------------------------------------------------------------------------
+def _edge_labels(graph: HeteroGraph, etype, label_field, kind: str,
+                 node_label_field: str = "label") -> np.ndarray:
+    """Per-edge targets: an edge-feature column when ``label_field`` is
+    set, else the derived same-label-endpoint indicator (the built-in
+    synthetic families carry node labels only)."""
+    if label_field is not None:
+        col = graph.edge_feats.get(etype, {}).get(label_field)
+        if col is None:
+            raise ValueError(
+                f"edge label_field {label_field!r} not found in "
+                f"edge_feats[{etype}]")
+        return np.asarray(col)
+    src, dst = graph.edges[etype]
+    lab_s = graph.node_feats.get(etype[0], {}).get(node_label_field)
+    lab_d = graph.node_feats.get(etype[2], {}).get(node_label_field)
+    if lab_s is None or lab_d is None:
+        raise ValueError(
+            f"cannot derive edge labels for {etype}: endpoint node types "
+            f"carry no {node_label_field!r} field — set "
+            f"edge_*.label_field to an edge label column")
+    same = (lab_s[src] == lab_d[dst])
+    return (same.astype(np.int64) if kind == "classification"
+            else same.astype(np.float32))
+
+
+class _EdgeTaskRunner(TaskRunner):
+    """Shared assembly for edge classification/regression: split the
+    target etype's edges, build labeled edge loaders, train/evaluate."""
+
+    kind = "classification"
+
+    def __init__(self, cfg, graph, section, num_classes: int,
+                 evaluator):
+        super().__init__(cfg, graph)
+        self.etype = tuple(section.target_etype)
+        self.labels = _edge_labels(graph, self.etype, section.label_field,
+                                   self.kind,
+                                   node_label_field=cfg.input.label_field)
+        self.tr_e, self.va_e, self.te_e = split_edges(self._split_rng(),
+                                                      graph, self.etype)
+        self.trainer = GSgnnEdgeTrainer(
+            self.model, self.etype, num_classes=num_classes,
+            task=self.task_name, lr=self.hp.lr, rng=self.trainer_rng,
+            sparse_embeds=self.sparse, evaluator=evaluator,
+            feature_store=self.store)
+
+    def _loader(self, eids, shuffle=True):
+        return GSgnnEdgeDataLoader(
+            self.data, self.etype, eids, self.cfg.gnn.fanout,
+            self.hp.batch_size, labels=self.labels, shuffle=shuffle,
+            seed=self.hp.seed, host_features=self.host_features)
+
+    def train(self) -> dict:
+        hist = self.trainer.fit(self._loader(self.tr_e),
+                                self._loader(self.va_e, False),
+                                num_epochs=self.hp.num_epochs, verbose=True,
+                                prefetch=self.hp.prefetch)
+        return {"task": self.task_name, "history": hist}
+
+    def inference(self) -> dict:
+        metric = self.trainer.evaluator.name
+        val = float(self.trainer.evaluate(self._loader(self.te_e, False)))
+        return {"task": self.task_name, metric: val}
+
+
+@register_task("edge_classification")
+class EdgeClassificationRunner(_EdgeTaskRunner):
+    kind = "classification"
+
+    def __init__(self, cfg, graph):
+        ec = cfg.edge_classification
+        super().__init__(cfg, graph, ec, ec.num_classes,
+                         GSgnnAccEvaluator())
+
+
+@register_task("edge_regression")
+class EdgeRegressionRunner(_EdgeTaskRunner):
+    kind = "regression"
+
+    def __init__(self, cfg, graph):
+        super().__init__(cfg, graph, cfg.edge_regression, 0,
+                         GSgnnRegressionEvaluator())
 
 
 @register_task("link_prediction")

@@ -117,6 +117,13 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
     was built with (the step draws with the trainer's; the trainer
     rejects a mismatch at fit time).  ``seed`` here governs only batch
     shuffling — the sample stream comes from the sampler's seed.
+
+    ``mesh`` (a 1-D ``("data",)`` mesh, see ``launch.mesh.make_data_mesh``)
+    makes the loader data-parallel: every padded seed/label/mask block is
+    placed sharded over the mesh's data axis, so each device receives its
+    contiguous ``batch_size / num_shards`` slice of the *global* batch.
+    Batch semantics are unchanged — losses and metrics are global-batch
+    quantities whatever the shard count (the global-batch contract).
     """
 
     sample_on_device = True
@@ -125,7 +132,8 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
                  seed_ids: np.ndarray, fanout: Sequence[int],
                  batch_size: int, shuffle: bool = True, seed: int = 0,
                  sampler: Optional[DeviceNeighborSampler] = None,
-                 restrict_graph: Optional[HeteroGraph] = None):
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 mesh=None):
         self.data = data
         self.graph = restrict_graph or data.graph
         self.target_ntype = target_ntype
@@ -133,6 +141,15 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
         self.fanout = list(fanout)
         self.batch_size = batch_size
         self.shuffle = shuffle
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.common.sharding import axis_size
+            shards = axis_size(mesh, "data")
+            if batch_size % shards != 0:
+                raise ValueError(
+                    f"batch_size={batch_size} is not divisible by the "
+                    f"{shards}-way data mesh; every shard must carry an "
+                    f"equal slice of the global batch")
         self.rng = np.random.default_rng(seed)
         self.sampler = sampler if sampler is not None else \
             DeviceNeighborSampler(self.graph, fanout, seed=seed)
@@ -140,10 +157,7 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
         self.schema = schema_of_plan(self.plan)
         self.num_batches = -(-len(self.seed_ids) // batch_size)
 
-    def epoch_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """One (shuffled) epoch as stacked (num_batches, batch_size)
-        arrays: int32 seeds, labels, bool seed masks — the only tensors
-        that cross host->device all epoch."""
+    def _epoch_numpy(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         order = (self.rng.permutation(len(self.seed_ids))
                  if self.shuffle else np.arange(len(self.seed_ids)))
         B = self.batch_size
@@ -162,17 +176,37 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
             labs = labels[seeds].astype(np.float32)
         return seeds, labs, masks
 
+    def epoch_arrays(self):
+        """One (shuffled) epoch as stacked (num_batches, batch_size)
+        arrays: int32 seeds, labels, bool seed masks — the only tensors
+        that cross host->device all epoch.  With a mesh, each block is
+        returned already sharded over the data axis (batch dim 1)."""
+        seeds, labs, masks = self._epoch_numpy()
+        if self.mesh is None:
+            return seeds, labs, masks
+        from repro.common.sharding import shard_batch
+        return (shard_batch(self.mesh, seeds, 1),
+                shard_batch(self.mesh, labs, 1),
+                shard_batch(self.mesh, masks, 1))
+
     def __iter__(self) -> Iterator[dict]:
-        seeds, labs, masks = self.epoch_arrays()
+        seeds, labs, masks = self._epoch_numpy()
+
+        def put(x):
+            if self.mesh is None:
+                return x
+            from repro.common.sharding import shard_batch
+            return shard_batch(self.mesh, x, 0)
+
         for i in range(self.num_batches):
             yield {
                 "schema": self.schema,
                 "plan": self.plan,
                 "sampler": self.sampler,
                 "sample_on_device": True,
-                "seeds": seeds[i],
-                "labels": labs[i],
-                "seed_mask": masks[i],
+                "seeds": put(seeds[i]),
+                "labels": put(labs[i]),
+                "seed_mask": put(masks[i]),
             }
 
 
@@ -220,7 +254,12 @@ class GSgnnEdgeDataLoader(_BaseLoader):
                 "roles": roles,
             }
             if self.labels is not None:
-                batch["labels"] = self.labels[eids]
+                # pad the ragged last batch to the static batch size like
+                # the seeds (padding rows are masked out by smask)
+                lab = np.zeros((self.batch_size,) + self.labels.shape[1:],
+                               self.labels.dtype)
+                lab[:len(eids)] = self.labels[eids]
+                batch["labels"] = lab
             yield batch
 
 

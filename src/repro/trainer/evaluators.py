@@ -1,4 +1,12 @@
-"""Evaluators (paper Fig. 2: one per task family)."""
+"""Evaluators (paper Fig. 2: one per task family).
+
+Every evaluator accumulates a metric *numerator* and *denominator*
+separately (never per-batch means), so the final ``value()`` is invariant
+to how the eval stream was batched — including data-parallel runs, where
+a batch arrives as one global array whose shards were computed on
+different devices.  ``update`` accepts numpy or (possibly sharded) jax
+arrays; ``np.asarray`` gathers device shards.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -14,7 +22,14 @@ class _Accum:
 
 
 class GSgnnAccEvaluator(_Accum):
-    """Accuracy (multilabel=False path of the paper's evaluator)."""
+    """Accuracy.
+
+    ``multilabel=False``: argmax accuracy over ``labels`` of class ids.
+    ``multilabel=True``: labels are multi-hot ``(N, C)``; a prediction is
+    the per-label sigmoid threshold ``sigmoid(logit) >= 0.5`` (i.e.
+    ``logit >= 0``) and every (sample, label) decision counts once — the
+    standard per-label accuracy of a C-way binary classifier bank.
+    """
     name = "accuracy"
 
     def __init__(self, multilabel: bool = False):
@@ -24,6 +39,22 @@ class GSgnnAccEvaluator(_Accum):
     def update(self, logits, labels, mask=None):
         logits = np.asarray(logits)
         labels = np.asarray(labels)
+        if self.multilabel:
+            if labels.shape != logits.shape:
+                raise ValueError(
+                    f"multilabel accuracy needs multi-hot labels shaped "
+                    f"like the logits, got labels {labels.shape} vs "
+                    f"logits {logits.shape}")
+            pred = logits >= 0.0          # sigmoid(x) >= 0.5  <=>  x >= 0
+            ok = (pred == labels.astype(bool)).astype(np.float64)
+            if mask is not None:
+                m = np.asarray(mask, np.float64)
+                self.num += float((ok * m[:, None]).sum())
+                self.den += float(m.sum()) * labels.shape[-1]
+            else:
+                self.num += float(ok.sum())
+                self.den += ok.size
+            return
         pred = logits.argmax(-1)
         ok = (pred == labels).astype(np.float64)
         if mask is not None:
@@ -58,7 +89,14 @@ class GSgnnRegressionEvaluator(_Accum):
 
 
 class GSgnnMrrEvaluator(_Accum):
-    """MRR of positives ranked against their negatives."""
+    """MRR of positives ranked against their negatives.
+
+    Ties get the *mid-rank* (``1 + #better + 0.5 * #tied``), not the
+    optimistic rank: with degenerate early-training scores (every score
+    equal, common before the first real update) the optimistic rule
+    ranks every positive first and reports MRR 1.0; mid-rank reports the
+    chance-level value a random ranker would earn.
+    """
     name = "mrr"
 
     def update(self, pos_score, neg_score, neg_mask=None):
@@ -66,7 +104,8 @@ class GSgnnMrrEvaluator(_Accum):
         neg = np.asarray(neg_score)
         if neg_mask is not None:
             neg = np.where(np.asarray(neg_mask), neg, -np.inf)
-        rank = 1 + (neg > pos[:, None]).sum(axis=1)
+        rank = (1.0 + (neg > pos[:, None]).sum(axis=1)
+                + 0.5 * (neg == pos[:, None]).sum(axis=1))
         self.num += float((1.0 / rank).sum())
         self.den += len(pos)
 

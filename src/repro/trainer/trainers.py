@@ -3,9 +3,16 @@
 A trainer owns: the GNN model params, the task decoder, optional sparse
 embedding tables for featureless node types, one jitted step per
 BlockSchema (schemas are static per loader config, so in practice one),
-and an evaluator.  The same trainer runs on one device or a mesh — the
-step function is jit-compiled against whatever device layout the arrays
-carry (GraphStorm's "no code change across hardware" property).
+and an evaluator.  The same trainer runs on one device or a data mesh
+(GraphStorm's "no code change across hardware" property): pass ``mesh=``
+a 1-D ``("data",)`` mesh (``launch.mesh.make_data_mesh``) and the device
+step runs data-parallel — batches shard over the mesh, dense params
+replicate with mean-all-reduced gradients, and the loss/metrics keep
+their global-batch semantics (docs/pipeline.md §3c).  With replicated
+tables the step is an explicit ``shard_map`` (per-shard local programs,
+bit-identical sample stream to the 1-device run); with row-sharded
+tables (``shard_tables``) it runs under sharding-annotated jit and GSPMD
+lowers cross-shard gathers to collectives.
 
 Device-resident pipeline (docs/pipeline.md): pass ``feature_store=``
 a ``repro.core.feature_store.DeviceFeatureStore`` and pair it with loaders
@@ -45,6 +52,21 @@ def _mse(preds, labels, mask):
     return (se * m).sum() / jnp.maximum(m.sum(), 1.0)
 
 
+def _sparse_adagrad_dp(table, gsum, ids, grad_rows, lr, axis_name):
+    """Data-parallel sparse adagrad (inside shard_map, replicated table):
+    every shard scatters its local (ids, grad_rows) into a table-shaped
+    buffer, a psum makes it the *global* duplicate-summed gradient, and
+    each shard then applies the identical update — the same semantics as
+    ``_sparse_adagrad``'s dense lowering with dedupe across the whole
+    global batch."""
+    summed = jnp.zeros_like(table).at[ids].add(grad_rows.astype(table.dtype))
+    summed = jax.lax.psum(summed, axis_name)
+    gnorm = jnp.sum(summed.astype(jnp.float32) ** 2, axis=1)
+    gsum = gsum + gnorm          # untouched rows: gnorm == 0, unchanged
+    scale = lr / (jnp.sqrt(gsum) + 1e-10)
+    return table - (scale[:, None] * summed).astype(table.dtype), gsum
+
+
 def _sparse_adagrad(table, gsum, ids, grad_rows, lr):
     """In-jit sparse adagrad with ``SparseEmbedding.apply_sparse_grad``'s
     exact semantics: dedupe ids, sum duplicate-row grads, one adagrad
@@ -82,7 +104,8 @@ class _TrainerBase:
     def __init__(self, model: GSgnnModel, task: str, out_dim: int = 1,
                  lr: float = 1e-3, rng=None,
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
-                 evaluator=None, feature_store=None, device_sampler=None):
+                 evaluator=None, feature_store=None, device_sampler=None,
+                 mesh=None):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(rng)
         self.model = model
@@ -100,8 +123,50 @@ class _TrainerBase:
         self.feature_store = feature_store
         self.device_sampler = device_sampler
         self.evaluator = evaluator
+        self.mesh = mesh
+        if mesh is not None:
+            self._place_on_mesh(mesh)
         self._steps: Dict = {}
         self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    # data-parallel placement (docs/pipeline.md §"Data-parallel training"):
+    # dense params/opt state/step counter are replicated over the mesh,
+    # batches are sharded over the "data" axis, and any table the jitted
+    # step reads must already live on the mesh (a buffer committed to a
+    # lone device cannot be mixed with mesh-sharded step inputs).
+    # ------------------------------------------------------------------
+    def _place_on_mesh(self, mesh):
+        from repro.common.sharding import replicate
+        self.params = replicate(mesh, self.params)
+        self.opt_state = replicate(mesh, self.opt_state)
+        self.stepno = replicate(mesh, self.stepno)
+
+        def on_mesh(x):
+            return getattr(x.sharding, "mesh", None) == mesh
+
+        for emb in self.sparse_embeds.values():
+            if not on_mesh(emb.table):
+                emb.table = replicate(mesh, emb.table)
+                emb.gsum = replicate(mesh, emb.gsum)
+        store = self.feature_store
+        if store is not None:
+            for nt, t in store.tables.items():
+                if not on_mesh(t):
+                    store.tables[nt] = replicate(mesh, t)
+        if self.device_sampler is not None:
+            for entry in self.device_sampler.tables.values():
+                for k, t in entry.items():
+                    if not on_mesh(t):
+                        entry[k] = replicate(mesh, t)
+
+    def _put_batch(self, x, batch_dim: int = 0):
+        """Ship one host block to the device(s): sharded over the mesh's
+        "data" axis when data-parallel, a plain transfer otherwise."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        from repro.common.sharding import shard_batch
+        return shard_batch(self.mesh, x, batch_dim)
 
     # ------------------------------------------------------------------
     def _feats_for(self, batch) -> Tuple[Dict, Dict, Dict]:
@@ -215,8 +280,18 @@ class _TrainerBase:
                 f"in-jit, but {missing} have no feature_store/"
                 f"sparse_embeds entry — pass feature_store= (device "
                 f"features) for raw-featured ntypes")
+        if self.mesh is not None and self._dp_tables_replicated():
+            return self._make_device_step_shard_map(plan, store_nts,
+                                                    sparse_nts)
         loss_fn = self._build_loss_fn(schema)
         sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+        mesh = self.mesh
+        # the donated sparse tables must come back with the sharding they
+        # went in with (row-sharded or replicated), or XLA cannot alias
+        # the buffers; capture the placement at trace-build time
+        sparse_sh = {nt: (emb.table.sharding, emb.gsum.sharding)
+                     for nt, emb in self.sparse_embeds.items()} \
+            if mesh is not None else {}
 
         def step(params, opt_state, stepno, sparse_state, tables, csr,
                  seeds, labels, seed_mask):
@@ -227,6 +302,10 @@ class _TrainerBase:
             feats = {nt: sparse_state[nt][0][frontier[nt]]
                      for nt in sparse_nts}
             aux_in = {"labels": labels, "mask": seed_mask}
+            # data-parallel note: seeds/labels/mask arrive sharded over the
+            # "data" mesh axis; the loss is a *global* masked mean, so the
+            # SPMD partitioner inserts the gradient all-reduce and every
+            # shard applies the identical replicated optimizer update
             (loss, out), (gp, gf) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1), has_aux=True)(
                     params, feats, arrays, aux_in, gather_idx, tables)
@@ -237,8 +316,104 @@ class _TrainerBase:
             for nt in sparse_nts:
                 sparse_state[nt] = _sparse_adagrad(
                     *sparse_state[nt], frontier[nt], gf[nt], sparse_lrs[nt])
+            if mesh is not None:
+                from repro.common.sharding import constrain_replicated
+                params = constrain_replicated(mesh, params)
+                opt_state = constrain_replicated(mesh, opt_state)
+                sparse_state = {
+                    nt: tuple(jax.lax.with_sharding_constraint(a, sh)
+                              for a, sh in zip(st, sparse_sh[nt]))
+                    for nt, st in sparse_state.items()}
             return params, opt_state, stepno + 1, sparse_state, loss, out
         return step
+
+    def _dp_tables_replicated(self) -> bool:
+        """True when every table the device step reads is fully
+        replicated on the mesh — the layout the fast shard_map path
+        requires (each shard gathers locally; only gradients and the
+        sparse scatter cross shards).  Row-sharded tables
+        (``shard_tables: true``) instead run the sharding-annotated-jit
+        path, where GSPMD lowers cross-shard gathers to collectives."""
+        from jax.sharding import PartitionSpec as P
+        leaves = []
+        if self.feature_store is not None:
+            leaves += list(self.feature_store.tables.values())
+        for emb in self.sparse_embeds.values():
+            leaves += [emb.table, emb.gsum]
+        if self.device_sampler is not None:
+            for entry in self.device_sampler.tables.values():
+                leaves += list(entry.values())
+        return all(getattr(x.sharding, "spec", None) == P()
+                   for x in leaves)
+
+    def _make_device_step_shard_map(self, plan, store_nts, sparse_nts):
+        """Data-parallel device step as an explicit shard_map: every
+        shard runs the complete single-device program on its contiguous
+        ``batch/n`` slice (drawing its rows of the *global* counter-based
+        sample stream, so the union of shards reproduces the one-device
+        draw bit-for-bit), and the shards meet at exactly three points:
+        the global masked-mean loss normalization, the gradient psum,
+        and the sparse-embedding scatter psum.  This is the GiGL/AGL
+        minibatch-data-parallel layout — no resharding of the
+        interleaved MFG frontier ever happens."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.gnn.schema import schema_of_plan
+        mesh = self.mesh
+        n = int(mesh.shape["data"])
+        sampler = self.device_sampler
+        target_nt = self._device_seed_ntype()
+        (seed_nt, b_global), = plan.seed_counts
+        if b_global % n != 0:
+            raise ValueError(
+                f"global batch {b_global} is not divisible by the "
+                f"{n}-way data mesh")
+        local_plan = sampler.plan_for({target_nt: b_global // n})
+        loss_fn = self._build_loss_fn(schema_of_plan(local_plan))
+        sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+
+        def local_step(params, opt_state, stepno, sparse_state, tables,
+                       csr, seeds, labels, seed_mask):
+            masks, dts, frontier = sampler.sample(
+                csr, local_plan, {target_nt: seeds}, stepno,
+                dp=("data", n))
+            arrays = {"masks": masks, "delta_t": dts}
+            gather_idx = {nt: frontier[nt] for nt in store_nts}
+            feats = {nt: sparse_state[nt][0][frontier[nt]]
+                     for nt in sparse_nts}
+            aux_in = {"labels": labels, "mask": seed_mask}
+
+            def global_loss(p, f):
+                # loss_fn yields the LOCAL masked mean; rescale so the
+                # psum over shards is the GLOBAL masked mean
+                # (sum_i num_i / sum_i den_i) — batch-size invariant
+                loss, out = loss_fn(p, f, arrays, aux_in, gather_idx,
+                                    tables)
+                den = seed_mask.sum().astype(jnp.float32)
+                gden = jax.lax.psum(den, "data")
+                return loss * den / jnp.maximum(gden, 1.0), out
+
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                global_loss, argnums=(0, 1), has_aux=True)(params, feats)
+            gp = jax.lax.psum(gp, "data")
+            loss = jax.lax.psum(loss, "data")
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state,
+                                                      params, stepno, lr)
+            sparse_state = dict(sparse_state)
+            for nt in sparse_nts:
+                sparse_state[nt] = _sparse_adagrad_dp(
+                    *sparse_state[nt], frontier[nt], gf[nt],
+                    sparse_lrs[nt], "data")
+            return params, opt_state, stepno + 1, sparse_state, loss, out
+
+        repl = P()
+        return shard_map(
+            local_step, mesh=mesh,
+            in_specs=(repl, repl, repl, repl, repl, repl,
+                      P("data"), P("data"), P("data")),
+            out_specs=(repl, repl, repl, repl, repl, P("data")),
+            check_rep=False)
 
     @staticmethod
     def _make_device_epoch(step):
@@ -301,9 +476,10 @@ class _TrainerBase:
         self.params, self.opt_state, self.stepno, state, loss, out = \
             fns["step"](self.params, self.opt_state, self.stepno, state,
                         tables, self.device_sampler.tables,
-                        jnp.asarray(batch["seeds"], jnp.int32),
-                        jnp.asarray(batch["labels"]),
-                        jnp.asarray(batch["seed_mask"]))
+                        self._put_batch(jnp.asarray(batch["seeds"],
+                                                    jnp.int32)),
+                        self._put_batch(jnp.asarray(batch["labels"])),
+                        self._put_batch(jnp.asarray(batch["seed_mask"])))
         self._sparse_unpack(state)
         return float(loss), out
 
@@ -320,8 +496,10 @@ class _TrainerBase:
             state = self._sparse_pack()
             self.params, self.opt_state, self.stepno, state, losses = \
                 fns["epoch"](self.params, self.opt_state, self.stepno,
-                             state, tables, csr, jnp.asarray(seeds),
-                             jnp.asarray(labels), jnp.asarray(seed_mask))
+                             state, tables, csr,
+                             self._put_batch(seeds, 1),
+                             self._put_batch(labels, 1),
+                             self._put_batch(seed_mask, 1))
             self._sparse_unpack(state)
             losses = np.asarray(losses)  # forces completion of the scan
             rec = {"epoch": epoch, "loss": float(losses.mean()),

@@ -1,0 +1,190 @@
+"""Data-parallel device pipeline: dp=1 vs dp=8 parity on 8 fake devices.
+
+The multi-device contract (docs/pipeline.md §"Data-parallel training"):
+with the global batch held fixed, the sharded step must walk the *same*
+counter-based sample stream and compute the *same* global masked-mean
+loss as the single-device step — losses agree to float-reduction
+tolerance, eval metrics are identical, and the sharded epoch program
+compiles exactly once per BlockSchema.
+
+The 8-device runs execute in a subprocess because
+``--xla_force_host_platform_device_count`` must be set before the first
+jax import (conftest.py keeps the main test process single-device).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.config import ConfigError, GSConfig
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _tiny(dp, shard_tables=False, batch_size=32):
+    return {
+        "task": "node_classification",
+        "gnn": {"hidden": 16, "fanout": [2, 2]},
+        "hyperparam": {"batch_size": batch_size, "num_epochs": 2, "seed": 0,
+                       "sample_on_device": True, "data_parallel": dp,
+                       "shard_tables": shard_tables},
+        "input": {"dataset": "mag",
+                  "dataset_conf": {"n_paper": 96, "n_author": 48}},
+        "device_features": True,
+        "node_classification": {},
+    }
+
+
+# ---------------------------------------------------------------------------
+# config-level guard rails (single device, in-process)
+# ---------------------------------------------------------------------------
+def test_data_parallel_requires_device_pipeline():
+    raw = _tiny(8)
+    raw["hyperparam"]["sample_on_device"] = False
+    with pytest.raises(ConfigError, match="sample_on_device"):
+        GSConfig.from_dict(raw)
+
+
+def test_data_parallel_requires_divisible_batch():
+    with pytest.raises(ConfigError, match="divisible"):
+        GSConfig.from_dict(_tiny(8, batch_size=36))
+
+
+def test_data_parallel_rejects_negative():
+    with pytest.raises(ConfigError, match=">= 0"):
+        GSConfig.from_dict(_tiny(-2))
+
+
+def test_make_data_mesh_rejects_more_shards_than_devices():
+    from repro.launch.mesh import make_data_mesh
+    with pytest.raises(ValueError, match="device"):
+        make_data_mesh(64)
+
+
+def test_device_loader_and_shard_batch_accept_mesh():
+    from repro.data import make_mag_like
+    from repro.launch.mesh import make_data_mesh
+    from repro.common.sharding import shard_batch
+    from repro.trainer import GSgnnData, GSgnnNodeDeviceDataLoader
+
+    mesh = make_data_mesh(1)
+    out = shard_batch(mesh, np.zeros((4, 6)), 1)
+    assert out.shape == (4, 6)
+    g = make_mag_like(n_paper=40, n_author=20, seed=0)
+    loader = GSgnnNodeDeviceDataLoader(
+        GSgnnData(g), "paper", np.arange(20), [2, 2], 10, mesh=mesh)
+    seeds, labs, masks = loader.epoch_arrays()
+    # mesh loaders return device-placed blocks, batch dim sharded
+    assert hasattr(seeds, "sharding") and seeds.shape == (2, 10)
+
+
+# ---------------------------------------------------------------------------
+# mesh-of-one parity (in-process): the mesh code path itself must not
+# change the math even before real sharding enters
+# ---------------------------------------------------------------------------
+def test_mesh_of_one_matches_no_mesh():
+    from repro.core.embedding import SparseEmbedding
+    from repro.core.feature_store import DeviceFeatureStore
+    from repro.core.sampling import DeviceNeighborSampler
+    from repro.data import make_mag_like
+    from repro.gnn.model import model_meta_from_graph
+    from repro.launch.mesh import make_data_mesh
+    from repro.trainer import (GSgnnAccEvaluator, GSgnnData,
+                               GSgnnNodeDeviceDataLoader, GSgnnNodeTrainer)
+
+    g = make_mag_like(n_paper=80, n_author=40, seed=0)
+
+    def run(mesh):
+        extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+        model = model_meta_from_graph(g, "rgcn", 16, 2,
+                                      extra_feat_dims=extra)
+        sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+        sampler = DeviceNeighborSampler(g, [2, 2], seed=0, mesh=mesh,
+                                        row_axis=None)
+        trainer = GSgnnNodeTrainer(
+            model, "paper", num_classes=8, lr=1e-2, sparse_embeds=sparse,
+            evaluator=GSgnnAccEvaluator(),
+            feature_store=DeviceFeatureStore(g, mesh=mesh, row_axis=None),
+            device_sampler=sampler, mesh=mesh)
+        data = GSgnnData(g)
+        tr, _, _ = data.train_val_test_nodes("paper")
+        loader = GSgnnNodeDeviceDataLoader(data, "paper", tr, [2, 2], 16,
+                                           shuffle=False, seed=0,
+                                           sampler=sampler, mesh=mesh)
+        hist = trainer.fit(loader, num_epochs=2)
+        return [h["loss"] for h in hist]
+
+    np.testing.assert_allclose(run(None), run(make_data_mesh(1)),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# 8 fake devices: dp=1 vs dp=8 parity + one-compile guard (subprocess)
+# ---------------------------------------------------------------------------
+_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import sys
+sys.path.insert(0, os.path.join(%(root)r, "src"))
+from repro.config import GSConfig
+from repro.runner import TASK_REGISTRY, build_graph
+
+def run(raw):
+    cfg = GSConfig.from_dict(raw).resolved()
+    runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
+    hist = runner.train()["history"]
+    fns = next(iter(runner.trainer._steps.values()))
+    return {"loss": [h["loss"] for h in hist],
+            "acc": [h["accuracy"] for h in hist],
+            "n_step_entries": len(runner.trainer._steps),
+            "epoch_compiles": fns["epoch"]._cache_size(),
+            "step_compiles": fns["step"]._cache_size()}
+
+confs = json.loads(sys.argv[1])
+print("RESULT:" + json.dumps({k: run(v) for k, v in confs.items()}))
+"""
+
+
+@pytest.fixture(scope="module")
+def dp_parity_results():
+    confs = {"dp1": _tiny(1), "dp8": _tiny(8),
+             "dp8_sharded": _tiny(8, shard_tables=True)}
+    proc = subprocess.run(
+        [sys.executable, "-c", _PARITY_SCRIPT % {"root": _ROOT},
+         json.dumps(confs)],
+        capture_output=True, text=True, timeout=900, cwd=_ROOT)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[0][len("RESULT:"):])
+
+
+def test_dp8_loss_curve_matches_dp1(dp_parity_results):
+    r = dp_parity_results
+    # same sample stream, same global masked-mean loss; only the float
+    # all-reduce summation order differs between 1 and 8 shards
+    np.testing.assert_allclose(r["dp1"]["loss"], r["dp8"]["loss"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(r["dp1"]["loss"],
+                               r["dp8_sharded"]["loss"], rtol=1e-4)
+
+
+def test_dp8_eval_metrics_identical_to_dp1(dp_parity_results):
+    r = dp_parity_results
+    assert r["dp8"]["acc"] == r["dp1"]["acc"]
+    assert r["dp8_sharded"]["acc"] == r["dp1"]["acc"]
+
+
+def test_dp8_sharded_step_compiles_once_per_schema(dp_parity_results):
+    for key in ("dp8", "dp8_sharded"):
+        r = dp_parity_results[key]
+        assert r["n_step_entries"] == 1
+        assert r["epoch_compiles"] == 1     # one schema -> one XLA program
+        assert r["step_compiles"] == 0      # per-batch path never traced

@@ -1,0 +1,114 @@
+"""Evaluator regression tests: multilabel accuracy, MRR tie handling,
+and the num/den accumulation contract that makes every metric invariant
+to how the eval stream is batched (the property data-parallel eval
+relies on)."""
+import numpy as np
+import pytest
+
+from repro.trainer import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
+                           GSgnnRegressionEvaluator)
+
+
+# ---------------------------------------------------------------------------
+# multilabel accuracy (the flag used to be stored but ignored)
+# ---------------------------------------------------------------------------
+def test_multilabel_accuracy_thresholds_per_label():
+    ev = GSgnnAccEvaluator(multilabel=True)
+    logits = np.array([[2.0, -1.0, 3.0],     # pred 101
+                       [-2.0, 0.5, -0.5]])   # pred 010
+    labels = np.array([[1, 0, 1],            # 3/3 correct
+                       [1, 1, 0]])           # 2/3 correct
+    ev.update(logits, labels)
+    assert ev.value() == pytest.approx(5.0 / 6.0)
+
+
+def test_multilabel_accuracy_differs_from_argmax_path():
+    """The regression: multilabel=True must NOT compute argmax accuracy.
+    Build logits whose argmax matches a class-id reading of the labels
+    while the per-label thresholding does not score 100%."""
+    logits = np.array([[5.0, 4.0, -1.0]])    # argmax = 0; threshold: 110
+    labels_multi = np.array([[1, 0, 0]])     # label 1 wrongly predicted on
+    ml = GSgnnAccEvaluator(multilabel=True)
+    ml.update(logits, labels_multi)
+    assert ml.value() == pytest.approx(2.0 / 3.0)
+    am = GSgnnAccEvaluator()
+    am.update(logits, np.array([0]))
+    assert am.value() == 1.0
+
+
+def test_multilabel_accuracy_respects_seed_mask():
+    ev = GSgnnAccEvaluator(multilabel=True)
+    logits = np.array([[1.0, 1.0], [-1.0, -1.0]])
+    labels = np.array([[1, 1], [1, 1]])      # row 1 fully wrong but masked
+    ev.update(logits, labels, mask=np.array([True, False]))
+    assert ev.value() == 1.0
+
+
+def test_multilabel_shape_mismatch_raises():
+    ev = GSgnnAccEvaluator(multilabel=True)
+    with pytest.raises(ValueError, match="multi-hot"):
+        ev.update(np.zeros((2, 3)), np.array([0, 1]))
+
+
+# ---------------------------------------------------------------------------
+# MRR tie handling (optimistic rank inflated early-training MRR)
+# ---------------------------------------------------------------------------
+def test_mrr_all_equal_scores_is_chance_level():
+    """Degenerate scores (every pos == every neg, e.g. before the first
+    real update) must give the chance-level mid-rank MRR, not 1.0."""
+    ev = GSgnnMrrEvaluator()
+    k = 4
+    ev.update(np.zeros(8), np.zeros((8, k)))
+    # mid-rank = 1 + 0 + 0.5*k = 3 -> MRR 1/3 (a random ranker's mean
+    # reciprocal rank is ~0.457 for k=4; crucially it is NOT 1.0)
+    assert ev.value() == pytest.approx(1.0 / (1 + 0.5 * k))
+
+
+def test_mrr_partial_ties_use_mid_rank():
+    ev = GSgnnMrrEvaluator()
+    pos = np.array([1.0])
+    neg = np.array([[2.0, 1.0, 0.0]])        # one better, one tied, one worse
+    ev.update(pos, neg)
+    assert ev.value() == pytest.approx(1.0 / 2.5)
+
+
+def test_mrr_untied_ranks_unchanged_and_mask_respected():
+    ev = GSgnnMrrEvaluator()
+    pos = np.array([1.0, 1.0])
+    neg = np.array([[2.0, 3.0, 0.0],         # two better -> rank 3
+                    [2.0, 3.0, 0.0]])        # same but best neg masked
+    ev.update(pos, neg, neg_mask=np.array([[True, True, True],
+                                           [True, False, True]]))
+    assert ev.value() == pytest.approx(0.5 * (1 / 3 + 1 / 2))
+
+
+def test_core_lp_mrr_matches_evaluator_on_ties():
+    from repro.core.lp import mrr
+    pos = np.zeros(4, np.float32)
+    neg = np.zeros((4, 6), np.float32)
+    ev = GSgnnMrrEvaluator()
+    ev.update(pos, neg)
+    assert float(mrr(pos, neg)) == pytest.approx(ev.value())
+
+
+# ---------------------------------------------------------------------------
+# batching invariance: the contract data-parallel eval relies on
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("splits", [1, 2, 4])
+def test_metrics_invariant_to_eval_batching(splits):
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(32, 5))
+    labels = rng.integers(0, 5, 32)
+    preds = rng.normal(size=32)
+    targets = rng.normal(size=32)
+    mask = rng.random(32) < 0.8
+    acc, rmse = GSgnnAccEvaluator(), GSgnnRegressionEvaluator()
+    for part in range(splits):
+        sl = slice(part * 32 // splits, (part + 1) * 32 // splits)
+        acc.update(logits[sl], labels[sl], mask[sl])
+        rmse.update(preds[sl], targets[sl], mask[sl])
+    one_acc, one_rmse = GSgnnAccEvaluator(), GSgnnRegressionEvaluator()
+    one_acc.update(logits, labels, mask)
+    one_rmse.update(preds, targets, mask)
+    assert acc.value() == pytest.approx(one_acc.value())
+    assert rmse.value() == pytest.approx(one_rmse.value())

@@ -126,6 +126,7 @@ def test_nc_train_then_artifact_only_inference(tmp_path):
     assert emb.shape == (80, 16)
 
 
+@pytest.mark.slow
 def test_lp_train_then_artifact_only_inference(tmp_path):
     r = run_config(GSConfig.from_dict(_tiny_lp(tmp_path)))
     assert r["history"]
@@ -135,6 +136,7 @@ def test_lp_train_then_artifact_only_inference(tmp_path):
     assert 0.0 <= r2["mrr"] <= 1.0
 
 
+@pytest.mark.slow
 def test_multitask_train_then_artifact_only_inference(tmp_path):
     r = run_config(GSConfig.from_dict(_tiny_mt(tmp_path)))
     assert set(r["val"]) == {"nc", "lp"}
@@ -200,6 +202,77 @@ def test_gconstruct_conf_chains_into_training(tmp_path):
 
 def test_unknown_task_not_in_registry():
     cfg = GSConfig.from_dict(_tiny_nc())
-    cfg.task = "edge_classification"  # bypass from_dict choice check
+    cfg.task = "graph_classification"  # bypass from_dict choice check
     with pytest.raises(KeyError, match="not registered"):
         run_config(cfg)
+
+
+# ---------------------------------------------------------------------------
+# previously-unreachable tasks: node_regression / edge_classification /
+# edge_regression (decoders+trainers existed; run() raised KeyError)
+# ---------------------------------------------------------------------------
+def _tiny_task(task, tmp_path=None, section=None):
+    d = {"task": task,
+         "gnn": {"hidden": 16, "fanout": [2, 2]},
+         "hyperparam": {"batch_size": 32, "num_epochs": 1},
+         "input": {"dataset": "mag",
+                   "dataset_conf": {"n_paper": 80, "n_author": 40}},
+         task: section or {}}
+    if tmp_path is not None:
+        d["output"] = {"save_model_path": str(tmp_path / "model")}
+    return d
+
+
+@pytest.mark.parametrize("task,trainer_cls,metric", [
+    ("node_regression", "GSgnnNodeTrainer", "rmse"),
+    ("edge_classification", "GSgnnEdgeTrainer", "accuracy"),
+    ("edge_regression", "GSgnnEdgeTrainer", "rmse"),
+])
+def test_new_task_registry_dispatch(task, trainer_cls, metric):
+    cfg = GSConfig.from_dict(_tiny_task(task)).resolved()
+    runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
+    assert type(runner.trainer).__name__ == trainer_cls
+    assert runner.trainer.evaluator.name == metric
+    # resolved targets came from the built-in dataset table
+    if task == "node_regression":
+        assert cfg.node_regression.target_ntype == "paper"
+    else:
+        assert tuple(getattr(cfg, task).target_etype) == \
+            ("paper", "cites", "paper")
+
+
+@pytest.mark.parametrize("task,metric", [
+    ("node_regression", "rmse"),
+    ("edge_classification", "accuracy"),
+    ("edge_regression", "rmse"),
+])
+def test_new_task_cli_train_then_artifact_only_inference(
+        task, metric, tmp_path):
+    from repro.cli.gs import main
+    conf = tmp_path / "conf.yaml"
+    conf.write_text(json.dumps(_tiny_task(task, tmp_path)))
+    result = main(["--cf", str(conf)])
+    assert result["task"] == task
+    assert metric in result["history"][-1]
+    r2 = main(["--inference",
+               "--restore-model-path", str(tmp_path / "model")])
+    assert metric in r2 and np.isfinite(r2[metric])
+
+
+def test_edge_loader_pads_ragged_last_batch_labels():
+    """Regression: a ragged final edge batch used to carry unpadded
+    labels (shape mismatch vs the padded seeds/mask)."""
+    from repro.data import make_mag_like
+    from repro.trainer import GSgnnData, GSgnnEdgeDataLoader
+    g = make_mag_like(n_paper=60, n_author=30, seed=0)
+    et = ("paper", "cites", "paper")
+    labels = np.arange(g.num_edges(et), dtype=np.int64)
+    loader = GSgnnEdgeDataLoader(GSgnnData(g), et, np.arange(50), [2, 2],
+                                 32, labels=labels, shuffle=False)
+    batches = list(loader)
+    assert len(batches) == 2
+    last = batches[1]
+    assert last["labels"].shape == (32,)
+    assert last["seed_mask"].sum() == 50 - 32
+    # padded label rows are masked out
+    assert not last["seed_mask"][50 - 32:].any()

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.embedding import SparseEmbedding
 from repro.core.lm_gnn import glem_em
@@ -13,6 +14,7 @@ from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
                            GSgnnNodeTrainer)
 
 
+@pytest.mark.slow
 def test_glem_em_runs_and_metric_reasonable():
     g = make_mag_like(n_paper=200, n_author=100, n_inst=8, n_field=4, seed=4)
     tokens = g.node_feats["paper"]["text"]

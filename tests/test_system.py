@@ -22,6 +22,7 @@ def mag():
     return make_mag_like(n_paper=300, n_author=150, seed=2)
 
 
+@pytest.mark.slow
 def test_partition_parallel_training(mag):
     """4 simulated ranks with per-partition samplers converge together."""
     P = 4

@@ -36,6 +36,7 @@ def _nc_trainer(g, kind="rgcn", lr=1e-2):
                             evaluator=GSgnnAccEvaluator())
 
 
+@pytest.mark.slow
 def test_node_classification_converges(mag):
     data = GSgnnData(mag)
     tr, va, _ = data.train_val_test_nodes("paper")
@@ -47,6 +48,7 @@ def test_node_classification_converges(mag):
     assert hist[-1]["loss"] < hist[0]["loss"]
 
 
+@pytest.mark.slow
 def test_link_prediction_all_neg_methods(mag):
     data = GSgnnData(mag)
     et = ("paper", "cites", "paper")
@@ -157,6 +159,7 @@ def test_soft_label_distill_loss_zero_when_equal():
     assert float(soft_label_distill_loss(logits, logits)) < 1e-6
 
 
+@pytest.mark.slow
 def test_multitask_trainer(mag):
     """Shared-encoder NC + LP multi-task training (paper Fig. 2)."""
     from repro.trainer.multitask import GSgnnMultiTaskTrainer
