@@ -34,9 +34,10 @@ from repro.trainer import (GSgnnAccEvaluator, GSgnnData, GSgnnNodeDataLoader,
                            GSgnnNodeTrainer)
 
 
-def _dp_child(dp: int, epochs: int, **kw) -> dict:
+def _dp_child(dp: int, epochs: int, flags=(), **kw) -> dict:
     cmd = [sys.executable, "-m", "benchmarks.dp_child",
            "--dp", str(dp), "--epochs", str(epochs)]
+    cmd += [f"--{f.replace('_', '-')}" for f in flags]
     for k, v in kw.items():
         cmd += [f"--{k.replace('_', '-')}", str(v)]
     env = dict(os.environ)
@@ -63,10 +64,42 @@ def _bench_data_parallel(bench: Bench, fast: bool = True):
                   f"loss={r['loss']:.4f} global_batch=1024")
 
 
+def _bench_link_prediction(bench: Bench, fast: bool = True):
+    """``lp_host`` vs ``lp_device`` isolates the sampling location for
+    the industrial LP workload (in-batch negatives): both keep features
+    device-resident; lp_host draws neighborhoods + negatives in host
+    numpy behind the prefetch thread, lp_device runs the fully-jitted
+    task-program step (in-jit negatives, scanned epochs).  ``lp_dp/``
+    rows shard that device step over 1/4/8 fake devices at equal global
+    batch — the acceptance bar mirrors the node dp/ rows (no sharded row
+    slower than 1 device; lp_device faster than lp_host)."""
+    epochs = 4 if fast else 8
+    kw = dict(task="link_prediction", n_nodes=4096, batch_size=1024,
+              neg_method="joint", num_negatives=8)
+    host = _dp_child(1, epochs, flags=("host_sampling",), **kw)
+    bench.add("lp_host", host["step_us"],
+              f"loss={host['loss']:.4f} mrr={host.get('mrr', 0):.4f} "
+              f"neg=joint global_batch=1024")
+    dev = _dp_child(1, epochs, **kw)
+    bench.add("lp_device", dev["step_us"],
+              f"speedup={host['step_us'] / dev['step_us']:.2f}x_vs_host "
+              f"loss={dev['loss']:.4f} mrr={dev.get('mrr', 0):.4f}")
+    base = dev["step_us"]
+    bench.add("lp_dp/1dev", dev["step_us"],
+              f"speedup=1.00x loss={dev['loss']:.4f} global_batch=1024")
+    for dp in (4, 8):
+        r = _dp_child(dp, epochs, **kw)
+        bench.add(f"lp_dp/{dp}dev", r["step_us"],
+                  f"speedup={base / r['step_us']:.2f}x "
+                  f"loss={r['loss']:.4f} global_batch=1024")
+
+
 def run_smoke(bench: Bench):
     """CI smoke: the 1-vs-8-device data-parallel rows at tiny size —
     proves the sharded step trains end to end and keeps the dp/ rows
-    exercised on every push (loss parity is the tier-1 tests' job)."""
+    exercised on every push (loss parity is the tier-1 tests' job).
+    The lp_dp/ pair does the same for the link-prediction device step
+    (in-jit negatives + the sharded in-batch score matrix)."""
     base = None
     for dp in (1, 8):
         r = _dp_child(dp, epochs=2, n_nodes=2048, batch_size=512)
@@ -75,10 +108,21 @@ def run_smoke(bench: Bench):
         bench.add(f"dp/{dp}dev", r["step_us"],
                   f"speedup={base / r['step_us']:.2f}x "
                   f"loss={r['loss']:.4f} global_batch=512")
+    base = None
+    for dp in (1, 8):
+        r = _dp_child(dp, epochs=2, task="link_prediction",
+                      n_nodes=2048, batch_size=512)
+        if base is None:
+            base = r["step_us"]
+        bench.add(f"lp_dp/{dp}dev", r["step_us"],
+                  f"speedup={base / r['step_us']:.2f}x "
+                  f"loss={r['loss']:.4f} mrr={r.get('mrr', 0):.4f} "
+                  f"global_batch=512")
 
 
 def run(bench: Bench, fast: bool = True):
     _bench_data_parallel(bench, fast)
+    _bench_link_prediction(bench, fast)
     sizes = [(1_000, 100), (10_000, 100)] if fast else \
         [(1_000, 100), (10_000, 100), (100_000, 100)]
     prev = {}

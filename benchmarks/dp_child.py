@@ -1,11 +1,18 @@
-"""Subprocess worker for the data-parallel rows of ``bench_scaling``.
+"""Subprocess worker for the data-parallel / LP rows of ``bench_scaling``.
 
-Runs one data-parallel training measurement in a fresh process because
+Runs one training measurement in a fresh process because
 ``--xla_force_host_platform_device_count`` must be set before the first
 jax import (the parent bench process is already single-device).  Prints
 one ``DPRESULT:{json}`` line: median steady-state seconds per step
 (epoch 0 compiles and is discarded) and the final loss, so the parent
 can assert loss parity across shard counts as well as timing.
+
+``--task link_prediction`` measures the LP device step (negatives drawn
+in-jit, in-batch ``B x B`` scoring per shard against the all-gathered
+global dst set); ``--host-sampling`` instead runs the host-sampled
+baseline (feed mode 2: device-resident features, numpy neighbor +
+negative sampling behind the prefetch thread) for the
+``lp_host``-vs-``lp_device`` comparison.
 """
 from __future__ import annotations
 
@@ -25,6 +32,13 @@ def main():
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--shard-tables", action="store_true")
+    ap.add_argument("--task", default="node_classification",
+                    choices=["node_classification", "link_prediction"])
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="host-sampled baseline (feed mode 2) instead of "
+                         "the fully-jitted device step")
+    ap.add_argument("--neg-method", default="in_batch")
+    ap.add_argument("--num-negatives", type=int, default=8)
     args = ap.parse_args()
 
     os.environ["XLA_FLAGS"] = (
@@ -38,33 +52,43 @@ def main():
     from repro.runner import TASK_REGISTRY, build_graph
 
     raw = {
-        "task": "node_classification",
+        "task": args.task,
         "device_features": True,
         "gnn": {"model": "gcn", "hidden": args.hidden, "num_layers": 2,
                 "fanout": [5, 5]},
         "hyperparam": {"batch_size": args.batch_size,
                        "num_epochs": args.epochs, "seed": 0,
-                       "sample_on_device": True,
+                       "sample_on_device": not args.host_sampling,
                        "data_parallel": args.dp,
                        "shard_tables": args.shard_tables},
         "input": {"dataset": "scaling",
                   "dataset_conf": {"n_nodes": args.n_nodes,
                                    "avg_degree": args.avg_degree}},
-        "node_classification": {},
     }
+    if args.task == "link_prediction":
+        raw["link_prediction"] = {"neg_method": args.neg_method,
+                                  "num_negatives": args.num_negatives}
+    else:
+        raw["node_classification"] = {}
     cfg = GSConfig.from_dict(raw).resolved()
     runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
     hist = runner.train()["history"]
-    n_tr = int(0.8 * args.n_nodes)
-    n_batches = -(-n_tr // args.batch_size)
-    # epoch_time_s covers only the scanned epoch program (eval excluded);
+    if args.task == "link_prediction":
+        n_items = len(runner.tr_e)
+        n_batches = n_items // args.batch_size   # LP drops the ragged tail
+    else:
+        n_batches = -(-int(0.8 * args.n_nodes) // args.batch_size)
+    # epoch_time_s covers only the training epoch (eval excluded);
     # min over steady epochs: robust to contention spikes on shared CI
     # boxes (epoch 0 compiles and is discarded)
     step_s = float(np.min([h["epoch_time_s"] for h in hist[1:]])
                    ) / n_batches
-    print("DPRESULT:" + json.dumps(
-        {"dp": args.dp, "step_us": step_s * 1e6,
-         "loss": hist[-1]["loss"], "n_batches": n_batches}))
+    out = {"dp": args.dp, "step_us": step_s * 1e6,
+           "loss": hist[-1]["loss"], "n_batches": n_batches}
+    metric = runner.trainer.evaluator.name
+    if metric in hist[-1]:
+        out[metric] = hist[-1][metric]
+    print("DPRESULT:" + json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -37,6 +37,11 @@ TASK_KINDS = ("node_classification", "node_regression",
               "edge_classification", "edge_regression",
               "link_prediction", "multi_task")
 MODEL_KINDS = ("gcn", "sage", "gat", "rgcn", "rgat", "hgt", "tgat")
+# valid negative-sampling methods mirror core/negative_sampling's
+# SAMPLERS registry (host draw functions; every entry also has a device
+# twin) — kept as a literal because this module must stay importable
+# without pulling in jax (dp tools set XLA_FLAGS before the first jax
+# import); tests pin NEG_METHODS == set(SAMPLERS) so they cannot drift
 NEG_METHODS = ("uniform", "joint", "local_joint", "in_batch")
 LP_LOSSES = ("contrastive", "cross_entropy")
 PART_METHODS = ("random", "ldg", "metis")
@@ -272,10 +277,19 @@ class LinkPredictionConfig:
         _field("etype", None, optional=True)
     loss: str = _field("str", "contrastive", choices=LP_LOSSES)
     neg_method: str = _field("str", "joint", choices=NEG_METHODS)
+    # GraphStorm-compatible alias of neg_method (GraphStorm YAML calls
+    # the key train_negative_sampler); when set it must name a method in
+    # the sampler registry and overrides neg_method at resolve time
+    train_negative_sampler: Optional[str] = \
+        _field("str", None, optional=True, choices=NEG_METHODS)
     num_negatives: int = _field("int", 32)
     # SpotTarget leakage control: remove val/test edges from the message
     # graph during training
     exclude_eval_edges: bool = _field("bool", True)
+
+    @property
+    def effective_neg_method(self) -> str:
+        return self.train_negative_sampler or self.neg_method
 
 
 @dataclasses.dataclass
@@ -370,10 +384,19 @@ class GSConfig:
         if h.lr <= 0:
             raise _err("hyperparam.lr", "must be positive")
         if h.sample_on_device:
-            if self.task != "node_classification":
-                raise _err("hyperparam.sample_on_device",
-                           "device-resident sampling currently supports "
-                           "task: node_classification only")
+            # capability check against the task-program registry: the
+            # error names exactly which feature is missing for this
+            # (task, options) combination, not a blanket task list
+            from repro.trainer.task_programs import device_capability
+            lp = self.link_prediction \
+                if self.task == "link_prediction" else None
+            missing = device_capability(
+                self.task,
+                neg_method=lp.effective_neg_method if lp else None,
+                num_negatives=lp.num_negatives if lp else 0,
+                batch_size=h.batch_size, data_parallel=h.data_parallel)
+            if missing:
+                raise _err("hyperparam.sample_on_device", missing)
             if not self.device_features:
                 raise _err("hyperparam.sample_on_device",
                            "requires device_features: true — in-jit "
@@ -426,12 +449,13 @@ class GSConfig:
 
     def _validate_lp(self, lp: LinkPredictionConfig, path: str):
         k, b = lp.num_negatives, self.hyperparam.batch_size
+        method = lp.effective_neg_method
         if k <= 0:
             raise _err(f"{path}.num_negatives", "must be positive")
-        if lp.neg_method in ("joint", "local_joint") and \
+        if method in ("joint", "local_joint") and \
                 b % k != 0 and k < b:
             raise _err(f"{path}.num_negatives",
-                       f"{lp.neg_method} negative sharing needs "
+                       f"{method} negative sharing needs "
                        f"hyperparam.batch_size ({b}) divisible by "
                        f"num_negatives ({k}), or num_negatives >= "
                        f"batch_size")
@@ -466,6 +490,10 @@ class GSConfig:
                 raise _err("link_prediction.target_etype",
                            "must be set when input.dataset is not a "
                            "built-in family")
+            if lp.train_negative_sampler is not None:
+                # fold the GraphStorm-style alias into neg_method so the
+                # rest of the pipeline reads one field
+                lp.neg_method = lp.train_negative_sampler
             return lp
 
         def _fill_nr(nr):

@@ -30,6 +30,18 @@ def score_edges(src, dst, rel_emb=None):
     return distmult_score(src, dst, rel_emb)
 
 
+def score_matrix(src, dst, rel_emb=None):
+    """All-pairs scores: src (N, D) x dst (M, D) -> (N, M).
+
+    Equals ``score_edges(src[:, None], dst[None, :])`` but lowers to one
+    matmul — the broadcast form materializes an (N, M, D) intermediate,
+    which at in-batch-negative scale (B x B x hidden) is hundreds of MB
+    and dominated the whole LP device step."""
+    if rel_emb is not None:
+        src = src * rel_emb
+    return src @ dst.T
+
+
 # ---------------------------------------------------------------------------
 # losses
 # ---------------------------------------------------------------------------

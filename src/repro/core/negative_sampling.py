@@ -7,13 +7,28 @@ Four methods trading data movement against model performance:
   in-batch    — negatives are the other destination nodes in the batch
 
 All return (neg_dst_ids (N, K), mask (N, K)); the ids index the dst node
-type. They run on the host next to the neighbor sampler.
+type.  Two families of draws:
+
+- the ``np.random.Generator`` functions run on the host next to the
+  neighbor sampler (the host LP dataloader's path);
+- the ``device_*`` variants draw *inside jit* from counter-based
+  ``jax.random`` bits (feed mode 3: the LP task program folds the step
+  counter into a negative-stream key, so a config seed fully determines
+  the negative stream on any backend and at any data-parallel shard
+  count).  Each device draw has a ``host_*`` twin that consumes the
+  *same* bit stream with numpy arithmetic — draw parity between the two
+  is what ``tests/test_negative_sampling.py`` pins down.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import numpy as np
+
+# fold-in tag of the negative stream: keeps LP's in-jit negative draws on
+# a different counter-based substream than the neighbor sampler's
+# (layer, edge-block) keys, which stay small (li * 131071 + ei)
+NEG_STREAM = 0x5EED0000
 
 
 def uniform_negatives(rng: np.random.Generator, num_dst_nodes: int,
@@ -78,9 +93,13 @@ def in_batch_negatives(rng: np.random.Generator, num_dst_nodes: int,
     return neg, mask
 
 
+# host (np.random.Generator) method registry: the LP dataloader's draw
+# dispatch and the single source of truth for config-level validation
+# (``gsconfig.NEG_METHODS`` derives from these keys)
 SAMPLERS = {
     "uniform": uniform_negatives,
     "joint": joint_negatives,
+    "local_joint": local_joint_negatives,
     "in_batch": in_batch_negatives,
 }
 
@@ -94,3 +113,170 @@ def sampled_node_count(method: str, batch_size: int, k: int) -> int:
     if method == "in_batch":
         return 0 if k <= batch_size - 1 else batch_size
     raise ValueError(method)
+
+
+def negative_seed_count(method: str, batch_size: int, k: int) -> int:
+    """Rows the negative role contributes to the GNN seed block — the
+    static count both the device LP loader and the LP task program plan
+    with.  Mirrors the host loader's unique-negative extraction:
+    shared methods seed one row per group slot (``neg[::k]`` flattened),
+    uniform seeds every draw, in-batch seeds nothing (the other batch
+    dst embeddings are reused)."""
+    if method == "uniform":
+        return batch_size * k
+    if method in ("joint", "local_joint"):
+        return batch_size if k < batch_size else k
+    if method == "in_batch":
+        return 0
+    raise ValueError(method)
+
+
+# ---------------------------------------------------------------------------
+# device draws (feed mode 3): counter-based bits -> negative ids, in-jit
+# ---------------------------------------------------------------------------
+def _device_bits(key, shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.random.bits(key, shape, jnp.uint32)
+
+
+def device_uniform_negatives(key, num_dst_nodes: int, batch_size: int,
+                             k: int):
+    """In-jit ``uniform``: one fresh draw per (edge, negative) slot."""
+    import jax.numpy as jnp
+    bits = _device_bits(key, (batch_size, k))
+    neg = (bits % jnp.uint32(num_dst_nodes)).astype(jnp.int32)
+    return neg, jnp.ones((batch_size, k), bool)
+
+
+def device_joint_negatives(key, num_dst_nodes: int, batch_size: int, k: int):
+    """In-jit ``joint``: one shared draw of k negatives per k positives."""
+    import jax.numpy as jnp
+    groups = -(-batch_size // k)
+    bits = _device_bits(key, (groups, k))
+    shared = (bits % jnp.uint32(num_dst_nodes)).astype(jnp.int32)
+    neg = jnp.repeat(shared, k, axis=0)[:batch_size]
+    return neg, jnp.ones((batch_size, k), bool)
+
+
+def device_local_joint_negatives(key, local_nodes, batch_size: int, k: int):
+    """In-jit ``local_joint``: joint drawn from a device-resident table of
+    the local partition's dst node ids."""
+    import jax.numpy as jnp
+    local_nodes = jnp.asarray(local_nodes, jnp.int32)
+    groups = -(-batch_size // k)
+    bits = _device_bits(key, (groups, k))
+    shared = local_nodes[(bits % jnp.uint32(local_nodes.shape[0]))
+                         .astype(jnp.int32)]
+    neg = jnp.repeat(shared, k, axis=0)[:batch_size]
+    return neg, jnp.ones((batch_size, k), bool)
+
+
+def device_in_batch_negatives(key, num_dst_nodes: int, batch_dst, k: int):
+    """In-jit ``in_batch``: roll the (traced) batch dst column-wise; when
+    k exceeds batch-1 the remainder tops up with a joint draw under a
+    sub-folded key (the host twin folds identically)."""
+    import jax
+    import jax.numpy as jnp
+    batch_dst = jnp.asarray(batch_dst).astype(jnp.int32)
+    n = batch_dst.shape[0]
+    take = min(k, n - 1)
+    idx = (jnp.arange(n)[:, None] + jnp.arange(1, take + 1)[None, :]) % n
+    neg = batch_dst[idx]
+    mask = jnp.ones((n, take), bool)
+    if take < k:
+        extra, em = device_joint_negatives(jax.random.fold_in(key, 1),
+                                           num_dst_nodes, n, k - take)
+        neg = jnp.concatenate([neg, extra], axis=1)
+        mask = jnp.concatenate([mask, em], axis=1)
+    return neg, mask
+
+
+def device_negative_seeds(method: str, key, num_dst_nodes: int,
+                          batch_size: int, k: int, local_nodes=None):
+    """The negative role's GNN seed block for one (global) batch:
+    ``(negative_seed_count(...),)`` int32 ids, drawn in-jit.  Shared
+    methods seed the unique group rows (``neg[::k]`` flattened, exactly
+    the host loader's extraction); data-parallel shards slice their
+    contiguous rows out of this global block, so the union of shards is
+    bit-identical to the 1-device draw."""
+    import jax.numpy as jnp
+    if method == "uniform":
+        neg, _ = device_uniform_negatives(key, num_dst_nodes, batch_size, k)
+        return neg.reshape(-1)
+    if method in ("joint", "local_joint"):
+        if method == "joint":
+            neg, _ = device_joint_negatives(key, num_dst_nodes,
+                                            batch_size, k)
+        else:
+            if local_nodes is None:
+                raise ValueError("local_joint needs the partition's node "
+                                 "set (trainer local_nodes=)")
+            neg, _ = device_local_joint_negatives(key, local_nodes,
+                                                  batch_size, k)
+        return neg[::k].reshape(-1)[:max(batch_size, k)]
+    if method == "in_batch":
+        return jnp.zeros((0,), jnp.int32)
+    raise ValueError(method)
+
+
+# ---------------------------------------------------------------------------
+# host twins of the device draws: same counter-based bit stream, numpy
+# arithmetic.  Draw parity with the jitted variants is property-tested.
+# ---------------------------------------------------------------------------
+def _host_bits(key, shape) -> np.ndarray:
+    return np.asarray(_device_bits(key, shape))
+
+
+def host_uniform_negatives(key, num_dst_nodes: int, batch_size: int, k: int):
+    bits = _host_bits(key, (batch_size, k))
+    neg = (bits % np.uint32(num_dst_nodes)).astype(np.int64)
+    return neg, np.ones((batch_size, k), bool)
+
+
+def host_joint_negatives(key, num_dst_nodes: int, batch_size: int, k: int):
+    groups = -(-batch_size // k)
+    bits = _host_bits(key, (groups, k))
+    shared = (bits % np.uint32(num_dst_nodes)).astype(np.int64)
+    neg = np.repeat(shared, k, axis=0)[:batch_size]
+    return neg, np.ones((batch_size, k), bool)
+
+
+def host_local_joint_negatives(key, local_nodes, batch_size: int, k: int):
+    local_nodes = np.asarray(local_nodes, np.int64)
+    groups = -(-batch_size // k)
+    bits = _host_bits(key, (groups, k))
+    shared = local_nodes[(bits % np.uint32(len(local_nodes))).astype(np.int64)]
+    neg = np.repeat(shared, k, axis=0)[:batch_size]
+    return neg, np.ones((batch_size, k), bool)
+
+
+def host_in_batch_negatives(key, num_dst_nodes: int, batch_dst, k: int):
+    import jax
+    batch_dst = np.asarray(batch_dst, np.int64)
+    n = len(batch_dst)
+    take = min(k, n - 1)
+    idx = (np.arange(n)[:, None] + np.arange(1, take + 1)[None, :]) % n
+    neg = batch_dst[idx]
+    mask = np.ones((n, take), bool)
+    if take < k:
+        extra, em = host_joint_negatives(jax.random.fold_in(key, 1),
+                                         num_dst_nodes, n, k - take)
+        neg = np.concatenate([neg, extra], axis=1)
+        mask = np.concatenate([mask, em], axis=1)
+    return neg, mask
+
+
+DEVICE_SAMPLERS = {
+    "uniform": device_uniform_negatives,
+    "joint": device_joint_negatives,
+    "local_joint": device_local_joint_negatives,
+    "in_batch": device_in_batch_negatives,
+}
+
+HOST_TWINS = {
+    "uniform": host_uniform_negatives,
+    "joint": host_joint_negatives,
+    "local_joint": host_local_joint_negatives,
+    "in_batch": host_in_batch_negatives,
+}

@@ -321,7 +321,7 @@ class DeviceNeighborSampler:
 
     # ------------------------------------------------------------------
     def sample(self, tables, plan: SamplePlan, seeds, step,
-               exclude=None, dp=None):
+               exclude=None, dp=None, seed_maps=None):
         """Trace one minibatch draw (call inside jit).
 
         tables: the sampler's ``.tables`` pytree (passed through the jit
@@ -340,6 +340,14 @@ class DeviceNeighborSampler:
         draws is bit-identical to the single-device draw (see
         ``_extend_row_map``).
 
+        seed_maps: optional ``{ntype: (base, stride)}`` trace-time numpy
+        local->global row maps of the *seed* block itself, for dp runs
+        whose seed layout concatenates several roles per ntype (edge
+        src/dst endpoints, LP positives + negatives — see
+        ``TaskProgram.seed_maps``): local seed row ``p`` of a shard sits
+        at global row ``base[p] + shard * stride[p]``.  Defaults to the
+        single-role map (contiguous ``count``-row slices per shard).
+
         Returns (masks, delta_t, frontier): per-layer {ekey: (n, f)} bool
         masks and float Δt dicts in block order (``[0]`` consumes raw
         features), and the frontier[0] int32 ids per ntype — everything
@@ -355,9 +363,10 @@ class DeviceNeighborSampler:
             shard = jax.lax.axis_index(axis_name)
             # local row p of the per-ntype frontier sits at global row
             # base[p] + shard * stride[p] (affine; numpy, trace-time)
-            maps = {nt: (np.arange(c, dtype=np.int64),
-                         np.full(c, c, np.int64))
-                    for nt, c in plan.seed_counts}
+            maps = seed_maps if seed_maps is not None else \
+                {nt: (np.arange(c, dtype=np.int64),
+                      np.full(c, c, np.int64))
+                 for nt, c in plan.seed_counts}
         layer_masks: List[Dict[str, object]] = []
         layer_dts: List[Dict[str, object]] = []
         # sampling walks top (seeds) -> bottom; plan stores block order
@@ -385,10 +394,9 @@ class DeviceNeighborSampler:
                     fanout=pe.fanout, use_pallas=self.use_pallas,
                     interpret=self.interpret, bits=bits)
                 if exclude is not None and pe.etype in exclude:
-                    ex_src, ex_dst = exclude[pe.etype]
-                    hit = (nbr[:, :, None] == ex_src[None, None, :]) \
-                        & (dst_ids[:, None, None] == ex_dst[None, None, :])
-                    mask = mask & ~hit.any(axis=-1)
+                    hit = _pair_exclusion_hit(nbr, dst_ids,
+                                              *exclude[pe.etype])
+                    mask = mask & ~hit
                 ek = "___".join(pe.etype)
                 masks[ek] = mask
                 if pe.has_delta_t:
@@ -414,6 +422,41 @@ class DeviceNeighborSampler:
         layer_masks.reverse()
         layer_dts.reverse()
         return layer_masks, layer_dts, frontier
+
+
+def _pair_exclusion_hit(nbr, dst_ids, ex_src, ex_dst):
+    """In-jit SpotTarget membership test: which sampled edges
+    ``(nbr[i, j], dst_ids[i])`` coincide with an excluded
+    ``(ex_src, ex_dst)`` target pair.
+
+    A dense broadcast compare is O(n * f * E) — at LP scale (frontier
+    ~1e5 rows, E ~1e3 pairs) that is ~1e9 bool ops per layer and
+    dominated the whole device step.  Instead, rank both endpoints
+    against the sorted exclusion lists (ranks are equality-preserving
+    for *member* values) and pack the rank pair into one int32 code:
+    codes fit in ``(E+1)^2`` regardless of graph size — the combined
+    ``src * |V| + dst`` code the host sampler uses would overflow int32
+    on large graphs — and membership becomes one searchsorted over E
+    sorted codes: O((n*f + E) log E).
+    """
+    import jax.numpy as jnp
+    e = int(ex_src.shape[0])
+    if e == 0 or e * (e + 2) >= 2 ** 31:
+        # degenerate / huge exclusion lists: dense compare fallback
+        hit = (nbr[:, :, None] == ex_src[None, None, :]) \
+            & (dst_ids[:, None, None] == ex_dst[None, None, :])
+        return hit.any(axis=-1)
+    ss = jnp.sort(ex_src)
+    sd = jnp.sort(ex_dst)
+    rs = jnp.searchsorted(ss, nbr)                       # (n, f)
+    ms = ss[jnp.clip(rs, 0, e - 1)] == nbr               # src is a member
+    rd = jnp.searchsorted(sd, dst_ids)                   # (n,)
+    md = sd[jnp.clip(rd, 0, e - 1)] == dst_ids           # dst is a member
+    code = rd[:, None] * (e + 1) + rs
+    ex_code = jnp.sort(jnp.searchsorted(sd, ex_dst) * (e + 1)
+                       + jnp.searchsorted(ss, ex_src))
+    p = jnp.searchsorted(ex_code, code)
+    return ms & md[:, None] & (ex_code[jnp.clip(p, 0, e - 1)] == code)
 
 
 def _extend_row_map(maps, pl_layer: PlanLayer, nt: str, recipe,

@@ -12,7 +12,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.lp import distmult_score, dot_score
+from repro.core.lp import distmult_score, dot_score, score_matrix
 
 
 def init_decoder(rng, task: str, hidden: int, out_dim: int = 1,
@@ -72,3 +72,11 @@ def lp_score(params, src_emb, dst_emb, etype_idx: Optional[int] = None):
     if params and "rel" in params and etype_idx is not None:
         return distmult_score(src_emb, dst_emb, params["rel"][etype_idx])
     return dot_score(src_emb, dst_emb)
+
+
+def lp_score_all(params, src_emb, dst_emb, etype_idx: Optional[int] = None):
+    """All-pairs (n_src, n_dst) scores as one matmul (the in-batch
+    negative matrix); see ``core.lp.score_matrix``."""
+    rel = params["rel"][etype_idx] \
+        if params and "rel" in params and etype_idx is not None else None
+    return score_matrix(src_emb, dst_emb, rel)

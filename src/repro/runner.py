@@ -38,8 +38,10 @@ from repro.data import (make_amazon_like, make_mag_like, make_scaling_graph,
 from repro.gnn.model import model_meta_from_graph
 from repro.launch.mesh import make_data_mesh
 from repro.trainer import (GSgnnAccEvaluator, GSgnnData,
-                           GSgnnEdgeDataLoader, GSgnnEdgeTrainer,
+                           GSgnnEdgeDataLoader, GSgnnEdgeDeviceDataLoader,
+                           GSgnnEdgeTrainer,
                            GSgnnLinkPredictionDataLoader,
+                           GSgnnLinkPredictionDeviceDataLoader,
                            GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator,
                            GSgnnNodeDataLoader, GSgnnNodeDeviceDataLoader,
                            GSgnnNodeTrainer, GSgnnRegressionEvaluator)
@@ -140,7 +142,8 @@ class TaskRunner:
         # replicate, tables are placed per hyperparam.shard_tables
         self.mesh = make_data_mesh(self.hp.data_parallel) \
             if self.hp.data_parallel != 1 else None
-        row_axis = "data" if self.hp.shard_tables else None
+        self._row_axis = "data" if self.hp.shard_tables else None
+        row_axis = self._row_axis
         self.model, self.sparse = build_model_and_embeds(
             cfg, graph, mesh=self.mesh, row_axis=row_axis)
         self.store = DeviceFeatureStore(
@@ -149,16 +152,24 @@ class TaskRunner:
             if cfg.device_features else None
         self.host_features = self.store is None
         # feed mode 3: CSR tables on device, sampling inside the jitted
-        # step (validated: requires device_features + a node task)
-        self.device_sampler = DeviceNeighborSampler(
-            graph, cfg.gnn.fanout, seed=self.hp.seed,
-            use_pallas=cfg.gnn.use_pallas,
-            interpret=cfg.gnn.pallas_interpret,
-            mesh=self.mesh, row_axis=row_axis) \
-            if self.hp.sample_on_device else None
+        # step (validated against the task-program registry: requires
+        # device_features + a registered device task program)
+        self.device_sampler = self._make_device_sampler(graph)
         # hyperparam.seed determines every host-side stream: splits,
         # shuffling, samplers, negatives, and trainer/embedding init
         self.trainer_rng = jax.random.PRNGKey(self.hp.seed)
+
+    def _make_device_sampler(self, graph):
+        """Device CSR tables for feed mode 3, built over the graph the
+        task's message passing should see (LP rebuilds on its train
+        graph with eval edges excluded)."""
+        if not self.hp.sample_on_device:
+            return None
+        return DeviceNeighborSampler(
+            graph, self.cfg.gnn.fanout, seed=self.hp.seed,
+            use_pallas=self.cfg.gnn.use_pallas,
+            interpret=self.cfg.gnn.pallas_interpret,
+            mesh=self.mesh, row_axis=self._row_axis)
 
     def _split_rng(self):
         """Fresh generator per call so repeated splits (train vs
@@ -293,7 +304,8 @@ class _EdgeTaskRunner(TaskRunner):
             self.model, self.etype, num_classes=num_classes,
             task=self.task_name, lr=self.hp.lr, rng=self.trainer_rng,
             sparse_embeds=self.sparse, evaluator=evaluator,
-            feature_store=self.store)
+            feature_store=self.store, device_sampler=self.device_sampler,
+            mesh=self.mesh)
 
     def _loader(self, eids, shuffle=True):
         return GSgnnEdgeDataLoader(
@@ -301,8 +313,16 @@ class _EdgeTaskRunner(TaskRunner):
             self.hp.batch_size, labels=self.labels, shuffle=shuffle,
             seed=self.hp.seed, host_features=self.host_features)
 
+    def _train_loader(self, eids):
+        if self.device_sampler is not None:
+            return GSgnnEdgeDeviceDataLoader(
+                self.data, self.etype, eids, self.cfg.gnn.fanout,
+                self.hp.batch_size, labels=self.labels, seed=self.hp.seed,
+                sampler=self.device_sampler, mesh=self.mesh)
+        return self._loader(eids)
+
     def train(self) -> dict:
-        hist = self.trainer.fit(self._loader(self.tr_e),
+        hist = self.trainer.fit(self._train_loader(self.tr_e),
                                 self._loader(self.va_e, False),
                                 num_epochs=self.hp.num_epochs, verbose=True,
                                 prefetch=self.hp.prefetch)
@@ -345,10 +365,22 @@ class LinkPredictionRunner(TaskRunner):
         self.train_graph = exclude_eval_edges(
             graph, self.etype, self.va_e, self.te_e) \
             if lp.exclude_eval_edges else graph
+        if self.device_sampler is not None and lp.exclude_eval_edges:
+            # the in-jit sampler must not see eval edges either: rebuild
+            # the CSR tables over the train graph (the base tables are
+            # dropped — a transient double placement at startup)
+            self.device_sampler = self._make_device_sampler(self.train_graph)
+        # local_joint in a single-partition run degenerates to joint over
+        # the full dst node set (a real partition would pass its own set)
+        self.local_nodes = np.arange(graph.num_nodes[self.etype[2]]) \
+            if lp.neg_method == "local_joint" else None
         self.trainer = GSgnnLinkPredictionTrainer(
             self.model, self.etype, loss=lp.loss, lr=self.hp.lr,
             rng=self.trainer_rng, sparse_embeds=self.sparse,
-            evaluator=GSgnnMrrEvaluator(), feature_store=self.store)
+            evaluator=GSgnnMrrEvaluator(), feature_store=self.store,
+            device_sampler=self.device_sampler, mesh=self.mesh,
+            neg_method=lp.neg_method, num_negatives=lp.num_negatives,
+            local_nodes=self.local_nodes)
 
     def _loader(self, eids, shuffle=True, restrict=None):
         return GSgnnLinkPredictionDataLoader(
@@ -356,12 +388,23 @@ class LinkPredictionRunner(TaskRunner):
             self.hp.batch_size, num_negatives=self.lp.num_negatives,
             neg_method=self.lp.neg_method, shuffle=shuffle,
             seed=self.hp.seed, restrict_graph=restrict,
+            local_nodes=self.local_nodes,
             host_features=self.host_features)
+
+    def _train_loader(self):
+        if self.device_sampler is not None:
+            return GSgnnLinkPredictionDeviceDataLoader(
+                self.data, self.etype, self.tr_e, self.cfg.gnn.fanout,
+                self.hp.batch_size, num_negatives=self.lp.num_negatives,
+                neg_method=self.lp.neg_method, seed=self.hp.seed,
+                sampler=self.device_sampler,
+                restrict_graph=self.train_graph, mesh=self.mesh)
+        return self._loader(self.tr_e, restrict=self.train_graph)
 
     def train(self) -> dict:
         # message passing samples the train graph (eval edges excluded);
         # positives come from the train split of the full edge list
-        loader = self._loader(self.tr_e, restrict=self.train_graph)
+        loader = self._train_loader()
         val_loader = self._loader(self.va_e, shuffle=False)
         hist = self.trainer.fit(loader, val_loader,
                                 num_epochs=self.hp.num_epochs, verbose=True,

@@ -1,17 +1,23 @@
 from repro.trainer.dataloading import (GSgnnData, GSgnnNodeDataLoader,
                                        GSgnnNodeDeviceDataLoader,
                                        GSgnnEdgeDataLoader,
+                                       GSgnnEdgeDeviceDataLoader,
                                        GSgnnLinkPredictionDataLoader,
+                                       GSgnnLinkPredictionDeviceDataLoader,
                                        PrefetchIterator, host_transfer_bytes)
 from repro.trainer.trainers import (GSgnnNodeTrainer, GSgnnEdgeTrainer,
                                     GSgnnLinkPredictionTrainer)
 from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
                                       GSgnnRegressionEvaluator)
+from repro.trainer.task_programs import (TASK_PROGRAMS, TaskProgram,
+                                         device_capability)
 
 __all__ = [
     "GSgnnData", "GSgnnNodeDataLoader", "GSgnnNodeDeviceDataLoader",
-    "GSgnnEdgeDataLoader", "GSgnnLinkPredictionDataLoader",
+    "GSgnnEdgeDataLoader", "GSgnnEdgeDeviceDataLoader",
+    "GSgnnLinkPredictionDataLoader", "GSgnnLinkPredictionDeviceDataLoader",
     "PrefetchIterator", "host_transfer_bytes",
     "GSgnnNodeTrainer", "GSgnnEdgeTrainer", "GSgnnLinkPredictionTrainer",
     "GSgnnAccEvaluator", "GSgnnMrrEvaluator", "GSgnnRegressionEvaluator",
+    "TASK_PROGRAMS", "TaskProgram", "device_capability",
 ]

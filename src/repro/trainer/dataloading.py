@@ -103,15 +103,18 @@ class GSgnnNodeDataLoader(_BaseLoader):
             yield batch
 
 
-class GSgnnNodeDeviceDataLoader(_BaseLoader):
+class _DeviceLoaderBase(_BaseLoader):
     """Feed mode 3 (docs/pipeline.md): device-resident sampling.
 
-    The loader does no sampling at all — neighbor draws, feature gathers,
-    and the optimizer update all run inside the trainer's jitted step
-    against device-resident CSR/feature tables.  A batch therefore ships
-    only the int32 seed ids, their labels, and the padding mask
-    host->device; ``epoch_arrays`` stacks a whole epoch of them so
-    ``Trainer.fit`` can run the epoch as one ``lax.scan``.
+    A device loader does no sampling at all — neighbor draws, feature
+    gathers, LP negative draws, and the optimizer update all run inside
+    the trainer's jitted step against device-resident CSR/feature
+    tables.  A batch therefore ships only the task program's int32 seed
+    blocks (+ labels and the padding mask) host->device;
+    ``epoch_blocks`` stacks a whole epoch of them so ``Trainer.fit`` can
+    run the epoch as one ``lax.scan``.  Subclasses declare the per-batch
+    block dict in ``_batch_blocks`` (names matching their TaskProgram's
+    ``block_names``) and the seed layout via ``_seed_counts``.
 
     ``sampler`` must be the same ``DeviceNeighborSampler`` the trainer
     was built with (the step draws with the trainer's; the trainer
@@ -119,28 +122,21 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
     shuffling — the sample stream comes from the sampler's seed.
 
     ``mesh`` (a 1-D ``("data",)`` mesh, see ``launch.mesh.make_data_mesh``)
-    makes the loader data-parallel: every padded seed/label/mask block is
-    placed sharded over the mesh's data axis, so each device receives its
-    contiguous ``batch_size / num_shards`` slice of the *global* batch.
-    Batch semantics are unchanged — losses and metrics are global-batch
+    makes the loader data-parallel: every block is placed sharded over
+    the mesh's data axis, so each device receives its contiguous
+    ``batch_size / num_shards`` slice of the *global* batch.  Batch
+    semantics are unchanged — losses and metrics are global-batch
     quantities whatever the shard count (the global-batch contract).
     """
 
     sample_on_device = True
 
-    def __init__(self, data: GSgnnData, target_ntype: str,
-                 seed_ids: np.ndarray, fanout: Sequence[int],
-                 batch_size: int, shuffle: bool = True, seed: int = 0,
-                 sampler: Optional[DeviceNeighborSampler] = None,
-                 restrict_graph: Optional[HeteroGraph] = None,
-                 mesh=None):
-        self.data = data
-        self.graph = restrict_graph or data.graph
-        self.target_ntype = target_ntype
-        self.seed_ids = np.asarray(seed_ids, np.int64)
+    def _init_device(self, graph: HeteroGraph, fanout: Sequence[int],
+                     batch_size: int, seed: int,
+                     sampler: Optional[DeviceNeighborSampler], mesh,
+                     seed_counts: Dict[str, int]):
         self.fanout = list(fanout)
         self.batch_size = batch_size
-        self.shuffle = shuffle
         self.mesh = mesh
         if mesh is not None:
             from repro.common.sharding import axis_size
@@ -152,45 +148,46 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
                     f"equal slice of the global batch")
         self.rng = np.random.default_rng(seed)
         self.sampler = sampler if sampler is not None else \
-            DeviceNeighborSampler(self.graph, fanout, seed=seed)
-        self.plan = self.sampler.plan_for({target_ntype: batch_size})
+            DeviceNeighborSampler(graph, fanout, seed=seed)
+        self.plan = self.sampler.plan_for(seed_counts)
         self.schema = schema_of_plan(self.plan)
-        self.num_batches = -(-len(self.seed_ids) // batch_size)
 
-    def _epoch_numpy(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        order = (self.rng.permutation(len(self.seed_ids))
-                 if self.shuffle else np.arange(len(self.seed_ids)))
+    # subclasses implement ------------------------------------------------
+    def _num_items(self) -> int:
+        raise NotImplementedError
+
+    def _batch_blocks(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        """One batch's host->device payload (static shapes)."""
+        raise NotImplementedError
+
+    # ---------------------------------------------------------------------
+    def _epoch_numpy(self) -> Dict[str, np.ndarray]:
+        order = (self.rng.permutation(self._num_items())
+                 if self.shuffle else np.arange(self._num_items()))
         B = self.batch_size
-        seeds = np.zeros((self.num_batches, B), np.int32)
-        masks = np.zeros((self.num_batches, B), bool)
+        out: Optional[Dict[str, np.ndarray]] = None
         for i in range(self.num_batches):
-            idx = order[i * B:(i + 1) * B]
-            ids, m = pad_seeds(self.seed_ids[idx], B)
-            seeds[i], masks[i] = ids.astype(np.int32), m
-        labels = self.data.node_labels(self.target_ntype)
-        if labels is None:
-            labs = np.zeros_like(seeds)
-        elif np.issubdtype(labels.dtype, np.integer):
-            labs = labels[seeds].astype(np.int32)   # ship 4B, not host int64
-        else:
-            labs = labels[seeds].astype(np.float32)
-        return seeds, labs, masks
+            blocks = self._batch_blocks(order[i * B:(i + 1) * B])
+            if out is None:
+                out = {k: np.zeros((self.num_batches,) + v.shape, v.dtype)
+                       for k, v in blocks.items()}
+            for k, v in blocks.items():
+                out[k][i] = v
+        return out or {}
 
-    def epoch_arrays(self):
-        """One (shuffled) epoch as stacked (num_batches, batch_size)
-        arrays: int32 seeds, labels, bool seed masks — the only tensors
-        that cross host->device all epoch.  With a mesh, each block is
+    def epoch_blocks(self) -> Dict[str, np.ndarray]:
+        """One (shuffled) epoch as a dict of stacked
+        ``(num_batches, batch_size, ...)`` blocks — the only tensors that
+        cross host->device all epoch.  With a mesh, each block is
         returned already sharded over the data axis (batch dim 1)."""
-        seeds, labs, masks = self._epoch_numpy()
+        blocks = self._epoch_numpy()
         if self.mesh is None:
-            return seeds, labs, masks
+            return blocks
         from repro.common.sharding import shard_batch
-        return (shard_batch(self.mesh, seeds, 1),
-                shard_batch(self.mesh, labs, 1),
-                shard_batch(self.mesh, masks, 1))
+        return {k: shard_batch(self.mesh, v, 1) for k, v in blocks.items()}
 
     def __iter__(self) -> Iterator[dict]:
-        seeds, labs, masks = self._epoch_numpy()
+        blocks = self._epoch_numpy()
 
         def put(x):
             if self.mesh is None:
@@ -199,15 +196,158 @@ class GSgnnNodeDeviceDataLoader(_BaseLoader):
             return shard_batch(self.mesh, x, 0)
 
         for i in range(self.num_batches):
+            b = {k: put(v[i]) for k, v in blocks.items()}
             yield {
                 "schema": self.schema,
                 "plan": self.plan,
                 "sampler": self.sampler,
                 "sample_on_device": True,
-                "seeds": put(seeds[i]),
-                "labels": put(labs[i]),
-                "seed_mask": put(masks[i]),
+                "batch_size": self.batch_size,
+                "blocks": b,
+                # top-level aliases keep the block names addressable the
+                # way host batches are (b["seeds"], b["seed_mask"], ...)
+                **b,
             }
+
+
+class GSgnnNodeDeviceDataLoader(_DeviceLoaderBase):
+    """Device-sampled node-task loader: ships int32 seed ids + labels +
+    padding mask only (see ``_DeviceLoaderBase``)."""
+
+    def __init__(self, data: GSgnnData, target_ntype: str,
+                 seed_ids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, shuffle: bool = True, seed: int = 0,
+                 sampler: Optional[DeviceNeighborSampler] = None,
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 mesh=None):
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.target_ntype = target_ntype
+        self.seed_ids = np.asarray(seed_ids, np.int64)
+        self.shuffle = shuffle
+        self._init_device(self.graph, fanout, batch_size, seed, sampler,
+                          mesh, {target_ntype: batch_size})
+        self.num_batches = -(-len(self.seed_ids) // batch_size)
+
+    def _num_items(self) -> int:
+        return len(self.seed_ids)
+
+    def _batch_blocks(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        ids, mask = pad_seeds(self.seed_ids[idx], self.batch_size)
+        seeds = ids.astype(np.int32)
+        labels = self.data.node_labels(self.target_ntype)
+        if labels is None:
+            labs = np.zeros_like(seeds)
+        elif np.issubdtype(labels.dtype, np.integer):
+            labs = labels[seeds].astype(np.int32)   # ship 4B, not host int64
+        else:
+            labs = labels[seeds].astype(np.float32)
+        return {"seeds": seeds, "labels": labs, "seed_mask": mask}
+
+    def epoch_arrays(self):
+        """Back-compat view of ``epoch_blocks`` as the historical
+        (seeds, labels, masks) tuple."""
+        b = self.epoch_blocks()
+        return b["seeds"], b["labels"], b["seed_mask"]
+
+
+class GSgnnEdgeDeviceDataLoader(_DeviceLoaderBase):
+    """Device-sampled edge classification/regression loader: a batch
+    ships the target edges' src/dst endpoint ids, their labels, and the
+    padding mask (the ragged last batch pads like the host edge loader;
+    padded rows are masked out of the loss)."""
+
+    def __init__(self, data: GSgnnData, target_etype: EType,
+                 seed_eids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, labels: Optional[np.ndarray] = None,
+                 shuffle: bool = True, seed: int = 0,
+                 sampler: Optional[DeviceNeighborSampler] = None,
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 mesh=None):
+        from repro.trainer.task_programs import edge_seed_counts
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.etype = target_etype
+        self.seed_eids = np.asarray(seed_eids, np.int64)
+        self.labels = labels
+        self.shuffle = shuffle
+        self._init_device(self.graph, fanout, batch_size, seed, sampler,
+                          mesh, edge_seed_counts(target_etype, batch_size))
+        self.num_batches = -(-len(self.seed_eids) // batch_size)
+
+    def _num_items(self) -> int:
+        return len(self.seed_eids)
+
+    def _batch_blocks(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        s_all, d_all = self.data.graph.edges[self.etype]
+        eids = self.seed_eids[idx]
+        src, smask = pad_seeds(s_all[eids], self.batch_size)
+        dst, _ = pad_seeds(d_all[eids], self.batch_size)
+        blocks = {"src": src.astype(np.int32), "dst": dst.astype(np.int32),
+                  "seed_mask": smask}
+        if self.labels is None:
+            blocks["labels"] = np.zeros(self.batch_size, np.int32)
+        else:
+            dtype = (np.int32 if np.issubdtype(self.labels.dtype, np.integer)
+                     else np.float32)
+            lab = np.zeros((self.batch_size,) + self.labels.shape[1:], dtype)
+            lab[:len(eids)] = self.labels[eids]
+            blocks["labels"] = lab
+        return blocks
+
+
+class GSgnnLinkPredictionDeviceDataLoader(_DeviceLoaderBase):
+    """Device-sampled LP loader: a batch ships only the positive edges'
+    src/dst endpoint ids (+ an all-true mask) — negatives are drawn
+    *in-jit* by the LinkPredictionProgram from a counter-based stream,
+    and SpotTarget exclusion masks the batch's own pairs in-jit.  The
+    ragged last batch is dropped (static shapes; mirrors the host LP
+    loader), so the seed mask is always all-true.
+
+    ``neg_method``/``num_negatives`` must match the trainer's (they
+    size the negative role of the GNN seed block; the trainer rejects a
+    plan/program mismatch at fit time)."""
+
+    def __init__(self, data: GSgnnData, target_etype: EType,
+                 seed_eids: np.ndarray, fanout: Sequence[int],
+                 batch_size: int, num_negatives: int = 32,
+                 neg_method: str = "joint", shuffle: bool = True,
+                 seed: int = 0,
+                 sampler: Optional[DeviceNeighborSampler] = None,
+                 restrict_graph: Optional[HeteroGraph] = None,
+                 mesh=None):
+        from repro.trainer.task_programs import lp_seed_counts
+        self.data = data
+        self.graph = restrict_graph or data.graph
+        self.etype = target_etype
+        self.seed_eids = np.asarray(seed_eids, np.int64)
+        self.k = num_negatives
+        self.neg_method = neg_method
+        self.shuffle = shuffle
+        self._init_device(self.graph, fanout, batch_size, seed, sampler,
+                          mesh, lp_seed_counts(target_etype, batch_size,
+                                               neg_method, num_negatives))
+        # drop last ragged batch: static shapes end-to-end
+        self.num_batches = len(self.seed_eids) // batch_size
+        if self.num_batches == 0:
+            raise ValueError(
+                f"link-prediction device loader got {len(self.seed_eids)} "
+                f"training edges for batch_size={batch_size}: the loader "
+                f"drops the ragged tail, so no batch would ever be "
+                f"produced — lower hyperparam.batch_size or grow the "
+                f"train split")
+
+    def _num_items(self) -> int:
+        return len(self.seed_eids)
+
+    def _batch_blocks(self, idx: np.ndarray) -> Dict[str, np.ndarray]:
+        # positives index the *full* graph's edge list; message passing
+        # samples the sampler's graph (train graph, eval edges removed)
+        s_all, d_all = self.data.graph.edges[self.etype]
+        eids = self.seed_eids[idx]
+        return {"src": s_all[eids].astype(np.int32),
+                "dst": d_all[eids].astype(np.int32),
+                "seed_mask": np.ones(self.batch_size, bool)}
 
 
 class GSgnnEdgeDataLoader(_BaseLoader):
@@ -435,11 +575,11 @@ def host_transfer_bytes(batch, store_ntypes: Sequence[str] = (),
     """
     total = 0
     if batch.get("sample_on_device"):
-        # feed mode 3: seeds + labels + padding mask are the entire
-        # host->device payload (sampling/gather/update run in-jit)
-        for key in ("seeds", "labels", "seed_mask"):
-            if key in batch:
-                total += int(np.asarray(batch[key]).nbytes)
+        # feed mode 3: the task program's seed blocks (+ labels/mask) are
+        # the entire host->device payload (sampling, LP negative draws,
+        # gathers, and the optimizer update all run in-jit)
+        for v in batch["blocks"].values():
+            total += int(np.asarray(v).nbytes)
         return total
     sparse_dims = sparse_dims or {}
     for f in batch["arrays"]["feats"].values():

@@ -1,0 +1,368 @@
+"""Task programs: the per-task half of the device-resident step engine.
+
+The device step (feed mode 3, docs/pipeline.md §3b–3d) is one *shared*
+engine — neighbor sampling (``DeviceNeighborSampler``), the in-jit
+feature gather, AdamW + in-jit sparse-adagrad updates, ``lax.scan``
+epochs, and both data-parallel lowerings (the explicit ``shard_map``
+fast path and the GSPMD ``shard_tables`` path) all live in
+``repro.trainer.trainers._TrainerBase``.  What *varies* per task is
+declared here as a :class:`TaskProgram`:
+
+- the **seed layout**: which int32 blocks a batch ships host->device
+  (node ids vs. src/dst edge endpoints) and how the roles concatenate
+  into the per-ntype GNN seed block — the same ``_role_concat`` layout
+  the host loaders emit, so host and device paths share a BlockSchema;
+- the **in-jit seed -> frontier expansion**: link prediction draws its
+  negatives *inside* the step (counter-based, from the sampler's seed +
+  step counter, so dp=1 and dp=N walk bit-identical negative streams)
+  and contributes them to the seed block, plus the SpotTarget exclusion
+  pairs for the sampler;
+- the **loss / score head**, including the data-parallel form of LP's
+  in-batch ``B x B`` score matrix: each shard scores its local
+  positives against the *all-gathered* global dst embedding set, so the
+  sharded loss matches the single-device one.
+
+Programs register by task name in ``TASK_PROGRAMS``.
+:func:`device_capability` is the registry-driven replacement for the
+old "sample_on_device currently supports node tasks only" guard
+errors: it returns ``None`` when a (task, options) combination runs on
+the device step, else a message naming exactly which feature is
+missing — config validation, the runner, and the trainer all route
+through it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+TASK_PROGRAMS: Dict[str, type] = {}
+
+
+def register_program(*names):
+    def deco(cls):
+        for n in names:
+            TASK_PROGRAMS[n] = cls
+        return cls
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# capability checks (registry-driven guard errors)
+# ---------------------------------------------------------------------------
+def device_capability(task: str, *, neg_method: Optional[str] = None,
+                      num_negatives: int = 0, batch_size: int = 0,
+                      data_parallel: int = 1) -> Optional[str]:
+    """``None`` when the device step supports (task, options); else a
+    message naming the missing feature.  ``data_parallel=0`` (= every
+    attached device) defers the per-shard divisibility check to the
+    shard_map builder, which knows the actual mesh size."""
+    if task not in TASK_PROGRAMS:
+        return (f"no device task program is registered for task {task!r}; "
+                f"device-capable tasks: {sorted(TASK_PROGRAMS)}")
+    if task == "link_prediction" and neg_method is not None:
+        return lp_shard_capability(neg_method, num_negatives, batch_size,
+                                   data_parallel)
+    return None
+
+
+def lp_shard_capability(neg_method: str, k: int, batch_size: int,
+                        n_shards: int) -> Optional[str]:
+    """Shared-negative divisibility under an n-way data mesh: every
+    shard must carry whole negative groups (its ``batch/n`` slice of
+    the global group table), or its seed layout is no longer an equal
+    slice of the global one."""
+    if n_shards in (0, 1) or neg_method not in ("joint", "local_joint"):
+        return None
+    local = batch_size // max(n_shards, 1)
+    if k > local or (local % k) != 0:
+        return (f"{neg_method} negative sharing under data_parallel="
+                f"{n_shards} needs the per-shard batch "
+                f"({batch_size}//{n_shards}={local}) divisible by "
+                f"num_negatives ({k}) — every shard must hold whole "
+                f"negative groups; use num_negatives <= {local} dividing "
+                f"it, or neg_method: uniform / in_batch")
+    return None
+
+
+def program_for(trainer, batch_size: int) -> "TaskProgram":
+    missing = device_capability(trainer.task)
+    if missing:
+        raise ValueError(f"sample_on_device: {missing}")
+    return TASK_PROGRAMS[trainer.task](trainer, batch_size)
+
+
+# ---------------------------------------------------------------------------
+# seed-layout helpers (shared with the device loaders)
+# ---------------------------------------------------------------------------
+def role_layout(role_list: List[Tuple[str, int]]):
+    """Static counterpart of the host loaders' ``_role_concat``: roles
+    concatenate per ntype in declaration order.  Returns
+    (seed counts {ntype: rows}, roles ((ntype, offset, length), ...))."""
+    counts: Dict[str, int] = {}
+    roles = []
+    for nt, n in role_list:
+        off = counts.get(nt, 0)
+        roles.append((nt, off, n))
+        counts[nt] = off + n
+    return counts, tuple(roles)
+
+
+def edge_seed_counts(etype, batch_size: int) -> Dict[str, int]:
+    """Per-ntype GNN seed rows of an edge-task batch (src + dst roles)."""
+    counts, _ = role_layout([(etype[0], batch_size), (etype[2], batch_size)])
+    return counts
+
+
+def lp_seed_counts(etype, batch_size: int, neg_method: str,
+                   k: int) -> Dict[str, int]:
+    """Per-ntype GNN seed rows of an LP batch: src + dst positives plus
+    the negative role's in-jit-drawn seeds (`negative_seed_count`)."""
+    from repro.core.negative_sampling import negative_seed_count
+    role_list = [(etype[0], batch_size), (etype[2], batch_size)]
+    n_neg = negative_seed_count(neg_method, batch_size, k)
+    if n_neg:
+        role_list.append((etype[2], n_neg))
+    counts, _ = role_layout(role_list)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+class TaskProgram:
+    """One task's contribution to the shared device step.
+
+    Built per (trainer, batch size) — under the shard_map path the
+    engine builds it with the *local* (per-shard) batch size and passes
+    ``dp=(axis_name, n_shards)`` into :meth:`expand` / :meth:`loss`, so
+    every global quantity (negative draws, the in-batch score matrix,
+    exclusion lists) is reconstructed from the shard's slice plus
+    collectives, bit-compatible with the 1-device run.
+    """
+
+    #: names of the numpy blocks a device batch ships host->device, in a
+    #: dict keyed by these names (the loader's and engine's contract)
+    block_names: Tuple[str, ...] = ()
+
+    def __init__(self, trainer, batch_size: int):
+        self.trainer = trainer
+        self.B = int(batch_size)
+
+    # -- seed layout ----------------------------------------------------
+    def _role_list(self) -> List[Tuple[str, int]]:
+        raise NotImplementedError
+
+    def seed_counts(self) -> Dict[str, int]:
+        """{ntype: rows} for ``DeviceNeighborSampler.plan_for``."""
+        counts, _ = role_layout(self._role_list())
+        return counts
+
+    def roles(self):
+        """(ntype, offset, length) per role — the loss head's embedding
+        slices, identical to the host loaders' ``roles`` entries."""
+        _, roles = role_layout(self._role_list())
+        return roles
+
+    def seed_maps(self, n_shards: int):
+        """Affine local->global row maps of the per-ntype seed block for
+        the shard_map path (trace-time numpy; consumed by
+        ``DeviceNeighborSampler.sample(seed_maps=...)``).  Part ``j`` of
+        a ntype's concat (local length ``c``) occupies ``n_shards * c``
+        global rows, shard ``s`` holding rows ``base + s * c``."""
+        per_nt: Dict[str, List[int]] = {}
+        for nt, c in self._role_list():
+            per_nt.setdefault(nt, []).append(c)
+        out = {}
+        for nt, lens in per_nt.items():
+            bases, strides, off_g = [], [], 0
+            for c in lens:
+                bases.append(off_g + np.arange(c, dtype=np.int64))
+                strides.append(np.full(c, c, np.int64))
+                off_g += c * n_shards
+            out[nt] = (np.concatenate(bases) if len(bases) > 1 else bases[0],
+                       np.concatenate(strides) if len(strides) > 1
+                       else strides[0])
+        return out
+
+    def _concat_roles(self, arrays):
+        """Concat per-role id arrays (aligned with ``_role_list``) into
+        the per-ntype seed dict, in role order (in-jit)."""
+        import jax.numpy as jnp
+        seeds: Dict[str, list] = {}
+        for (nt, _), arr in zip(self._role_list(), arrays):
+            seeds.setdefault(nt, []).append(arr.astype(jnp.int32))
+        return {nt: (jnp.concatenate(v) if len(v) > 1 else v[0])
+                for nt, v in seeds.items()}
+
+    # -- traced hooks ---------------------------------------------------
+    def expand(self, blocks, step, dp=None):
+        """In-jit seed -> frontier-seed expansion.  Returns
+        (seeds {ntype: int32 ids}, aux_in, exclude-or-None); ``exclude``
+        feeds the sampler's SpotTarget mask."""
+        raise NotImplementedError
+
+    def loss(self, params, emb, aux_in, dp=None):
+        """Loss/score head on the GNN seed embeddings -> (loss, out)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+@register_program("node_classification", "node_regression")
+class NodeTaskProgram(TaskProgram):
+    """Node classification / regression: seeds are target-ntype ids."""
+
+    block_names = ("seeds", "labels", "seed_mask")
+
+    def _role_list(self):
+        return [(self.trainer.target_ntype, self.B)]
+
+    def expand(self, blocks, step, dp=None):
+        seeds = self._concat_roles([blocks["seeds"]])
+        return seeds, {"labels": blocks["labels"],
+                       "mask": blocks["seed_mask"]}, None
+
+    def loss(self, params, emb, aux_in, dp=None):
+        return self.trainer._task_loss(params, emb, aux_in)
+
+
+# ---------------------------------------------------------------------------
+@register_program("edge_classification", "edge_regression")
+class EdgeTaskProgram(TaskProgram):
+    """Edge classification / regression: seeds are the target edges'
+    src/dst endpoints; the decoder reads both endpoint embeddings."""
+
+    block_names = ("src", "dst", "labels", "seed_mask")
+
+    def _role_list(self):
+        s, _, d = self.trainer.target_etype
+        return [(s, self.B), (d, self.B)]
+
+    def expand(self, blocks, step, dp=None):
+        seeds = self._concat_roles([blocks["src"], blocks["dst"]])
+        return seeds, {"labels": blocks["labels"],
+                       "mask": blocks["seed_mask"]}, None
+
+    def loss(self, params, emb, aux_in, dp=None):
+        return self.trainer._task_loss(params, emb, aux_in,
+                                       roles=self.roles())
+
+
+# ---------------------------------------------------------------------------
+@register_program("link_prediction")
+class LinkPredictionProgram(TaskProgram):
+    """LP: seeds are positive src/dst endpoints plus in-jit-drawn
+    negatives; the head scores positives against per-edge / shared /
+    in-batch negatives (§3.3.4)."""
+
+    block_names = ("src", "dst", "seed_mask")
+
+    _NEG_SHAPE = {"uniform": "per_edge", "joint": "shared",
+                  "local_joint": "shared", "in_batch": "inbatch"}
+
+    def __init__(self, trainer, batch_size):
+        super().__init__(trainer, batch_size)
+        from repro.core.negative_sampling import negative_seed_count
+        self.method = trainer.neg_method
+        self.k = int(trainer.num_negatives)
+        self.n_neg = negative_seed_count(self.method, self.B, self.k)
+        self.neg_shape = self._NEG_SHAPE[self.method]
+
+    def _role_list(self):
+        s, _, d = self.trainer.target_etype
+        rl = [(s, self.B), (d, self.B)]
+        if self.n_neg:
+            rl.append((d, self.n_neg))
+        return rl
+
+    # -- negative stream -----------------------------------------------
+    def _num_dst_nodes(self) -> int:
+        """dst-ntype node count, read off the sampler's device CSR
+        (row_ptr is dst-indexed)."""
+        tr = self.trainer
+        row_ptr = tr.device_sampler.tables[tr.target_etype]["row_ptr"]
+        return int(row_ptr.shape[0]) - 1
+
+    def _neg_key(self, step):
+        """Counter-based key of the step's negative stream: same seed +
+        step on every shard count -> identical global draws."""
+        import jax
+        from repro.core.negative_sampling import NEG_STREAM
+        base = self.trainer.device_sampler.base_key
+        return jax.random.fold_in(jax.random.fold_in(base, step), NEG_STREAM)
+
+    def _negative_seeds(self, step, dp):
+        """The negative role's local seed ids: the global batch's draw
+        (identical on every shard), sliced to this shard's rows."""
+        import jax
+        from repro.core.negative_sampling import device_negative_seeds
+        tr = self.trainer
+        n = 1 if dp is None else int(dp[1])
+        local = tr.local_nodes
+        negs = device_negative_seeds(self.method, self._neg_key(step),
+                                     self._num_dst_nodes(), self.B * n,
+                                     self.k, local_nodes=local)
+        if dp is not None and n > 1:
+            shard = jax.lax.axis_index(dp[0])
+            negs = jax.lax.dynamic_slice(negs, (shard * self.n_neg,),
+                                         (self.n_neg,))
+        return negs
+
+    # -- hooks ----------------------------------------------------------
+    def expand(self, blocks, step, dp=None):
+        import jax
+        import jax.numpy as jnp
+        tr = self.trainer
+        s, r, d = tr.target_etype
+        src = blocks["src"].astype(jnp.int32)
+        dst = blocks["dst"].astype(jnp.int32)
+        arrays = [src, dst]
+        if self.n_neg:
+            arrays.append(self._negative_seeds(step, dp))
+        seeds = self._concat_roles(arrays)
+        aux_in = {"mask": blocks["seed_mask"]}
+        exclude = None
+        if tr.exclude_target_edges:
+            ex_s, ex_d = src, dst
+            if dp is not None and dp[1] > 1:
+                # SpotTarget must mask the *global* batch's target pairs
+                # on every shard, exactly like the 1-device run
+                ex_s = jax.lax.all_gather(src, dp[0], tiled=True)
+                ex_d = jax.lax.all_gather(dst, dp[0], tiled=True)
+            exclude = {tr.target_etype: (ex_s, ex_d),
+                       (d, r + "-rev", s): (ex_d, ex_s)}
+        return seeds, aux_in, exclude
+
+    def loss(self, params, emb, aux_in, dp=None):
+        import jax.numpy as jnp
+        tr = self.trainer
+        if dp is not None and dp[1] > 1 and self.method == "in_batch":
+            pos, nsc = self._inbatch_scores_dp(params, emb, dp)
+            return tr._lp_loss(pos, nsc, jnp.ones(nsc.shape, bool))
+        aux = dict(aux_in)
+        # _task_loss swaps a shape-mismatched mask for all-true; device
+        # negatives are never padded, so all-true is exact
+        aux.setdefault("neg_mask", jnp.ones((1, 1), bool))
+        return tr._task_loss(params, emb, aux, roles=self.roles(),
+                             neg_shape=self.neg_shape, k=self.k)
+
+    def _inbatch_scores_dp(self, params, emb, dp):
+        """Sharded in-batch scores: local positives vs. the all-gathered
+        *global* dst set — row i (global) keeps the global columns
+        ``i+1..i+B-1 mod B``, exactly the 1-device matrix's rows."""
+        import jax
+        import jax.numpy as jnp
+        from repro.gnn.decoders import lp_score, lp_score_all
+        axis, n = dp
+        tr = self.trainer
+        roles = self.roles()
+        (snt, soff, slen), (dnt, doff, dlen) = roles[0], roles[1]
+        src = jax.lax.slice_in_dim(emb[snt], soff, soff + slen, axis=0)
+        dst = jax.lax.slice_in_dim(emb[dnt], doff, doff + dlen, axis=0)
+        pos = lp_score(params["dec"], src, dst, tr.etype_idx)
+        gdst = jax.lax.all_gather(dst, axis, tiled=True)        # (B_g, D)
+        allsc = lp_score_all(params["dec"], src, gdst,
+                             tr.etype_idx)                      # (B_l, B_g)
+        b_global = self.B * n
+        gi = jax.lax.axis_index(axis) * self.B + jnp.arange(self.B)
+        idx = (gi[:, None] + jnp.arange(1, b_global)[None, :]) % b_global
+        nsc = jnp.take_along_axis(allsc, idx, axis=1)           # (B_l, B_g-1)
+        return pos, nsc

@@ -8,7 +8,7 @@ and an evaluator.  The same trainer runs on one device or a data mesh
 a 1-D ``("data",)`` mesh (``launch.mesh.make_data_mesh``) and the device
 step runs data-parallel — batches shard over the mesh, dense params
 replicate with mean-all-reduced gradients, and the loss/metrics keep
-their global-batch semantics (docs/pipeline.md §3c).  With replicated
+their global-batch semantics (docs/pipeline.md §3d).  With replicated
 tables the step is an explicit ``shard_map`` (per-shard local programs,
 bit-identical sample stream to the 1-device run); with row-sharded
 tables (``shard_tables``) it runs under sharding-annotated jit and GSPMD
@@ -21,6 +21,12 @@ built with ``host_features=False``.  Raw-feature gathers then happen
 only int32 index blocks and bool masks host->device.  The step donates
 params/opt_state buffers on backends that support donation (in-place
 updates, no copy of the model per step).
+
+The fully-jitted device step (feed mode 3) is *task-agnostic*: this
+module owns the engine (sampling, gathers, optimizers, scanned epochs,
+both data-parallel lowerings) and dispatches everything task-specific —
+seed layout, in-jit negative draws, the loss head — to the task's
+``TaskProgram`` (``repro.trainer.task_programs``).
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ import numpy as np
 
 from repro.core.embedding import SparseEmbedding
 from repro.core.lp import (contrastive_lp_loss, cross_entropy_lp_loss, mrr)
-from repro.gnn.decoders import decoder_apply, init_decoder, lp_score
+from repro.gnn.decoders import (decoder_apply, init_decoder, lp_score,
+                                lp_score_all)
 from repro.gnn.model import GSgnnModel, gnn_apply_blocks, init_gnn_model
 from repro.optim import adamw
 from repro.optim.schedules import cosine_schedule
@@ -211,7 +218,17 @@ class _TrainerBase:
     def _loss_and_out(self, params, feats, batch):
         raise NotImplementedError
 
-    def _build_loss_fn(self, schema, roles=None, neg_shape=None, k=0):
+    def _build_loss_fn(self, schema, roles=None, neg_shape=None, k=0,
+                       head=None):
+        """GNN apply + task head as one differentiable closure.  The
+        default head is the trainer's ``_task_loss`` with the batch's
+        static role metadata; the device step passes ``head=`` a
+        ``TaskProgram.loss`` binding instead (same signature)."""
+        if head is None:
+            def head(params, emb, aux_in):
+                return self._task_loss(params, emb, aux_in, roles=roles,
+                                       neg_shape=neg_shape, k=k)
+
         def loss_fn(params, feats, arrays, aux_in, gather_idx, tables):
             arr = dict(arrays)
             # device-resident path: gather raw features from the resident
@@ -220,8 +237,7 @@ class _TrainerBase:
             gathered = {nt: tables[nt][gather_idx[nt]] for nt in gather_idx}
             arr["feats"] = {**gathered, **feats}
             emb = gnn_apply_blocks(params["gnn"], self.model, schema, arr)
-            return self._task_loss(params, emb, aux_in,
-                                   roles=roles, neg_shape=neg_shape, k=k)
+            return head(params, emb, aux_in)
         return loss_fn
 
     def _make_step(self, schema, roles=None, neg_shape=None, k=0):
@@ -255,16 +271,21 @@ class _TrainerBase:
 
     # ------------------------------------------------------------------
     # device-resident sampling (feed mode 3, docs/pipeline.md): the whole
-    # sample -> gather -> loss -> optimizer chain is one jitted program;
-    # a batch ships only int32 seed ids (+ labels/seed mask).
+    # expand -> sample -> gather -> loss -> optimizer chain is one jitted
+    # program; a batch ships only the task's int32 seed blocks (+ labels
+    # and the padding mask).  Which blocks a batch carries, how they
+    # concatenate into per-ntype GNN seeds (LP additionally draws its
+    # negatives in-jit here), and the loss head are declared by the
+    # task's TaskProgram (repro.trainer.task_programs); this engine owns
+    # everything task-agnostic: sampling, gathers, AdamW + sparse
+    # adagrad, lax.scan epochs, and both data-parallel lowerings.
     # ------------------------------------------------------------------
-    def _device_seed_ntype(self) -> str:
-        raise NotImplementedError(
-            "sample_on_device currently supports node tasks only")
+    def _device_program(self, batch_size: int):
+        from repro.trainer.task_programs import program_for
+        return program_for(self, batch_size)
 
-    def _make_device_step(self, schema, plan):
-        sampler, store = self.device_sampler, self.feature_store
-        target_nt = self._device_seed_ntype()
+    def _store_and_sparse_ntypes(self, plan):
+        store = self.feature_store
         input_nts = [nt for nt, _ in plan.layers[0].src_counts]
         store_nts = tuple(nt for nt in input_nts
                           if store is not None and nt in store)
@@ -280,10 +301,31 @@ class _TrainerBase:
                 f"in-jit, but {missing} have no feature_store/"
                 f"sparse_embeds entry — pass feature_store= (device "
                 f"features) for raw-featured ntypes")
+        return store_nts, sparse_nts
+
+    def _check_plan_matches_program(self, plan, program):
+        """The loader's plan and the trainer's program must agree on the
+        seed layout, or the step would trace against the wrong shapes —
+        e.g. a loader built with a different neg_method/num_negatives
+        than the trainer's.  Fail with the mismatch spelled out."""
+        want = program.seed_counts()
+        got = dict(plan.seed_counts)
+        if want != got:
+            raise ValueError(
+                f"the loader's sample plan ({got}) does not match the "
+                f"trainer's task-program seed layout ({want}) — build "
+                f"the loader with the trainer's task options (for LP: "
+                f"the same neg_method / num_negatives)")
+
+    def _make_device_step(self, schema, plan, batch_size):
+        sampler = self.device_sampler
+        store_nts, sparse_nts = self._store_and_sparse_ntypes(plan)
         if self.mesh is not None and self._dp_tables_replicated():
-            return self._make_device_step_shard_map(plan, store_nts,
-                                                    sparse_nts)
-        loss_fn = self._build_loss_fn(schema)
+            return self._make_device_step_shard_map(plan, batch_size,
+                                                    store_nts, sparse_nts)
+        program = self._device_program(batch_size)
+        self._check_plan_matches_program(plan, program)
+        loss_fn = self._build_loss_fn(schema, head=program.loss)
         sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
         mesh = self.mesh
         # the donated sparse tables must come back with the sharding they
@@ -294,18 +336,19 @@ class _TrainerBase:
             if mesh is not None else {}
 
         def step(params, opt_state, stepno, sparse_state, tables, csr,
-                 seeds, labels, seed_mask):
-            masks, dts, frontier = sampler.sample(
-                csr, plan, {target_nt: seeds}, stepno)
+                 blocks):
+            seeds, aux_in, exclude = program.expand(blocks, stepno)
+            masks, dts, frontier = sampler.sample(csr, plan, seeds, stepno,
+                                                  exclude=exclude)
             arrays = {"masks": masks, "delta_t": dts}
             gather_idx = {nt: frontier[nt] for nt in store_nts}
             feats = {nt: sparse_state[nt][0][frontier[nt]]
                      for nt in sparse_nts}
-            aux_in = {"labels": labels, "mask": seed_mask}
-            # data-parallel note: seeds/labels/mask arrive sharded over the
-            # "data" mesh axis; the loss is a *global* masked mean, so the
-            # SPMD partitioner inserts the gradient all-reduce and every
-            # shard applies the identical replicated optimizer update
+            # data-parallel note (GSPMD path): the blocks arrive sharded
+            # over the "data" mesh axis; the loss is a *global* masked
+            # mean, so the SPMD partitioner inserts the gradient
+            # all-reduce and every shard applies the identical
+            # replicated optimizer update
             (loss, out), (gp, gf) = jax.value_and_grad(
                 loss_fn, argnums=(0, 1), has_aux=True)(
                     params, feats, arrays, aux_in, gather_idx, tables)
@@ -346,42 +389,64 @@ class _TrainerBase:
         return all(getattr(x.sharding, "spec", None) == P()
                    for x in leaves)
 
-    def _make_device_step_shard_map(self, plan, store_nts, sparse_nts):
+    def _make_device_step_shard_map(self, plan, batch_size, store_nts,
+                                    sparse_nts):
         """Data-parallel device step as an explicit shard_map: every
         shard runs the complete single-device program on its contiguous
         ``batch/n`` slice (drawing its rows of the *global* counter-based
-        sample stream, so the union of shards reproduces the one-device
-        draw bit-for-bit), and the shards meet at exactly three points:
-        the global masked-mean loss normalization, the gradient psum,
-        and the sparse-embedding scatter psum.  This is the GiGL/AGL
-        minibatch-data-parallel layout — no resharding of the
-        interleaved MFG frontier ever happens."""
+        sample AND negative streams, so the union of shards reproduces
+        the one-device draw bit-for-bit), and the shards meet at exactly
+        the points the task program declares: the global masked-mean
+        loss normalization, the gradient psum, the sparse-embedding
+        scatter psum, and — for LP — the all-gathers of the dst
+        embeddings (in-batch scores) and the SpotTarget pair list.  This
+        is the GiGL/AGL minibatch-data-parallel layout — no resharding
+        of the interleaved MFG frontier ever happens."""
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.gnn.schema import schema_of_plan
+        from repro.trainer.task_programs import device_capability
         mesh = self.mesh
         n = int(mesh.shape["data"])
         sampler = self.device_sampler
-        target_nt = self._device_seed_ntype()
-        (seed_nt, b_global), = plan.seed_counts
-        if b_global % n != 0:
+        if batch_size % n != 0:
             raise ValueError(
-                f"global batch {b_global} is not divisible by the "
+                f"global batch {batch_size} is not divisible by the "
                 f"{n}-way data mesh")
-        local_plan = sampler.plan_for({target_nt: b_global // n})
-        loss_fn = self._build_loss_fn(schema_of_plan(local_plan))
+        missing = device_capability(
+            self.task, neg_method=getattr(self, "neg_method", None),
+            num_negatives=getattr(self, "num_negatives", 0),
+            batch_size=batch_size, data_parallel=n)
+        if missing:
+            raise ValueError(f"sample_on_device: {missing}")
+        program = self._device_program(batch_size // n)
+        # every ntype's local seed rows must be an equal 1/n slice of
+        # the loader's global plan, or the shard row maps are wrong
+        got = dict(plan.seed_counts)
+        for nt, c in program.seed_counts().items():
+            if got.get(nt) != c * n:
+                raise ValueError(
+                    f"seed rows for ntype {nt!r} ({got.get(nt)}) are not "
+                    f"{n} x the per-shard layout ({c}) — the loader's "
+                    f"plan and the trainer's task program disagree")
+        local_plan = sampler.plan_for(program.seed_counts())
+        dp = ("data", n)
+        loss_fn = self._build_loss_fn(
+            schema_of_plan(local_plan),
+            head=lambda p, e, a: program.loss(p, e, a, dp=dp))
+        seed_maps = program.seed_maps(n)
         sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
 
         def local_step(params, opt_state, stepno, sparse_state, tables,
-                       csr, seeds, labels, seed_mask):
+                       csr, blocks):
+            seeds, aux_in, exclude = program.expand(blocks, stepno, dp=dp)
             masks, dts, frontier = sampler.sample(
-                csr, local_plan, {target_nt: seeds}, stepno,
-                dp=("data", n))
+                csr, local_plan, seeds, stepno, exclude=exclude,
+                dp=dp, seed_maps=seed_maps)
             arrays = {"masks": masks, "delta_t": dts}
             gather_idx = {nt: frontier[nt] for nt in store_nts}
             feats = {nt: sparse_state[nt][0][frontier[nt]]
                      for nt in sparse_nts}
-            aux_in = {"labels": labels, "mask": seed_mask}
 
             def global_loss(p, f):
                 # loss_fn yields the LOCAL masked mean; rescale so the
@@ -389,7 +454,7 @@ class _TrainerBase:
                 # (sum_i num_i / sum_i den_i) — batch-size invariant
                 loss, out = loss_fn(p, f, arrays, aux_in, gather_idx,
                                     tables)
-                den = seed_mask.sum().astype(jnp.float32)
+                den = aux_in["mask"].sum().astype(jnp.float32)
                 gden = jax.lax.psum(den, "data")
                 return loss * den / jnp.maximum(gden, 1.0), out
 
@@ -410,24 +475,24 @@ class _TrainerBase:
         repl = P()
         return shard_map(
             local_step, mesh=mesh,
-            in_specs=(repl, repl, repl, repl, repl, repl,
-                      P("data"), P("data"), P("data")),
+            in_specs=(repl, repl, repl, repl, repl, repl, P("data")),
             out_specs=(repl, repl, repl, repl, repl, P("data")),
             check_rep=False)
 
     @staticmethod
     def _make_device_epoch(step):
-        """lax.scan the device step over a stacked epoch of seed batches:
-        one dispatch, zero host round-trips between minibatches."""
+        """lax.scan the device step over a stacked epoch of seed-block
+        batches: one dispatch, zero host round-trips between
+        minibatches.  ``blocks`` is the task program's dict of stacked
+        ``(num_batches, ...)`` arrays (scan carries the pytree)."""
         def epoch(params, opt_state, stepno, sparse_state, tables, csr,
-                  seeds, labels, seed_mask):
+                  blocks):
             def body(carry, xs):
                 p, o, s, sp = carry
-                p, o, s, sp, loss, _ = step(p, o, s, sp, tables, csr, *xs)
+                p, o, s, sp, loss, _ = step(p, o, s, sp, tables, csr, xs)
                 return (p, o, s, sp), loss
             (params, opt_state, stepno, sparse_state), losses = jax.lax.scan(
-                body, (params, opt_state, stepno, sparse_state),
-                (seeds, labels, seed_mask))
+                body, (params, opt_state, stepno, sparse_state), blocks)
             return params, opt_state, stepno, sparse_state, losses
         return epoch
 
@@ -447,10 +512,10 @@ class _TrainerBase:
                 "the loader's seed/tables would be silently ignored; "
                 "build the loader with sampler=trainer.device_sampler")
 
-    def _device_fns_for(self, schema, plan):
+    def _device_fns_for(self, schema, plan, batch_size):
         key = ("device", schema)
         if key not in self._steps:
-            raw = self._make_device_step(schema, plan)
+            raw = self._make_device_step(schema, plan, batch_size)
             self._steps[key] = {
                 "step": jax.jit(raw, donate_argnums=(0, 1, 2, 3)),
                 "epoch": jax.jit(self._make_device_epoch(raw),
@@ -469,37 +534,34 @@ class _TrainerBase:
 
     def _fit_batch_device(self, batch):
         self._check_device_sampler(batch.get("sampler"))
-        fns = self._device_fns_for(batch["schema"], batch["plan"])
+        fns = self._device_fns_for(batch["schema"], batch["plan"],
+                                   batch["batch_size"])
         tables = (self.feature_store.tables
                   if self.feature_store is not None else {})
         state = self._sparse_pack()
+        blocks = {k: self._put_batch(v) for k, v in batch["blocks"].items()}
         self.params, self.opt_state, self.stepno, state, loss, out = \
             fns["step"](self.params, self.opt_state, self.stepno, state,
-                        tables, self.device_sampler.tables,
-                        self._put_batch(jnp.asarray(batch["seeds"],
-                                                    jnp.int32)),
-                        self._put_batch(jnp.asarray(batch["labels"])),
-                        self._put_batch(jnp.asarray(batch["seed_mask"])))
+                        tables, self.device_sampler.tables, blocks)
         self._sparse_unpack(state)
         return float(loss), out
 
     def _fit_device(self, loader, val_loader=None, num_epochs: int = 1,
                     verbose: bool = False):
         self._check_device_sampler(getattr(loader, "sampler", None))
-        fns = self._device_fns_for(loader.schema, loader.plan)
+        fns = self._device_fns_for(loader.schema, loader.plan,
+                                   loader.batch_size)
         tables = (self.feature_store.tables
                   if self.feature_store is not None else {})
         csr = self.device_sampler.tables
         for epoch in range(num_epochs):
-            seeds, labels, seed_mask = loader.epoch_arrays()
+            blocks = {k: self._put_batch(v, 1)
+                      for k, v in loader.epoch_blocks().items()}
             t0 = time.time()
             state = self._sparse_pack()
             self.params, self.opt_state, self.stepno, state, losses = \
                 fns["epoch"](self.params, self.opt_state, self.stepno,
-                             state, tables, csr,
-                             self._put_batch(seeds, 1),
-                             self._put_batch(labels, 1),
-                             self._put_batch(seed_mask, 1))
+                             state, tables, csr, blocks)
             self._sparse_unpack(state)
             losses = np.asarray(losses)  # forces completion of the scan
             rec = {"epoch": epoch, "loss": float(losses.mean()),
@@ -570,9 +632,6 @@ class GSgnnNodeTrainer(_TrainerBase):
         super().__init__(model, task, out_dim=out_dim, **kw)
         self.target_ntype = target_ntype
 
-    def _device_seed_ntype(self) -> str:
-        return self.target_ntype
-
     def _aux_inputs(self, batch):
         return {"labels": jnp.asarray(batch["labels"]),
                 "mask": jnp.asarray(batch["seed_mask"])}
@@ -642,14 +701,28 @@ class GSgnnEdgeTrainer(_TrainerBase):
 # ---------------------------------------------------------------------------
 class GSgnnLinkPredictionTrainer(_TrainerBase):
     """LP with configurable loss (contrastive / cross-entropy) and the
-    negative-sampling modes of the LP dataloader (§3.3.4)."""
+    negative-sampling modes of the LP dataloader (§3.3.4).
+
+    The host path takes the negatives the loader sampled; the device
+    path (feed mode 3) instead draws them *in-jit* per
+    ``neg_method``/``num_negatives`` (the LinkPredictionProgram's
+    counter-based stream), so those two become trainer options here.
+    ``local_nodes`` is the partition's dst-node set for ``local_joint``;
+    ``exclude_target_edges`` drives the in-jit SpotTarget mask (the host
+    loader owns its own flag)."""
 
     def __init__(self, model, target_etype, loss: str = "contrastive",
-                 temperature: float = 0.1, **kw):
+                 temperature: float = 0.1, neg_method: str = "joint",
+                 num_negatives: int = 32, local_nodes=None,
+                 exclude_target_edges: bool = True, **kw):
         super().__init__(model, "link_prediction", out_dim=0, **kw)
         self.target_etype = target_etype
         self.loss_kind = loss
         self.temperature = temperature
+        self.neg_method = neg_method
+        self.num_negatives = num_negatives
+        self.local_nodes = local_nodes
+        self.exclude_target_edges = exclude_target_edges
         self.etype_idx = [e[0] for e in model.etypes].index(
             "___".join(target_etype)) if model.etypes else None
 
@@ -681,12 +754,19 @@ class GSgnnLinkPredictionTrainer(_TrainerBase):
                                neg.reshape(G, 1, k, -1), self.etype_idx)
                 nsc = nsc.reshape(B, k)
         else:  # in_batch: other dst nodes in the batch are the negatives
-            nsc = lp_score(params["dec"], src[:, None, :], dst[None, :, :],
-                           self.etype_idx)  # (B, B)
+            nsc = lp_score_all(params["dec"], src, dst,
+                               self.etype_idx)  # (B, B), one matmul
             # drop the diagonal (the positive itself): row i keeps cols i+1..i+B-1 mod B
             idx = (jnp.arange(B)[:, None] + jnp.arange(1, B)[None, :]) % B
             nsc = jnp.take_along_axis(nsc, idx, axis=1)  # (B, B-1)
         return pos, nsc
+
+    def _lp_loss(self, pos, nsc, neg_mask):
+        if self.loss_kind == "contrastive":
+            loss = contrastive_lp_loss(pos, nsc, neg_mask, self.temperature)
+        else:
+            loss = cross_entropy_lp_loss(pos, nsc, neg_mask)
+        return loss, (pos, nsc)
 
     def _task_loss(self, params, emb, aux_in, roles=None, neg_shape=None,
                    k=0):
@@ -694,11 +774,7 @@ class GSgnnLinkPredictionTrainer(_TrainerBase):
         neg_mask = aux_in["neg_mask"]
         if neg_mask.shape != nsc.shape:
             neg_mask = jnp.ones(nsc.shape, bool)
-        if self.loss_kind == "contrastive":
-            loss = contrastive_lp_loss(pos, nsc, neg_mask, self.temperature)
-        else:
-            loss = cross_entropy_lp_loss(pos, nsc, neg_mask)
-        return loss, (pos, nsc)
+        return self._lp_loss(pos, nsc, neg_mask)
 
     def eval_batch(self, batch):
         feats, _ = self._eval_feats(batch)

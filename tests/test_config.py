@@ -251,3 +251,94 @@ def test_load_config_dict_rejects_non_mapping(tmp_path):
     p.write_text("- just\n- a\n- list\n")
     with pytest.raises(ConfigError, match="mapping"):
         load_config_dict(str(p))
+
+
+# ---------------------------------------------------------------------------
+# negative-sampler registry / train_negative_sampler alias / device
+# capability checks (task-program registry)
+# ---------------------------------------------------------------------------
+def test_neg_methods_derive_from_sampler_registry():
+    """local_joint is registered and therefore config-reachable; the
+    config's choices and the registry can never drift apart."""
+    from repro.config.gsconfig import NEG_METHODS
+    from repro.core.negative_sampling import DEVICE_SAMPLERS, SAMPLERS
+    assert set(NEG_METHODS) == set(SAMPLERS)
+    assert "local_joint" in SAMPLERS
+    assert set(DEVICE_SAMPLERS) == set(SAMPLERS)
+
+
+def test_train_negative_sampler_alias_resolves_into_neg_method():
+    cfg = GSConfig.from_dict(
+        {"task": "link_prediction", "input": {"dataset": "amazon"},
+         "hyperparam": {"batch_size": 64},
+         "link_prediction": {"train_negative_sampler": "local_joint",
+                             "num_negatives": 16}}).resolved()
+    assert cfg.link_prediction.neg_method == "local_joint"
+
+
+def test_train_negative_sampler_rejects_unregistered_method():
+    with pytest.raises(ConfigError, match="not one of"):
+        GSConfig.from_dict(
+            {"task": "link_prediction", "input": {"dataset": "amazon"},
+             "link_prediction": {"train_negative_sampler": "popularity"}})
+
+
+def test_train_negative_sampler_alias_drives_validation():
+    # divisibility must be checked against the alias, not the default
+    with pytest.raises(ConfigError, match="divisible"):
+        GSConfig.from_dict(
+            {"task": "link_prediction", "input": {"dataset": "amazon"},
+             "hyperparam": {"batch_size": 100},
+             "link_prediction": {"neg_method": "uniform",
+                                 "train_negative_sampler": "joint",
+                                 "num_negatives": 32}})
+
+
+def test_sample_on_device_names_missing_task_program():
+    with pytest.raises(ConfigError, match="device-capable tasks"):
+        GSConfig.from_dict(
+            {"task": "multi_task", "input": {"dataset": "mag"},
+             "device_features": True,
+             "hyperparam": {"sample_on_device": True},
+             "multi_task": {"tasks": [
+                 {"name": "nc", "kind": "node_classification",
+                  "node_classification": {}}]}})
+
+
+def test_sample_on_device_allows_lp_and_edge_tasks():
+    """The old node-only guard is gone: every registered task program
+    validates (the acceptance path of this PR)."""
+    for task in ("link_prediction", "edge_classification",
+                 "edge_regression", "node_regression"):
+        GSConfig.from_dict(
+            {"task": task, "input": {"dataset": "amazon"},
+             "device_features": True,
+             "hyperparam": {"sample_on_device": True, "batch_size": 64},
+             task: {}})
+
+
+def test_lp_shared_negatives_dp_per_shard_divisibility():
+    base = {"task": "link_prediction", "input": {"dataset": "amazon"},
+            "device_features": True}
+    # batch 64 over 8 shards -> 8 rows/shard; k=16 cannot form whole
+    # per-shard groups
+    with pytest.raises(ConfigError, match="per-shard"):
+        GSConfig.from_dict(
+            {**base,
+             "hyperparam": {"batch_size": 64, "sample_on_device": True,
+                            "data_parallel": 8},
+             "link_prediction": {"neg_method": "joint",
+                                 "num_negatives": 16}})
+    # k=8 divides the per-shard batch: fine
+    GSConfig.from_dict(
+        {**base,
+         "hyperparam": {"batch_size": 64, "sample_on_device": True,
+                        "data_parallel": 8},
+         "link_prediction": {"neg_method": "joint", "num_negatives": 8}})
+    # in_batch has no per-shard grouping constraint
+    GSConfig.from_dict(
+        {**base,
+         "hyperparam": {"batch_size": 64, "sample_on_device": True,
+                        "data_parallel": 8},
+         "link_prediction": {"neg_method": "in_batch",
+                             "num_negatives": 16}})

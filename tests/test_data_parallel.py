@@ -188,3 +188,83 @@ def test_dp8_sharded_step_compiles_once_per_schema(dp_parity_results):
         assert r["n_step_entries"] == 1
         assert r["epoch_compiles"] == 1     # one schema -> one XLA program
         assert r["step_compiles"] == 0      # per-batch path never traced
+
+
+# ---------------------------------------------------------------------------
+# link prediction on the device step: dp=1 vs dp=8 parity (the in-batch
+# B x B score matrix is computed per shard against the all-gathered
+# global dst set; negatives come from the same counter-based stream)
+# ---------------------------------------------------------------------------
+def _lp_tiny(dp, neg_method="in_batch", k=8, shard_tables=False):
+    return {
+        "task": "link_prediction",
+        "gnn": {"hidden": 16, "fanout": [2, 2]},
+        "hyperparam": {"batch_size": 32, "num_epochs": 2, "seed": 0,
+                       "sample_on_device": True, "data_parallel": dp,
+                       "shard_tables": shard_tables},
+        "input": {"dataset": "mag",
+                  "dataset_conf": {"n_paper": 96, "n_author": 48}},
+        "device_features": True,
+        "link_prediction": {"neg_method": neg_method, "num_negatives": k},
+    }
+
+
+_LP_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import sys
+sys.path.insert(0, os.path.join(%(root)r, "src"))
+from repro.config import GSConfig
+from repro.runner import TASK_REGISTRY, build_graph
+
+def run(raw):
+    cfg = GSConfig.from_dict(raw).resolved()
+    runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
+    hist = runner.train()["history"]
+    return {"loss": [h["loss"] for h in hist],
+            "mrr": [h["mrr"] for h in hist],
+            "n_step_entries": len(runner.trainer._steps)}
+
+confs = json.loads(sys.argv[1])
+print("RESULT:" + json.dumps({k: run(v) for k, v in confs.items()}))
+"""
+
+
+@pytest.fixture(scope="module")
+def lp_dp_parity_results():
+    confs = {"dp1": _lp_tiny(1), "dp8": _lp_tiny(8),
+             "dp8_joint": _lp_tiny(8, neg_method="joint", k=4),
+             "dp1_joint": _lp_tiny(1, neg_method="joint", k=4)}
+    proc = subprocess.run(
+        [sys.executable, "-c", _LP_PARITY_SCRIPT % {"root": _ROOT},
+         json.dumps(confs)],
+        capture_output=True, text=True, timeout=900, cwd=_ROOT)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[0][len("RESULT:"):])
+
+
+def test_lp_dp8_loss_curve_matches_dp1(lp_dp_parity_results):
+    r = lp_dp_parity_results
+    np.testing.assert_allclose(r["dp1"]["loss"], r["dp8"]["loss"],
+                               rtol=1e-4)
+    np.testing.assert_allclose(r["dp1_joint"]["loss"],
+                               r["dp8_joint"]["loss"], rtol=1e-4)
+
+
+def test_lp_dp8_mrr_matches_dp1(lp_dp_parity_results):
+    r = lp_dp_parity_results
+    np.testing.assert_allclose(r["dp1"]["mrr"], r["dp8"]["mrr"],
+                               rtol=1e-6)
+    np.testing.assert_allclose(r["dp1_joint"]["mrr"],
+                               r["dp8_joint"]["mrr"], rtol=1e-6)
+
+
+def test_lp_dp8_single_step_entry(lp_dp_parity_results):
+    for key in ("dp8", "dp8_joint"):
+        assert lp_dp_parity_results[key]["n_step_entries"] == 1

@@ -288,3 +288,124 @@ def test_fit_with_prefetch_converges(mag):
     loader = _loader(mag, host_features=False)
     hist = trainer.fit(loader, num_epochs=3, prefetch=2)
     assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# feed mode 3 for edge tasks and link prediction (task programs)
+# ---------------------------------------------------------------------------
+def _lp_device_setup(g, neg_method="joint", k=8, seed=0, loss="contrastive"):
+    from repro.core.sampling import DeviceNeighborSampler
+    from repro.core.spot_target import split_edges
+    from repro.trainer import (GSgnnLinkPredictionDeviceDataLoader,
+                               GSgnnLinkPredictionTrainer, GSgnnMrrEvaluator)
+    etype = ("paper", "cites", "paper")
+    extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+    model = model_meta_from_graph(g, "rgcn", 32, 2, extra_feat_dims=extra)
+    sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+    sampler = DeviceNeighborSampler(g, [4, 4], seed=seed)
+    local = (np.arange(g.num_nodes["paper"])
+             if neg_method == "local_joint" else None)
+    trainer = GSgnnLinkPredictionTrainer(
+        model, etype, loss=loss, lr=1e-2, sparse_embeds=sparse,
+        evaluator=GSgnnMrrEvaluator(),
+        feature_store=DeviceFeatureStore(g), device_sampler=sampler,
+        neg_method=neg_method, num_negatives=k, local_nodes=local)
+    data = GSgnnData(g)
+    tr_e, _, _ = split_edges(np.random.default_rng(0), g, etype)
+    loader = GSgnnLinkPredictionDeviceDataLoader(
+        data, etype, tr_e, [4, 4], 16, num_negatives=k,
+        neg_method=neg_method, shuffle=False, seed=seed, sampler=sampler)
+    return trainer, loader
+
+
+@pytest.mark.parametrize("neg_method,k",
+                         [("joint", 8), ("uniform", 4),
+                          ("in_batch", 8), ("local_joint", 8)])
+def test_lp_device_fit_converges_every_neg_method(mag, neg_method, k):
+    trainer, loader = _lp_device_setup(mag, neg_method, k)
+    hist = trainer.fit(loader, num_epochs=4)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_lp_device_scan_matches_per_batch(mag):
+    """The lax.scan epoch and the per-batch jitted step must walk the
+    same counter-based sample AND negative streams."""
+    import jax
+    t1, l1 = _lp_device_setup(mag, "joint", 8, seed=0)
+    per_batch = [t1.fit_batch(b)[0] for b in l1]
+    t2, l2 = _lp_device_setup(mag, "joint", 8, seed=0)
+    hist = t2.fit(l2, num_epochs=1)
+    np.testing.assert_allclose(hist[0]["loss"], np.mean(per_batch),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(t1.params),
+                    jax.tree_util.tree_leaves(t2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_lp_device_batches_ship_only_endpoints(mag):
+    _, loader = _lp_device_setup(mag, "joint", 8)
+    b = next(iter(loader))
+    # src + dst int32 + bool mask; negatives never cross host->device
+    assert set(b["blocks"]) == {"src", "dst", "seed_mask"}
+    assert host_transfer_bytes(b) == 16 * 4 + 16 * 4 + 16
+
+
+def test_lp_device_one_compile_per_schema(mag):
+    trainer, loader = _lp_device_setup(mag, "in_batch", 8)
+    trainer.fit(loader, num_epochs=3)
+    assert len(trainer._steps) == 1
+    fns = next(iter(trainer._steps.values()))
+    assert fns["epoch"]._cache_size() == 1
+    assert fns["step"]._cache_size() == 0
+
+
+def test_lp_device_loader_trainer_neg_mismatch_raises(mag):
+    """A loader sized for different negatives than the trainer's would
+    silently train the wrong layout — the plan/program check fails."""
+    trainer, _ = _lp_device_setup(mag, "joint", 8)
+    _, other_loader = _lp_device_setup(mag, "uniform", 4)
+    other_loader.sampler = trainer.device_sampler  # pass the sampler check
+    with pytest.raises(ValueError, match="seed layout|sample plan"):
+        trainer.fit(other_loader, num_epochs=1)
+
+
+def _edge_device_setup(g, etype, task="edge_classification", seed=0):
+    from repro.core.sampling import DeviceNeighborSampler
+    from repro.core.spot_target import split_edges
+    from repro.trainer import GSgnnEdgeDeviceDataLoader, GSgnnEdgeTrainer
+    extra = {nt: 16 for nt in g.ntypes if not g.has_feat(nt)}
+    model = model_meta_from_graph(g, "rgcn", 32, 2, extra_feat_dims=extra)
+    sparse = {nt: SparseEmbedding(g.num_nodes[nt], 16) for nt in extra}
+    sampler = DeviceNeighborSampler(g, [4, 4], seed=seed)
+    trainer = GSgnnEdgeTrainer(
+        model, etype, num_classes=2, task=task, lr=1e-2,
+        sparse_embeds=sparse, evaluator=GSgnnAccEvaluator(),
+        feature_store=DeviceFeatureStore(g), device_sampler=sampler)
+    data = GSgnnData(g)
+    tr_e, _, _ = split_edges(np.random.default_rng(0), g, etype)
+    src, dst = g.edges[etype]
+    lab = (g.node_feats["paper"]["label"][dst]
+           % 2).astype(np.int64)
+    loader = GSgnnEdgeDeviceDataLoader(
+        data, etype, tr_e, [4, 4], 16, labels=lab, shuffle=False,
+        seed=seed, sampler=sampler)
+    return trainer, loader
+
+
+@pytest.mark.parametrize("etype", [("paper", "cites", "paper"),
+                                   ("author", "writes", "paper")])
+def test_edge_device_fit_converges(mag, etype):
+    """Edge tasks on the device step, same- and cross-ntype endpoints
+    (the cross case exercises the multi-role seed layout)."""
+    trainer, loader = _edge_device_setup(mag, etype)
+    hist = trainer.fit(loader, num_epochs=4)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_edge_device_ships_endpoints_and_labels(mag):
+    _, loader = _edge_device_setup(mag, ("paper", "cites", "paper"))
+    b = next(iter(loader))
+    assert set(b["blocks"]) == {"src", "dst", "labels", "seed_mask"}
+    dev_bytes = host_transfer_bytes(b)
+    assert dev_bytes == 16 * 4 * 3 + 16

@@ -276,3 +276,40 @@ def test_edge_loader_pads_ragged_last_batch_labels():
     assert last["seed_mask"].sum() == 50 - 32
     # padded label rows are masked out
     assert not last["seed_mask"][50 - 32:].any()
+
+
+# ---------------------------------------------------------------------------
+# device-step (feed mode 3) runs through the registry for LP / edge tasks
+# ---------------------------------------------------------------------------
+def _device_hp(d, **kw):
+    d["device_features"] = True
+    d["hyperparam"] = {**d["hyperparam"], "sample_on_device": True, **kw}
+    return d
+
+
+def test_lp_device_run_via_registry():
+    res = run_config(GSConfig.from_dict(_device_hp(_tiny_lp())))
+    assert res["task"] == "link_prediction"
+    assert np.isfinite(res["history"][-1]["loss"])
+    assert "mrr" in res["history"][-1]
+
+
+def test_lp_host_local_joint_run_via_registry():
+    """local_joint is config-reachable on the host path too (degenerate
+    single-partition node set)."""
+    d = _tiny_lp()
+    d["link_prediction"]["train_negative_sampler"] = "local_joint"
+    res = run_config(GSConfig.from_dict(d))
+    assert np.isfinite(res["history"][-1]["loss"])
+
+
+def test_edge_device_run_via_registry():
+    d = {"task": "edge_classification",
+         "gnn": {"hidden": 16, "fanout": [2, 2]},
+         "hyperparam": {"batch_size": 32, "num_epochs": 1},
+         "input": {"dataset": "mag",
+                   "dataset_conf": {"n_paper": 80, "n_author": 40}},
+         "edge_classification": {}}
+    res = run_config(GSConfig.from_dict(_device_hp(d)))
+    assert res["task"] == "edge_classification"
+    assert np.isfinite(res["history"][-1]["loss"])

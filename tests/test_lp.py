@@ -75,3 +75,20 @@ def test_mrr_bounds_and_perfect_rank(b, k, seed):
     assert abs(float(mrr(pos + 1000.0, neg)) - 1.0) < 1e-5
     assert abs(float(hits_at_k(pos + 1000.0, neg, 1)) - 1.0) < 1e-5
     assert abs(float(mrr(pos - 1000.0, neg)) - 1.0 / (k + 1)) < 1e-5
+
+
+def test_score_matrix_matches_broadcast_scores():
+    """The one-matmul all-pairs scorer (in-batch negatives) must equal
+    the broadcast form for both dot and DistMult scoring."""
+    from repro.core.lp import score_matrix
+    src = jnp.asarray(RNG.normal(size=(12, 16)), jnp.float32)
+    dst = jnp.asarray(RNG.normal(size=(9, 16)), jnp.float32)
+    rel = jnp.asarray(RNG.normal(size=(16,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(score_matrix(src, dst)),
+        np.asarray(dot_score(src[:, None, :], dst[None, :, :])),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(score_matrix(src, dst, rel)),
+        np.asarray(distmult_score(src[:, None, :], dst[None, :, :], rel)),
+        rtol=1e-4, atol=1e-4)

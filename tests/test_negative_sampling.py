@@ -71,3 +71,112 @@ def test_sampled_node_count_ordering():
     assert sampled_node_count("uniform", b, k) == b * k
     assert sampled_node_count("joint", b, k) == b
     assert sampled_node_count("in_batch", b, k) == 0
+
+
+# ---------------------------------------------------------------------------
+# edge cases + host-vs-device draw parity (feed mode 3 negatives)
+# ---------------------------------------------------------------------------
+def test_in_batch_batch_of_one_tops_up_with_joint():
+    """A batch of 1 has zero in-batch candidates: every negative must
+    come from the joint top-up, fully unmasked."""
+    rng = np.random.default_rng(0)
+    dst = np.array([7])
+    neg, mask = in_batch_negatives(rng, 100, dst, 4)
+    assert neg.shape == (1, 4) and mask.shape == (1, 4)
+    assert mask.all()
+    assert (neg >= 0).all() and (neg < 100).all()
+
+
+def test_in_batch_batch_of_one_device_tops_up():
+    import jax
+    from repro.core.negative_sampling import device_in_batch_negatives
+    key = jax.random.PRNGKey(3)
+    neg, mask = device_in_batch_negatives(key, 100, np.array([7]), 4)
+    assert neg.shape == (1, 4) and bool(np.asarray(mask).all())
+    assert (np.asarray(neg) >= 0).all() and (np.asarray(neg) < 100).all()
+
+
+def test_k_larger_than_num_dst_nodes_stays_in_range():
+    """k > |dst| just re-draws with replacement — ids stay in range on
+    every method, host and device."""
+    import jax
+    from repro.core.negative_sampling import (device_joint_negatives,
+                                              device_uniform_negatives)
+    rng = np.random.default_rng(1)
+    n_dst, k = 5, 32
+    dst = rng.integers(0, n_dst, 8)
+    for fn in (uniform_negatives, joint_negatives):
+        neg, mask = fn(rng, n_dst, dst, k)
+        assert mask.all() and (neg >= 0).all() and (neg < n_dst).all()
+    key = jax.random.PRNGKey(0)
+    for fn in (device_uniform_negatives, device_joint_negatives):
+        neg, _ = fn(key, n_dst, 8, k)
+        neg = np.asarray(neg)
+        assert (neg >= 0).all() and (neg < n_dst).all()
+
+
+def _device_host_pair(method, key, n_dst, dst, k, local):
+    import jax
+    from repro.core import negative_sampling as ns
+    dev = ns.DEVICE_SAMPLERS[method]
+    host = ns.HOST_TWINS[method]
+    if method == "local_joint":
+        d = jax.jit(lambda: dev(key, local, len(dst), k))()
+        h = host(key, local, len(dst), k)
+    elif method == "in_batch":
+        d = jax.jit(lambda: dev(key, n_dst, dst, k))()
+        h = host(key, n_dst, dst, k)
+    else:
+        d = jax.jit(lambda: dev(key, n_dst, len(dst), k))()
+        h = host(key, n_dst, len(dst), k)
+    return d, h
+
+
+def test_host_vs_device_draw_parity_every_registered_method():
+    """Every registered method's jitted device draw and its numpy host
+    twin consume the same counter-based bit stream: identical ids and
+    masks (the reproducibility contract of the in-jit LP negatives)."""
+    import jax
+    from repro.core.negative_sampling import DEVICE_SAMPLERS, SAMPLERS
+    assert set(DEVICE_SAMPLERS) == set(SAMPLERS)
+    rng = np.random.default_rng(5)
+    local = np.array([3, 11, 42, 77, 90])
+    for i, method in enumerate(sorted(DEVICE_SAMPLERS)):
+        for k, b in ((4, 8), (8, 8), (24, 8), (5, 1)):
+            key = jax.random.PRNGKey(100 + i)
+            dst = rng.integers(0, 1000, b)
+            (dn, dm), (hn, hm) = _device_host_pair(method, key, 1000,
+                                                   dst, k, local)
+            np.testing.assert_array_equal(np.asarray(dn), hn,
+                                          err_msg=f"{method} k={k} b={b}")
+            np.testing.assert_array_equal(np.asarray(dm), hm)
+
+
+def test_device_negative_seeds_match_host_extraction():
+    """The in-jit seed block must be the host loader's unique-negative
+    extraction (neg[::k] flattened for shared methods; every draw for
+    uniform) applied to the device draw."""
+    import jax
+    from repro.core.negative_sampling import (device_joint_negatives,
+                                              device_negative_seeds,
+                                              device_uniform_negatives)
+    key = jax.random.PRNGKey(9)
+    B, k, n_dst = 16, 4, 300
+    neg, _ = device_joint_negatives(key, n_dst, B, k)
+    seeds = device_negative_seeds("joint", key, n_dst, B, k)
+    np.testing.assert_array_equal(
+        np.asarray(seeds), np.asarray(neg)[::k].reshape(-1)[:max(B, k)])
+    neg_u, _ = device_uniform_negatives(key, n_dst, B, k)
+    seeds_u = device_negative_seeds("uniform", key, n_dst, B, k)
+    np.testing.assert_array_equal(np.asarray(seeds_u),
+                                  np.asarray(neg_u).reshape(-1))
+    assert device_negative_seeds("in_batch", key, n_dst, B, k).shape == (0,)
+
+
+def test_negative_seed_count_matches_host_loader_extraction():
+    from repro.core.negative_sampling import negative_seed_count
+    assert negative_seed_count("uniform", 64, 4) == 256
+    assert negative_seed_count("joint", 64, 4) == 64
+    assert negative_seed_count("local_joint", 64, 4) == 64
+    assert negative_seed_count("joint", 16, 32) == 32   # one-group case
+    assert negative_seed_count("in_batch", 64, 4) == 0

@@ -244,3 +244,27 @@ def test_device_sampler_stream_is_counter_based():
     _, g0 = _dev_sample(dev2, dev2.plan_for({"paper": 16}),
                         {"paper": seeds}, step=0)
     assert any((f0[nt] != g0[nt]).any() for nt in f0)
+
+
+def test_pair_exclusion_hit_matches_dense_compare():
+    """The searchsorted SpotTarget membership test (rank-pair codes,
+    int32-safe at any graph size) must agree exactly with the dense
+    broadcast compare, including -1 pads and duplicate pairs."""
+    import jax.numpy as jnp
+    from repro.core.sampling import _pair_exclusion_hit
+    rng = np.random.default_rng(7)
+    for n, f, e, v in ((40, 3, 9, 25), (200, 5, 64, 50), (64, 4, 1, 10)):
+        nbr = jnp.asarray(rng.integers(0, v, (n, f)), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, v, n), jnp.int32)
+        ex_s = rng.integers(0, v, e).astype(np.int32)
+        ex_d = rng.integers(0, v, e).astype(np.int32)
+        if e > 4:
+            ex_s[-2:] = -1
+            ex_d[-2:] = -1                    # padding convention
+            ex_s[0], ex_d[0] = ex_s[1], ex_d[1]   # duplicate pair
+        dense = ((np.asarray(nbr)[:, :, None] == ex_s[None, None, :])
+                 & (np.asarray(dst)[:, None, None] == ex_d[None, None, :])
+                 ).any(-1)
+        fast = np.asarray(_pair_exclusion_hit(
+            nbr, dst, jnp.asarray(ex_s), jnp.asarray(ex_d)))
+        np.testing.assert_array_equal(fast, dense)
