@@ -23,6 +23,8 @@ SUITES = {
     "fig5": ("bench_lmgnn", "Figure 5: LM+GNN strategies"),
     "featureless": ("bench_featureless",
                     "§3.3.2 ablation: featureless-node options"),
+    "serve": ("bench_serving",
+              "§serving: batched inference cold/warm/mixed latency"),
 }
 
 

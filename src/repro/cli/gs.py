@@ -13,6 +13,12 @@ graph construction, training, and inference for every registered task.
   PYTHONPATH=src python -m repro.cli.gs --inference \
       --restore-model-path out/nc_mag
 
+  # batched inference serving from the same artifact (docs/serving.md):
+  # continuous batching + device-resident embedding cache; prints
+  # p50/p99 latency, req/s, and cache hit counters
+  PYTHONPATH=src python -m repro.cli.gs --serve \
+      --restore-model-path out/nc_mag --serve.requests 256
+
 Tasks are registry entries (repro.runner.TASK_REGISTRY):
 node_classification, node_regression, edge_classification,
 edge_regression, link_prediction, multi_task.
@@ -38,10 +44,16 @@ def main(argv=None):
                     help="YAML/JSON GSConfig file")
     ap.add_argument("--inference", action="store_true",
                     help="run inference instead of training")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve a batched inference request stream from "
+                         "the restored model (serve.* config keys set the "
+                         "traffic shape; docs/serving.md)")
     ap.add_argument("--restore-model-path", default=None,
                     help="checkpoint dir; without --cf, the config "
                          "persisted next to the model is used")
     args, overrides = ap.parse_known_args(argv)
+    if args.inference and args.serve:
+        ap.error("--inference and --serve are mutually exclusive")
 
     if args.cf:
         raw = load_config_dict(args.cf)
@@ -57,7 +69,7 @@ def main(argv=None):
         raw = apply_overrides(raw, overrides)
 
     cfg = GSConfig.from_dict(raw)
-    result = run_config(cfg, inference=args.inference)
+    result = run_config(cfg, inference=args.inference, serve=args.serve)
     print(json.dumps(result, indent=2, default=str))
     return result
 

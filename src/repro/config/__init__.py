@@ -2,12 +2,12 @@ from repro.config.gsconfig import (ConfigError, DATASET_TARGETS, GnnConfig,
                                    GSConfig, HyperparamConfig, InputConfig,
                                    LinkPredictionConfig, MultiTaskConfig,
                                    NodeClassificationConfig, OutputConfig,
-                                   TaskSpecConfig, apply_overrides,
-                                   load_config_dict)
+                                   ServeConfig, TaskSpecConfig,
+                                   apply_overrides, load_config_dict)
 
 __all__ = [
     "ConfigError", "DATASET_TARGETS", "GSConfig", "GnnConfig",
     "HyperparamConfig", "InputConfig", "LinkPredictionConfig",
     "MultiTaskConfig", "NodeClassificationConfig", "OutputConfig",
-    "TaskSpecConfig", "apply_overrides", "load_config_dict",
+    "ServeConfig", "TaskSpecConfig", "apply_overrides", "load_config_dict",
 ]

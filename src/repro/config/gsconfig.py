@@ -293,6 +293,26 @@ class LinkPredictionConfig:
 
 
 @dataclasses.dataclass
+class ServeConfig:
+    """Batched inference serving (``gs --serve``, docs/serving.md):
+    continuous batching into the device program's static batch shape
+    plus a device-resident, staleness-bounded embedding cache."""
+    # serving batch size (the static program shape); defaults to
+    # hyperparam.batch_size
+    batch_size: Optional[int] = _field("int", None, optional=True)
+    # device-resident LRU cache slots; 0 disables the cache (every
+    # batch recomputes — the cold-path / parity-reference behavior)
+    cache_slots: int = _field("int", 4096)
+    # a cached row older than this many program steps is recomputed
+    max_staleness_steps: int = _field("int", 64)
+    # synthetic request stream of the CLI path (see serve.request_stream)
+    requests: int = _field("int", 64)
+    request_size: int = _field("int", 4)
+    hot_fraction: float = _field("float", 0.8)
+    hot_set: int = _field("int", 64)
+
+
+@dataclasses.dataclass
 class TaskSpecConfig:
     """One task of a multi-task run: a kind, a loss weight, and the
     matching per-task section."""
@@ -341,6 +361,8 @@ class GSConfig:
         _field("section", None, optional=True, cls=LinkPredictionConfig)
     multi_task: Optional[MultiTaskConfig] = \
         _field("section", None, optional=True, cls=MultiTaskConfig)
+    serve: Optional[ServeConfig] = \
+        _field("section", None, optional=True, cls=ServeConfig)
     # keep feature tables device-resident; batches ship only index blocks
     device_features: bool = _field("bool", False)
 
@@ -418,6 +440,20 @@ class GSConfig:
                            f"be divisible by data_parallel "
                            f"({h.data_parallel}) — every shard carries an "
                            f"equal slice of the global batch")
+        if self.serve is not None:
+            sv = self.serve
+            if sv.batch_size is not None and sv.batch_size <= 0:
+                raise _err("serve.batch_size", "must be positive")
+            if sv.cache_slots < 0:
+                raise _err("serve.cache_slots",
+                           "must be >= 0 (0 disables the cache)")
+            if sv.max_staleness_steps < 0:
+                raise _err("serve.max_staleness_steps", "must be >= 0")
+            for key in ("requests", "request_size", "hot_set"):
+                if getattr(sv, key) <= 0:
+                    raise _err(f"serve.{key}", "must be positive")
+            if not 0.0 <= sv.hot_fraction <= 1.0:
+                raise _err("serve.hot_fraction", "must be in [0, 1]")
         if (inp.dataset is None) == (inp.gconstruct_conf is None):
             raise _err("input",
                        "exactly one of 'input.dataset' (built-in synthetic "

@@ -1,0 +1,76 @@
+"""LM serving driver: batched prefill + decode loop against a KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve_lm --arch phi4-mini-3.8b \
+      --smoke --batch-size 4 --prompt-len 32 --gen-len 16
+
+(GNN inference serving is a different subsystem: ``gs --serve`` /
+``repro.serve`` — docs/serving.md.)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.steps import make_decode_fn
+from repro.models.model import decode_step, forward_train, init_cache
+from repro.models.params import init_params, param_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} params={param_count(cfg):,}")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P, G = args.batch_size, args.prompt_len, args.gen_len
+
+    # prefill by teacher-forcing the prompt through decode steps (prompt
+    # tokens enter the same cache the generation loop extends)
+    cache = init_cache(cfg, B, P + G,
+                       enc_len=cfg.frontend_tokens if cfg.enc_dec else 0)
+    if cfg.enc_dec:  # stub encoder memory for the audio arch
+        ek = jax.random.normal(jax.random.PRNGKey(1),
+                               cache["cross"]["k"].shape, jnp.float32)
+        cache["cross"]["k"] = ek.astype(cache["cross"]["k"].dtype)
+        cache["cross"]["v"] = ek.astype(cache["cross"]["v"].dtype)
+
+    dfn = jax.jit(lambda p, c, t: decode_step(cfg, p, t, c))
+    prompt = rng.integers(0, cfg.vocab_size, (B, P))
+    t0 = time.time()
+    for t in range(P):
+        logits, cache = dfn(params, cache,
+                            jnp.asarray(prompt[:, t:t + 1], jnp.int32))
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for t in range(G):
+        out_tokens.append(np.asarray(tok[:, 0]))
+        logits, cache = dfn(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_decode = time.time() - t0
+
+    gen = np.stack(out_tokens, 1)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print(f"prompt ingest: {t_prefill / P * 1000:.1f} ms/tok; "
+          f"decode: {t_decode / G * 1000:.1f} ms/tok "
+          f"({B} sequences batched)")
+    print(f"generated tokens (first seq): {gen[0][:12]}")
+    print("SERVE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -183,6 +183,31 @@ class TaskRunner:
     def inference(self) -> dict:
         raise NotImplementedError
 
+    def serve(self) -> dict:
+        """Serve a synthetic seed-request stream against the (restored)
+        model through the batched inference service (docs/serving.md);
+        returns latency percentiles, throughput, and cache counters.
+        Every device-capable task serves: node tasks answer with
+        logits + embeddings, edge/LP tasks with embeddings."""
+        from repro.config import ServeConfig
+        from repro.serve import GSgnnInferenceService, request_stream
+        sv = self.cfg.serve if self.cfg.serve is not None else ServeConfig()
+        batch = sv.batch_size or self.hp.batch_size
+        service = GSgnnInferenceService(
+            self.trainer, batch_size=batch, cache_slots=sv.cache_slots,
+            max_staleness_steps=sv.max_staleness_steps)
+        reqs = request_stream(
+            self.graph.num_nodes[service.ntype], num_requests=sv.requests,
+            request_size=sv.request_size, hot_fraction=sv.hot_fraction,
+            hot_set=sv.hot_set, seed=self.hp.seed)
+        responses = service.serve(reqs)
+        out = {"task": self.task_name, "serve_ntype": service.ntype,
+               "batch_size": batch,
+               "row_shapes": {"emb": list(responses[0]["emb"].shape[1:]),
+                              "out": list(responses[0]["out"].shape[1:])}}
+        out.update(service.stats())
+        return out
+
     def restore(self, path: str):
         load_trainer(self.trainer, path)
 
@@ -502,9 +527,28 @@ class MultiTaskRunner(TaskRunner):
 
 
 # ---------------------------------------------------------------------------
-def run_config(cfg: GSConfig, inference: bool = False) -> dict:
+def _serve_ready(cfg: GSConfig) -> GSConfig:
+    """Serving always runs the fully-jitted device engine: re-validate
+    with sample_on_device/device_features forced on and the mesh
+    disabled (serving is single-process here), so an artifact trained on
+    the host pipeline serves unchanged — params are feed-mode
+    independent.  Tasks without a device program (multi_task) fail the
+    capability check with the exact missing feature named."""
+    raw = cfg.to_dict()
+    hp = raw.setdefault("hyperparam", {})
+    hp["sample_on_device"] = True
+    hp["data_parallel"] = 1
+    hp["shard_tables"] = False
+    raw["device_features"] = True
+    return GSConfig.from_dict(raw)
+
+
+def run_config(cfg: GSConfig, inference: bool = False,
+               serve: bool = False) -> dict:
     """The single programmatic entry point: resolve the config, build the
-    graph, dispatch through the registry, train or infer, persist."""
+    graph, dispatch through the registry, train / infer / serve, persist."""
+    if serve:
+        cfg = _serve_ready(cfg)
     cfg = cfg.resolved()
     if cfg.task not in TASK_REGISTRY:
         raise KeyError(f"task {cfg.task!r} is not registered; "
@@ -513,7 +557,9 @@ def run_config(cfg: GSConfig, inference: bool = False) -> dict:
     runner = TASK_REGISTRY[cfg.task](cfg, graph)
     if cfg.output.restore_model_path:
         runner.restore(cfg.output.restore_model_path)
-    if inference:
+    if serve:
+        result = runner.serve()
+    elif inference:
         result = runner.inference()
     else:
         result = runner.train()
@@ -523,8 +569,10 @@ def run_config(cfg: GSConfig, inference: bool = False) -> dict:
     return result
 
 
-def run_config_dict(raw: dict, inference: bool = False) -> dict:
-    return run_config(GSConfig.from_dict(raw), inference=inference)
+def run_config_dict(raw: dict, inference: bool = False,
+                    serve: bool = False) -> dict:
+    return run_config(GSConfig.from_dict(raw), inference=inference,
+                      serve=serve)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+"""Batched GNN inference serving on the device engine (docs/serving.md).
+
+Request queue -> continuous batching into the static BlockSchema ->
+one jitted inference program for cold seeds -> device-resident LRU
+embedding cache (staleness-bounded) for warm seeds.  Entry points:
+``GSgnnInferenceService`` (programmatic), ``gs --serve`` (CLI).
+"""
+from repro.serve.batcher import ContinuousBatcher, ServeRequest
+from repro.serve.cache import DeviceEmbeddingCache
+from repro.serve.service import GSgnnInferenceService, request_stream
+
+__all__ = ["ContinuousBatcher", "DeviceEmbeddingCache",
+           "GSgnnInferenceService", "ServeRequest", "request_stream"]

@@ -1,0 +1,93 @@
+"""Continuous batching of seed-node requests into one static batch shape.
+
+Serving traffic arrives as variable-size requests ("embed/classify these
+seed nodes"); the device program wants one fixed ``(batch_size,)`` seed
+vector per dispatch (the static shape is the jit cache key — padding,
+never recompiling).  The batcher bridges the two: requests queue FIFO at
+per-seed granularity, and each ``next_batch`` pulls items in arrival
+order until the batch's *compute set* — unique seeds the caller's
+classifier cannot resolve from cache — would exceed ``batch_size``.
+
+Consequences of that rule:
+
+- a request larger than the batch size splits across consecutive
+  batches and completes when its last row resolves;
+- duplicate seeds across (or within) queued requests collapse to one
+  compute slot — cross-request dedup: a hot node is sampled/gathered
+  once per batch and fanned back out to every requester;
+- cache-warm rows ride along for free (they cost one gather row, not a
+  program slot), so a warm burst drains in a single step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One in-flight request: ``rows[i]`` fills as seed ``seeds[i]``
+    resolves; done when ``remaining`` hits zero."""
+    rid: int
+    seeds: np.ndarray
+    t_submit: float
+    rows: List[Optional[tuple]] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+    t_done: Optional[float] = None
+
+    def __post_init__(self):
+        self.seeds = np.asarray(self.seeds, np.int64).reshape(-1)
+        if len(self.seeds) == 0:
+            raise ValueError("a serve request needs at least one seed id")
+        self.rows = [None] * len(self.seeds)
+        self.remaining = len(self.seeds)
+
+    def resolve(self, row_index: int, payload: tuple):
+        if self.rows[row_index] is None:
+            self.remaining -= 1
+        self.rows[row_index] = payload
+
+
+class ContinuousBatcher:
+    """FIFO request queue -> per-step work orders (see module docstring)."""
+
+    def __init__(self, batch_size: int):
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        self.batch_size = int(batch_size)
+        self._queue: deque = deque()     # (request, row_index, seed)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def add(self, req: ServeRequest):
+        for i, s in enumerate(req.seeds):
+            self._queue.append((req, i, int(s)))
+
+    def next_batch(self, is_cached: Callable[[int], bool]
+                   ) -> Tuple[List[tuple], List[int]]:
+        """Pull the next batch's items off the queue.
+
+        Returns ``(items, compute_ids)``: ``items`` are the
+        ``(request, row_index, seed)`` triples this batch serves, in
+        arrival order; ``compute_ids`` are the unique seeds the program
+        must compute (first-seen order, ``<= batch_size`` of them —
+        pad-to-batch is the caller's job).  ``is_cached(seed)`` says a
+        seed resolves from cache without a compute slot; it must be
+        stable for the duration of the call."""
+        items: List[tuple] = []
+        compute: List[int] = []
+        in_compute = set()
+        while self._queue:
+            req, row, seed = self._queue[0]
+            if seed not in in_compute and not is_cached(seed):
+                if len(compute) == self.batch_size:
+                    break                # next batch starts with this item
+                compute.append(seed)
+                in_compute.add(seed)
+            items.append((req, row, seed))
+            self._queue.popleft()
+        return items, compute

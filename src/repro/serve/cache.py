@@ -1,0 +1,148 @@
+"""Device-resident fixed-slot LRU cache for served embeddings.
+
+The cache is the serve-side half of the GiGL pattern (train-time message
+passing, serve-time lookup): a warm request skips the GNN program
+entirely and resolves via one in-jit gather from a fixed
+``(capacity, ...)`` device table.  Slot bookkeeping (id -> slot, LRU
+ticks, insert-step ages) is tiny host-side numpy; only the row payloads
+live on device.
+
+Shapes are static everywhere so serving never recompiles: inserts and
+gathers both move exactly ``batch`` rows (the serve batch size), with
+out-of-range slot ids dropping (scatter) or clipping (gather) the
+padding rows.  Staleness is measured in *program steps* — an entry
+inserted at compute-step ``s`` is fresh while ``now - s <=
+max_staleness_steps``; a stale entry is treated as a miss, recomputed by
+the full program, and re-inserted in place (staleness-bounded refresh).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _scatter(table, slots, rows):
+    # slot == capacity marks a padding row: out of range, dropped
+    return table.at[slots].set(rows.astype(table.dtype), mode="drop")
+
+
+@jax.jit
+def _take(table, slots):
+    return jnp.take(table, slots, axis=0, mode="clip")
+
+
+class DeviceEmbeddingCache:
+    """Fixed-slot LRU over device row tables, keyed by global node id.
+
+    ``insert`` receives the compute batch's device arrays directly (no
+    host round-trip of the payload); ``gather`` returns device rows for
+    a padded slot vector.  One table per served array (embeddings +
+    logits), allocated lazily from the first insert's shapes/dtypes.
+    """
+
+    def __init__(self, capacity: int, max_staleness_steps: int = 64):
+        if capacity <= 0:
+            raise ValueError("cache capacity must be positive "
+                             "(use cache_slots: 0 to disable the cache)")
+        self.capacity = int(capacity)
+        self.max_staleness = int(max_staleness_steps)
+        self._slot_of = {}                                  # id -> slot
+        self._ids = np.full(self.capacity, -1, np.int64)    # slot -> id
+        self._step = np.zeros(self.capacity, np.int64)      # insert step
+        self._used = np.zeros(self.capacity, np.int64)      # LRU tick
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._tick = 0
+        self._tables: Optional[Tuple] = None
+        self.hits = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._slot_of)
+
+    def __contains__(self, nid) -> bool:
+        return int(nid) in self._slot_of
+
+    # ------------------------------------------------------------------
+    def fresh(self, nid, now_step: int) -> bool:
+        """Pure staleness check (no LRU touch, no counters) — the
+        batcher's classifier; must agree with ``lookup`` at the same
+        ``now_step``."""
+        s = self._slot_of.get(int(nid))
+        return s is not None and now_step - self._step[s] <= \
+            self.max_staleness
+
+    def lookup(self, ids, now_step: int):
+        """Resolve ids -> slots; a miss or stale entry yields slot -1
+        (stale also sets the second returned mask).  Hits bump the LRU
+        tick and the hit counter."""
+        ids = np.asarray(ids, np.int64)
+        slots = np.full(len(ids), -1, np.int64)
+        stale = np.zeros(len(ids), bool)
+        for i, nid in enumerate(ids):
+            s = self._slot_of.get(int(nid))
+            if s is None:
+                continue
+            if now_step - self._step[s] > self.max_staleness:
+                stale[i] = True
+                continue
+            slots[i] = s
+            self._tick += 1
+            self._used[s] = self._tick
+            self.hits += 1
+        return slots, stale
+
+    # ------------------------------------------------------------------
+    def _alloc(self) -> int:
+        if self._free:
+            return self._free.pop()
+        s = int(np.argmin(self._used))       # least recently used slot
+        del self._slot_of[int(self._ids[s])]
+        self.evictions += 1
+        return s
+
+    def insert(self, ids, rows: Tuple, now_step: int):
+        """Cache ``rows[j][:len(ids)]`` under ``ids`` (an already-present
+        id refreshes in place; new ids evict LRU under pressure).
+
+        ``rows`` is a tuple of device arrays of one static shape
+        ``(batch, ...)`` each — the compute batch's padded outputs; rows
+        past ``len(ids)`` are padding and are dropped by the scatter.
+        At most ``capacity`` ids are kept (the rest are ignored, so one
+        oversized batch cannot evict its own rows)."""
+        ids = np.asarray(ids, np.int64)[:self.capacity]
+        batch = int(rows[0].shape[0])
+        slots = np.full(batch, self.capacity, np.int64)
+        for i, nid in enumerate(ids):
+            nid = int(nid)
+            s = self._slot_of.get(nid)
+            if s is None:
+                s = self._alloc()
+                self._slot_of[nid] = s
+                self._ids[s] = nid
+            slots[i] = s
+            self._step[s] = now_step
+            self._tick += 1
+            self._used[s] = self._tick
+        if self._tables is None:
+            self._tables = tuple(
+                jnp.zeros((self.capacity,) + tuple(r.shape[1:]), r.dtype)
+                for r in rows)
+        sl = jnp.asarray(slots, jnp.int32)
+        self._tables = tuple(_scatter(t, sl, r)
+                             for t, r in zip(self._tables, rows))
+
+    def gather(self, slots):
+        """Device rows for a padded ``(batch,)`` slot vector (invalid /
+        padding slots clip to row 0 — callers mask by position)."""
+        sl = jnp.asarray(np.clip(np.asarray(slots), 0, self.capacity - 1),
+                         jnp.int32)
+        return tuple(_take(t, sl) for t in self._tables)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "entries": len(self),
+                "hits": self.hits, "evictions": self.evictions}

@@ -1,0 +1,223 @@
+"""Batched GNN inference serving on the device engine.
+
+``GSgnnInferenceService`` glues the three serving pieces together
+(docs/serving.md):
+
+- a :class:`~repro.serve.batcher.ContinuousBatcher` packs queued
+  seed-node requests into the device program's one static batch shape
+  (padding partial batches — the jitted program never recompiles),
+  splitting oversized requests and deduplicating seeds across requests;
+- the trainer's :class:`~repro.trainer.trainers.DeviceInferProgram`
+  computes embeddings/logits for the batch's unique cold seeds — one
+  fully-jitted sample -> gather -> GNN -> head dispatch;
+- a :class:`~repro.serve.cache.DeviceEmbeddingCache` keeps computed
+  rows device-resident, so warm seeds resolve via one in-jit gather and
+  skip message passing entirely, with staleness-bounded refresh: an
+  entry older than ``max_staleness_steps`` program steps is recomputed.
+
+Determinism contract: the program's per-seed results depend on the
+padded seed vector and the step counter (the sampler's draws are
+positional), so a cold-cache batch is bit-identical to
+``trainer.infer_device`` with the same unique-seed pack and step, and a
+warm hit returns exactly the bits computed at insert time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.sampling import pad_seeds
+from repro.serve.batcher import ContinuousBatcher, ServeRequest
+from repro.serve.cache import DeviceEmbeddingCache
+
+
+def request_stream(num_nodes: int, num_requests: int = 64,
+                   request_size: int = 4, hot_fraction: float = 0.8,
+                   hot_set: int = 64, seed: int = 0) -> List[np.ndarray]:
+    """Synthetic serving traffic: each request draws ``request_size``
+    seed ids, from a small hot set with probability ``hot_fraction``
+    (the skewed production shape cross-request dedup and the cache are
+    built for), else uniformly from all nodes."""
+    rng = np.random.default_rng(seed)
+    hot = rng.choice(num_nodes, size=min(int(hot_set), num_nodes),
+                     replace=False)
+    out = []
+    for _ in range(int(num_requests)):
+        if rng.random() < hot_fraction:
+            out.append(rng.choice(hot, size=request_size,
+                                  replace=request_size > len(hot)))
+        else:
+            out.append(rng.integers(0, num_nodes, request_size))
+    return out
+
+
+class GSgnnInferenceService:
+    """Continuous-batching inference service over one trained model.
+
+    ``submit`` enqueues a request and returns its id; ``step`` processes
+    one batch (False when idle); ``result`` returns a completed
+    request's rows.  ``serve`` is the batch-offline convenience: submit
+    a whole stream, drain, return every response.
+
+    ``cache_slots: 0`` disables the cache (every batch computes —
+    cold-path behavior, and the parity reference).  ``program`` injects
+    a program double for harness tests; by default the trainer's
+    ``device_infer_program(batch_size)`` is used (shared across
+    services on one trainer, so the schema compiles once).
+    """
+
+    def __init__(self, trainer=None, batch_size: Optional[int] = None,
+                 cache_slots: int = 4096, max_staleness_steps: int = 64,
+                 clock=time.perf_counter, program=None):
+        if program is None:
+            if trainer is None or batch_size is None:
+                raise ValueError("pass trainer= and batch_size= "
+                                 "(or an explicit program=)")
+            program = trainer.device_infer_program(batch_size)
+        self.program = program
+        self.ntype = program.ntype
+        self.batch_size = int(program.batch_size)
+        self.cache = DeviceEmbeddingCache(cache_slots, max_staleness_steps) \
+            if cache_slots > 0 else None
+        self.batcher = ContinuousBatcher(self.batch_size)
+        self._clock = clock
+        self._step_no = 0            # program step counter (RNG fold-in)
+        self._next_rid = 0
+        self._requests: Dict[int, ServeRequest] = {}
+        self.counters = {k: 0 for k in (
+            "requests", "rows_served", "compute_batches", "computed_rows",
+            "padding_rows", "warm_rows", "dedup_rows", "cold_misses",
+            "stale_refreshes")}
+
+    # ------------------------------------------------------------------
+    def submit(self, seeds) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = ServeRequest(rid=rid, seeds=seeds, t_submit=self._clock())
+        self._requests[rid] = req
+        self.batcher.add(req)
+        self.counters["requests"] += 1
+        return rid
+
+    def step(self) -> bool:
+        """Serve one batch off the queue; False when nothing is queued."""
+        if not len(self.batcher):
+            return False
+        now = self._step_no
+        cache = self.cache
+        is_cached = (lambda s: cache.fresh(s, now)) if cache is not None \
+            else (lambda s: False)
+        items, compute_ids = self.batcher.next_batch(is_cached)
+
+        pos: Dict[int, int] = {}
+        emb_c = out_c = None
+        if compute_ids:
+            if cache is not None:
+                for s in compute_ids:
+                    key = "stale_refreshes" if s in cache else "cold_misses"
+                    self.counters[key] += 1
+            padded, _ = pad_seeds(np.asarray(compute_ids, np.int64),
+                                  self.batch_size)
+            emb_d, out_d = self.program(padded, now)
+            self._step_no += 1
+            self.counters["compute_batches"] += 1
+            self.counters["computed_rows"] += len(compute_ids)
+            self.counters["padding_rows"] += \
+                self.batch_size - len(compute_ids)
+            emb_c, out_c = np.asarray(emb_d), np.asarray(out_d)
+            pos = {s: i for i, s in enumerate(compute_ids)}
+
+        # Gather warm rows BEFORE inserting the compute batch: under
+        # cache pressure the insert may evict entries the batcher
+        # classified warm for this very step.
+        warm = self._gather_warm(items, pos, now)
+        if compute_ids and cache is not None:
+            cache.insert(compute_ids, (emb_d, out_d), now)
+        # row accounting (partition of the batch's served rows):
+        #   computed_rows — unique seeds the program computed,
+        #   dedup_rows   — extra rows that shared a compute slot,
+        #   warm_rows    — rows resolved from the cache.
+        n_compute_side = sum(1 for _, _, s in items if s in pos)
+        self.counters["warm_rows"] += len(items) - n_compute_side
+        self.counters["dedup_rows"] += n_compute_side - len(pos)
+
+        for req, row, s in items:
+            if s in pos:
+                req.resolve(row, (emb_c[pos[s]], out_c[pos[s]]))
+            else:
+                req.resolve(row, warm[s])
+            if req.remaining == 0 and req.t_done is None:
+                req.t_done = self._clock()
+        self.counters["rows_served"] += len(items)
+        return True
+
+    def _gather_warm(self, items, pos, now) -> Dict[int, tuple]:
+        """Host rows for the batch's cache-resolved seeds: unique warm
+        ids -> slots -> chunked fixed-shape device gathers."""
+        warm_ids, seen = [], set()
+        for _, _, s in items:
+            if s not in pos and s not in seen:
+                seen.add(s)
+                warm_ids.append(s)
+        out: Dict[int, tuple] = {}
+        if not warm_ids:
+            return out
+        slots, _ = self.cache.lookup(np.asarray(warm_ids), now)
+        if (slots < 0).any():
+            raise RuntimeError(
+                "cache entry vanished between batching and resolution — "
+                "the batcher and cache must share one step clock")
+        B = self.batch_size
+        for start in range(0, len(warm_ids), B):
+            chunk = slots[start:start + B]
+            sl = np.zeros(B, np.int64)
+            sl[:len(chunk)] = chunk
+            rows = tuple(np.asarray(r) for r in self.cache.gather(sl))
+            for j, s in enumerate(warm_ids[start:start + len(chunk)]):
+                out[s] = tuple(r[j] for r in rows)
+        return out
+
+    def drain(self):
+        while self.step():
+            pass
+
+    # ------------------------------------------------------------------
+    def result(self, rid: int) -> Optional[dict]:
+        """The completed response for ``rid``: row ``i`` answers seed
+        ``seeds[i]`` (duplicates included — padding and dedup never leak
+        into the row count).  None while still in flight."""
+        req = self._requests.get(rid)
+        if req is None or req.remaining > 0:
+            return None
+        return {"rid": rid, "seeds": req.seeds.copy(),
+                "emb": np.stack([p[0] for p in req.rows]),
+                "out": np.stack([p[1] for p in req.rows]),
+                "latency_s": req.t_done - req.t_submit}
+
+    def serve(self, seed_lists) -> List[dict]:
+        """Submit a whole stream, drain it, return responses in order."""
+        rids = [self.submit(s) for s in seed_lists]
+        self.drain()
+        return [self.result(r) for r in rids]
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        done = [r for r in self._requests.values() if r.t_done is not None]
+        out = dict(self.counters)
+        out["requests_served"] = len(done)
+        rows = max(self.counters["rows_served"], 1)
+        out["hit_rate"] = self.counters["warm_rows"] / rows
+        if done:
+            lat = np.asarray([r.t_done - r.t_submit for r in done])
+            out["p50_ms"] = float(np.percentile(lat, 50) * 1e3)
+            out["p99_ms"] = float(np.percentile(lat, 99) * 1e3)
+            span = max(r.t_done for r in done) - \
+                min(r.t_submit for r in done)
+            out["req_per_s"] = float(len(done) / max(span, 1e-9))
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        if hasattr(self.program, "compiles"):
+            out["program_compiles"] = self.program.compiles()
+        return out

@@ -92,6 +92,23 @@ def program_for(trainer, batch_size: int) -> "TaskProgram":
     return TASK_PROGRAMS[trainer.task](trainer, batch_size)
 
 
+def serve_entry(trainer):
+    """The task's serving surface: ``(ntype, head)`` for the
+    inference-only device program (``repro.serve``).
+
+    ``ntype`` is the node type a serving request addresses (seed ids of
+    one request are ids of this type); ``head`` maps the (B, hidden)
+    seed embeddings to the served output — task logits for node tasks,
+    ``None`` for edge/LP tasks, which serve the embeddings themselves
+    (the GiGL pattern: train-time message passing, serve-time embedding
+    lookup — edge scores are dots of served embeddings).
+    """
+    missing = device_capability(trainer.task)
+    if missing:
+        raise ValueError(f"serve: {missing}")
+    return TASK_PROGRAMS[trainer.task].serve_entry(trainer)
+
+
 # ---------------------------------------------------------------------------
 # seed-layout helpers (shared with the device loaders)
 # ---------------------------------------------------------------------------
@@ -204,6 +221,11 @@ class TaskProgram:
         """Loss/score head on the GNN seed embeddings -> (loss, out)."""
         raise NotImplementedError
 
+    @classmethod
+    def serve_entry(cls, trainer):
+        """(serve ntype, head-or-None) — see module-level ``serve_entry``."""
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 @register_program("node_classification", "node_regression")
@@ -222,6 +244,16 @@ class NodeTaskProgram(TaskProgram):
 
     def loss(self, params, emb, aux_in, dp=None):
         return self.trainer._task_loss(params, emb, aux_in)
+
+    @classmethod
+    def serve_entry(cls, trainer):
+        from repro.gnn.decoders import decoder_apply
+        nt = trainer.target_ntype
+
+        def head(params, emb):
+            return decoder_apply(params["dec"], trainer.task, {nt: emb},
+                                 target_ntype=nt)
+        return nt, head
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +276,12 @@ class EdgeTaskProgram(TaskProgram):
     def loss(self, params, emb, aux_in, dp=None):
         return self.trainer._task_loss(params, emb, aux_in,
                                        roles=self.roles())
+
+    @classmethod
+    def serve_entry(cls, trainer):
+        # edge tasks serve dst-endpoint embeddings; the edge decoder
+        # runs at lookup time on any (src, dst) embedding pair
+        return trainer.target_etype[2], None
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +381,12 @@ class LinkPredictionProgram(TaskProgram):
         aux.setdefault("neg_mask", jnp.ones((1, 1), bool))
         return tr._task_loss(params, emb, aux, roles=self.roles(),
                              neg_shape=self.neg_shape, k=self.k)
+
+    @classmethod
+    def serve_entry(cls, trainer):
+        # LP serves dst-ntype embeddings (edge scores are dots of two
+        # served rows — DistMult relation weights apply at lookup time)
+        return trainer.target_etype[2], None
 
     def _inbatch_scores_dp(self, params, emb, dp):
         """Sharded in-batch scores: local positives vs. the all-gathered

@@ -523,6 +523,36 @@ class _TrainerBase:
             }
         return self._steps[key]
 
+    # ------------------------------------------------------------------
+    # inference-only device program (serving / offline reference): the
+    # same sample -> gather -> GNN chain as the device step, but ending
+    # at the task's serve head — no loss, no optimizer, params untouched
+    # ------------------------------------------------------------------
+    def device_infer_program(self, batch_size: int) -> "DeviceInferProgram":
+        key = ("infer", int(batch_size))
+        if key not in self._steps:
+            self._steps[key] = DeviceInferProgram(self, batch_size)
+        return self._steps[key]
+
+    def infer_device(self, seeds, batch_size: Optional[int] = None,
+                     step: int = 0):
+        """Offline reference inference on the device engine: pad ``seeds``
+        to ``batch_size`` (default: their own length) and run the
+        inference-only program once at ``step``.  Returns host arrays
+        ``{"emb": (n, hidden), "out": (n, ...)}``.
+
+        This is the serving parity anchor: a cold-cache served batch
+        whose padded seed vector and step counter match is bit-identical
+        (the sampler's draws are positional — per-seed results depend on
+        the whole padded vector, not just the seed's id)."""
+        ids = np.asarray(seeds, np.int64).reshape(-1)
+        from repro.core.sampling import pad_seeds
+        padded, _ = pad_seeds(ids, int(batch_size or len(ids)))
+        prog = self.device_infer_program(len(padded))
+        emb, out = prog(padded, step)
+        n = len(ids)
+        return {"emb": np.asarray(emb)[:n], "out": np.asarray(out)[:n]}
+
     def _sparse_pack(self):
         return {nt: (emb.table, emb.gsum)
                 for nt, emb in self.sparse_embeds.items()}
@@ -622,6 +652,67 @@ class _TrainerBase:
         for batch in dataloader:
             self.eval_batch(batch)
         return self.evaluator.value()
+
+
+# ---------------------------------------------------------------------------
+class DeviceInferProgram:
+    """One jitted inference-only device program: sample -> gather -> GNN
+    -> task serve head over a fixed ``(batch_size,)``-padded seed vector
+    of the task's serving ntype (``task_programs.serve_entry``).
+
+    The static batch size is the jit cache key, so one compile covers
+    every batch the serving batcher pads to it (``compiles()`` exposes
+    the cache size for the one-compile-per-schema guard).  ``__call__``
+    reads the trainer's *current* params/tables, so a restore after
+    construction is picked up.  Serving runs single-device: build the
+    trainer without a mesh (``run_config(serve=True)`` forces
+    ``data_parallel: 1``)."""
+
+    def __init__(self, trainer, batch_size: int):
+        from repro.gnn.schema import schema_of_plan
+        from repro.trainer.task_programs import serve_entry
+        trainer._check_device_sampler(None)
+        self.trainer = trainer
+        self.ntype, head = serve_entry(trainer)
+        self.batch_size = int(batch_size)
+        sampler = trainer.device_sampler
+        self.plan = sampler.plan_for({self.ntype: self.batch_size})
+        self.schema = schema_of_plan(self.plan)
+        store_nts, sparse_nts = trainer._store_and_sparse_ntypes(self.plan)
+        model = trainer.model
+        nt, plan, schema = self.ntype, self.plan, self.schema
+
+        def infer(params, sparse_state, tables, csr, seeds, step):
+            masks, dts, frontier = sampler.sample(csr, plan, {nt: seeds},
+                                                  step)
+            arr = {"masks": masks, "delta_t": dts,
+                   "feats": {**{m: tables[m][frontier[m]]
+                                for m in store_nts},
+                             **{m: sparse_state[m][0][frontier[m]]
+                                for m in sparse_nts}}}
+            emb = gnn_apply_blocks(params["gnn"], model, schema, arr)[nt]
+            return emb, (emb if head is None else head(params, emb))
+
+        self._jit = jax.jit(infer)
+
+    def __call__(self, seeds, step: int = 0):
+        """One padded batch -> device ``(emb, out)`` of shape
+        ``(batch_size, ...)`` (rows beyond the real seeds are padding)."""
+        seeds = jnp.asarray(np.asarray(seeds), jnp.int32)
+        if seeds.shape != (self.batch_size,):
+            raise ValueError(
+                f"expected a padded ({self.batch_size},) seed vector, got "
+                f"shape {tuple(seeds.shape)} — pad with "
+                f"repro.core.sampling.pad_seeds")
+        tr = self.trainer
+        tables = (tr.feature_store.tables
+                  if tr.feature_store is not None else {})
+        return self._jit(tr.params, tr._sparse_pack(), tables,
+                         tr.device_sampler.tables, seeds,
+                         jnp.asarray(step, jnp.int32))
+
+    def compiles(self) -> int:
+        return self._jit._cache_size()
 
 
 # ---------------------------------------------------------------------------

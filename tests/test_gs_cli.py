@@ -126,6 +126,38 @@ def test_nc_train_then_artifact_only_inference(tmp_path):
     assert emb.shape == (80, 16)
 
 
+def test_nc_train_then_artifact_only_serve(tmp_path):
+    """`gs --serve --restore-model-path`: batched inference serving from
+    the artifact alone — and _serve_ready flips a host-trained artifact
+    onto the device engine automatically."""
+    from repro.cli.gs import main
+    conf = tmp_path / "nc.yaml"
+    conf.write_text(json.dumps(_tiny_nc(tmp_path)))   # host-path training
+    main(["--cf", str(conf)])
+    r = main(["--serve", "--restore-model-path", str(tmp_path / "model"),
+              "--serve.requests", "10", "--serve.request_size", "3"])
+    assert r["task"] == "node_classification"
+    assert r["serve_ntype"] == "paper"
+    assert r["requests"] == 10 and r["requests_served"] == 10
+    assert r["rows_served"] == 30
+    assert r["p50_ms"] > 0 and r["p99_ms"] >= r["p50_ms"]
+    assert r["program_compiles"] == 1
+    assert r["row_shapes"]["emb"] == [16]
+
+
+def test_serve_and_inference_flags_are_exclusive(tmp_path):
+    from repro.cli.gs import main
+    conf = tmp_path / "nc.yaml"
+    conf.write_text(json.dumps(_tiny_nc()))
+    with pytest.raises(SystemExit):
+        main(["--cf", str(conf), "--inference", "--serve"])
+
+
+def test_serve_rejects_tasks_without_device_program():
+    with pytest.raises(Exception, match="multi_task"):
+        run_config(GSConfig.from_dict(_tiny_mt()), serve=True)
+
+
 @pytest.mark.slow
 def test_lp_train_then_artifact_only_inference(tmp_path):
     r = run_config(GSConfig.from_dict(_tiny_lp(tmp_path)))

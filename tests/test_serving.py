@@ -1,0 +1,286 @@
+"""Batched GNN inference serving (repro.serve): bit-for-bit parity with
+offline device inference, continuous-batcher packing invariants
+(property-tested), and the device-resident embedding cache's LRU /
+staleness / dedup semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import GSConfig
+from repro.runner import TASK_REGISTRY, build_graph
+from repro.serve import (ContinuousBatcher, DeviceEmbeddingCache,
+                         GSgnnInferenceService, ServeRequest)
+
+B = 16  # serve batch size shared by the real-trainer tests
+
+
+@pytest.fixture(scope="module")
+def nc_trainer():
+    raw = {"task": "node_classification",
+           "gnn": {"hidden": 16, "fanout": [2, 2]},
+           "hyperparam": {"batch_size": B, "num_epochs": 1,
+                          "sample_on_device": True},
+           "input": {"dataset": "mag",
+                     "dataset_conf": {"n_paper": 80, "n_author": 40}},
+           "device_features": True,
+           "node_classification": {}}
+    cfg = GSConfig.from_dict(raw).resolved()
+    return TASK_REGISTRY[cfg.task](cfg, build_graph(cfg)).trainer
+
+
+# ---------------------------------------------------------------------------
+# parity: served rows == offline device inference, bit for bit
+# ---------------------------------------------------------------------------
+def test_cold_cache_parity_bit_identical(nc_trainer):
+    """A cold-cache batch is exactly ``trainer.infer_device`` with the
+    same unique-seed pack and step (the sampler's draws are positional,
+    so this is the strongest possible check — no tolerance)."""
+    seeds = np.array([3, 7, 11, 2, 40])
+    ref = nc_trainer.infer_device(seeds, batch_size=B, step=0)
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=0)
+    resp = svc.serve([seeds])[0]
+    np.testing.assert_array_equal(resp["emb"], ref["emb"])
+    np.testing.assert_array_equal(resp["out"], ref["out"])
+
+
+def test_cold_multi_request_batch_parity(nc_trainer):
+    """Several requests packed into one batch: each row equals the
+    offline pass over the batch's first-seen unique-seed pack."""
+    reqs = [np.array([5, 9]), np.array([9, 1, 5]), np.array([22])]
+    pack = np.array([5, 9, 1, 22])        # unique seeds, arrival order
+    ref = nc_trainer.infer_device(pack, batch_size=B, step=0)
+    at = {int(s): i for i, s in enumerate(pack)}
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=0)
+    for req, resp in zip(reqs, svc.serve(reqs)):
+        for i, s in enumerate(req):
+            np.testing.assert_array_equal(resp["emb"][i],
+                                          ref["emb"][at[int(s)]])
+            np.testing.assert_array_equal(resp["out"][i],
+                                          ref["out"][at[int(s)]])
+    assert svc.stats()["compute_batches"] == 1
+    assert svc.stats()["computed_rows"] == len(pack)
+
+
+def test_warm_hit_returns_insert_time_bits(nc_trainer):
+    """Within the staleness bound a warm request returns exactly the
+    bits computed at insert time, without running the program again."""
+    seeds = np.array([4, 17, 30])
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=32,
+                                max_staleness_steps=64)
+    cold = svc.serve([seeds])[0]
+    warm = svc.serve([seeds])[0]
+    np.testing.assert_array_equal(warm["emb"], cold["emb"])
+    np.testing.assert_array_equal(warm["out"], cold["out"])
+    s = svc.stats()
+    assert s["compute_batches"] == 1          # second pass never computed
+    assert s["cold_misses"] == 3 and s["warm_rows"] == 3
+    assert s["cache"]["hits"] >= 3
+
+
+def test_staleness_refresh_recomputes(nc_trainer):
+    """``max_staleness_steps: 0``: an entry is stale as soon as the step
+    counter moves, and re-serving it recomputes at the current step —
+    equal to the offline pass pinned to that step."""
+    a = np.array([1, 2, 3, 4, 5])
+    b = np.array([50, 51, 52, 53, 54])
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=32,
+                                max_staleness_steps=0)
+    svc.serve([a])                            # computes at step 0
+    svc.serve([b])                            # computes at step 1 -> a stale
+    again = svc.serve([a])[0]                 # refresh: recompute at step 2
+    ref = nc_trainer.infer_device(a, batch_size=B, step=2)
+    np.testing.assert_array_equal(again["emb"], ref["emb"])
+    np.testing.assert_array_equal(again["out"], ref["out"])
+    s = svc.stats()
+    assert s["stale_refreshes"] == len(a)
+    assert s["compute_batches"] == 3
+
+
+def test_dedup_fans_one_compute_row_to_every_requester(nc_trainer):
+    """Duplicate seeds within and across requests collapse to one
+    compute slot; every requester gets that row's exact bits."""
+    reqs = [np.array([4, 4, 9, 4]), np.array([9, 2])]
+    pack = np.array([4, 9, 2])
+    ref = nc_trainer.infer_device(pack, batch_size=B, step=0)
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=0)
+    r0, r1 = svc.serve(reqs)
+    np.testing.assert_array_equal(r0["emb"][0], ref["emb"][0])
+    np.testing.assert_array_equal(r0["emb"][1], r0["emb"][0])
+    np.testing.assert_array_equal(r0["emb"][3], r0["emb"][0])
+    np.testing.assert_array_equal(r1["emb"][0], ref["emb"][1])
+    np.testing.assert_array_equal(r1["out"][1], ref["out"][2])
+    s = svc.stats()
+    assert s["computed_rows"] == 3
+    assert s["dedup_rows"] == 3
+    assert s["rows_served"] == 6
+
+
+def test_one_compile_across_request_shapes(nc_trainer):
+    """Ragged, oversized, and tiny requests all pad into the one static
+    batch shape: the jitted program compiles exactly once."""
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=64)
+    svc.serve([np.array([0]),
+               np.arange(B),                  # exactly one full batch
+               np.arange(30, 30 + B + 5),     # splits across two batches
+               np.array([2, 2, 2])])
+    assert svc.program.compiles() == 1
+    assert svc.stats()["program_compiles"] == 1
+
+
+# ---------------------------------------------------------------------------
+# DeviceEmbeddingCache unit tests (no trainer: tiny synthetic rows)
+# ---------------------------------------------------------------------------
+def _rows(ids, batch, dim=2, val=None):
+    """(batch, dim) payload whose row i encodes ids[i] (rest padding)."""
+    out = np.zeros((batch, dim), np.float32)
+    for i, nid in enumerate(ids):
+        out[i] = val if val is not None else float(nid)
+    return (out,)
+
+
+def test_cache_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        DeviceEmbeddingCache(0)
+
+
+def test_cache_lru_eviction_order():
+    c = DeviceEmbeddingCache(4, max_staleness_steps=100)
+    c.insert([0, 1, 2, 3], _rows([0, 1, 2, 3], 4), 0)
+    c.lookup([0], 1)                   # touch 0: 1 becomes the LRU entry
+    c.insert([10], _rows([10], 4), 1)
+    assert 1 not in c and 0 in c and 10 in c
+    assert c.evictions == 1
+    c.insert([11], _rows([11], 4), 1)  # next LRU is 2
+    assert 2 not in c and 3 in c
+    assert c.stats()["evictions"] == 2 and len(c) == 4
+
+
+def test_cache_staleness_is_a_miss():
+    c = DeviceEmbeddingCache(4, max_staleness_steps=2)
+    c.insert([7], _rows([7], 4), 0)
+    assert c.fresh(7, 2) and not c.fresh(7, 3)
+    slots, stale = c.lookup([7], 3)
+    assert slots[0] == -1 and stale[0]
+    assert c.hits == 0                 # a stale probe is not a hit
+
+
+def test_cache_refresh_in_place_and_pad_rows_dropped():
+    c = DeviceEmbeddingCache(4, max_staleness_steps=10)
+    c.insert([5, 6], _rows([5, 6], 4), 0)      # rows 2..3 are padding
+    assert len(c) == 2                          # padding never inserted
+    c.insert([5], _rows([5], 4, val=99.0), 3)  # refresh in place
+    assert len(c) == 2 and c.evictions == 0
+    slots, _ = c.lookup([5, 6], 3)
+    got = np.asarray(c.gather(np.resize(slots, 4))[0])
+    assert got[0, 0] == 99.0 and got[1, 0] == 6.0
+    assert c.fresh(5, 13) and not c.fresh(6, 13)   # ages independently
+
+
+def test_cache_insert_truncates_to_capacity():
+    c = DeviceEmbeddingCache(3, max_staleness_steps=10)
+    c.insert(list(range(8)), _rows(range(8), 8), 0)
+    assert len(c) == 3 and c.evictions == 0    # batch can't evict itself
+    assert all(i in c for i in (0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# batcher property tests: no seed dropped/duplicated, padding never leaks
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=40),
+       st.integers(min_value=1, max_value=6))
+def test_property_batcher_preserves_order_and_multiplicity(seeds, bsz):
+    b = ContinuousBatcher(bsz)
+    b.add(ServeRequest(rid=0, seeds=np.asarray(seeds), t_submit=0.0))
+    served = []
+    while len(b):
+        items, compute = b.next_batch(lambda s: False)
+        assert 0 < len(compute) <= bsz
+        assert len(compute) == len(set(compute))          # no dup compute
+        assert {s for _, _, s in items} == set(compute)   # nothing cached
+        served += [s for _, _, s in items]
+    assert served == [int(s) for s in seeds]   # every row, in order, once
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=40),
+       st.integers(min_value=1, max_value=6))
+def test_property_cached_seeds_ride_free(seeds, bsz):
+    """Seeds the classifier calls warm never take a compute slot."""
+    b = ContinuousBatcher(bsz)
+    b.add(ServeRequest(rid=0, seeds=np.asarray(seeds), t_submit=0.0))
+    while len(b):
+        items, compute = b.next_batch(lambda s: s % 2 == 0)
+        assert all(s % 2 == 1 for s in compute)
+        assert len(compute) <= bsz
+        assert items                               # warm work still drains
+
+
+class _EchoProgram:
+    """Program double: the row for seed ``s`` computed at step ``t`` is
+    ``[s, t]`` (and ``out = 2*emb``), so a response row proves exactly
+    which seed produced it — any drop, duplication, or padding leak
+    shows up as a wrong echo."""
+
+    def __init__(self, batch_size, ntype="paper"):
+        self.ntype = ntype
+        self.batch_size = int(batch_size)
+        self.calls = 0
+
+    def __call__(self, seeds, step):
+        self.calls += 1
+        assert np.asarray(seeds).shape == (self.batch_size,)  # never ragged
+        s = np.asarray(seeds, np.float32)
+        emb = np.stack([s, np.full_like(s, float(step))], 1)
+        return emb, emb * 2.0
+
+    def compiles(self):
+        return 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 50), min_size=1, max_size=9),
+                min_size=1, max_size=8),
+       st.integers(min_value=1, max_value=7))
+def test_property_every_row_echoes_its_seed(requests, bsz):
+    prog = _EchoProgram(bsz)
+    svc = GSgnnInferenceService(program=prog, cache_slots=0)
+    resp = svc.serve([np.asarray(r) for r in requests])
+    for req, r in zip(requests, resp):
+        assert r is not None                       # no request dropped
+        np.testing.assert_array_equal(r["emb"][:, 0],
+                                      np.asarray(req, np.float32))
+        np.testing.assert_array_equal(r["out"], r["emb"] * 2.0)
+    s = svc.stats()
+    assert s["rows_served"] == sum(len(r) for r in requests)
+    assert s["requests_served"] == len(requests)
+    assert s["computed_rows"] + s["dedup_rows"] == s["rows_served"]
+    assert s["computed_rows"] <= prog.calls * bsz
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 20), min_size=1, max_size=6),
+                min_size=2, max_size=10),
+       st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=8))
+def test_property_cache_never_changes_answers(requests, bsz, slots):
+    """With the echo program and an unbounded staleness budget, serving
+    through the cache returns the same seed echo for every row, and the
+    accounting identity holds: computed + warm + dedup == served."""
+    svc = GSgnnInferenceService(program=_EchoProgram(bsz),
+                                cache_slots=slots,
+                                max_staleness_steps=10_000)
+    for req, r in zip(requests,
+                      svc.serve([np.asarray(r) for r in requests])):
+        np.testing.assert_array_equal(r["emb"][:, 0],
+                                      np.asarray(req, np.float32))
+    s = svc.stats()
+    assert s["computed_rows"] + s["warm_rows"] + s["dedup_rows"] == \
+        s["rows_served"]
+    assert s["cold_misses"] + s["stale_refreshes"] == s["computed_rows"]
+
+
+def test_request_rejects_empty_seed_list():
+    with pytest.raises(ValueError, match="at least one seed"):
+        ServeRequest(rid=0, seeds=np.array([]), t_submit=0.0)
