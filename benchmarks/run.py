@@ -25,6 +25,9 @@ SUITES = {
                     "§3.3.2 ablation: featureless-node options"),
     "serve": ("bench_serving",
               "§serving: batched inference cold/warm/mixed latency"),
+    "serve_router": ("bench_serving_router",
+                     "§serving scale-out: replica routing, admission "
+                     "under overload, warm restart"),
 }
 
 

@@ -1,0 +1,132 @@
+"""CI smoke client for the HTTP serving front end (docs/serving.md).
+
+Runs against a live ``gs --serve --port`` process (stdlib only — CI
+starts the server in the background and points this script at it):
+
+1. waits for ``/ready``;
+2. posts mixed-priority requests and asserts **cold-batch parity**: the
+   rows of one batched ``/v1/infer`` equal the rows of the same seeds
+   submitted one at a time (seed-keyed draws make this exact, and
+   float32 survives the JSON round trip bit-exactly);
+3. sheds low-priority traffic: bursts low submits, then posts one low
+   request larger than the low-class budget — asserts an explicit 429
+   ``overload`` rejection while high-priority requests keep completing
+   (requires the server to run with a bounded
+   ``serve.max_pending_rows``, as the CI lane does);
+4. checks ``/stats`` reports the traffic, then ``/admin/shutdown``.
+
+Usage: python scripts/serve_frontend_smoke.py http://127.0.0.1:PORT
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+import urllib.error
+import urllib.request
+
+
+def call(base, method, path, body=None, timeout=60):
+    req = urllib.request.Request(
+        base + path, method=method,
+        data=json.dumps(body).encode() if body is not None else None,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def wait_ready(base, timeout=120):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        try:
+            if call(base, "GET", "/ready", timeout=5)[0] == 200:
+                return
+        except (urllib.error.URLError, ConnectionError, OSError):
+            pass
+        time.sleep(0.5)
+    raise SystemExit(f"server at {base} never became ready")
+
+
+def main(base: str) -> None:
+    wait_ready(base)
+    print(f"ready: {base}")
+
+    # --- cold-batch parity: batched == split, bit for bit ------------
+    seeds = [3, 1, 4, 15, 9, 2, 6, 5]
+    st, batched = call(base, "POST", "/v1/infer",
+                       {"seeds": seeds, "priority": "high"})
+    assert st == 200 and batched["status"] == "done", (st, batched)
+    for i, s in enumerate(seeds):
+        st, one = call(base, "POST", "/v1/infer",
+                       {"seeds": [s], "priority": "high"})
+        assert st == 200, (st, one)
+        assert one["emb"][0] == batched["emb"][i], \
+            f"seed {s}: split row != batched row"
+        assert one["out"][0] == batched["out"][i], \
+            f"seed {s}: split out != batched out"
+    print(f"cold-batch parity over {len(seeds)} seeds: OK")
+
+    # --- async submit/poll (low priority rides along) ----------------
+    st, sub = call(base, "POST", "/v1/submit",
+                   {"seeds": [7, 8], "priority": "low"})
+    assert st == 202, (st, sub)
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        st, res = call(base, "GET", f"/v1/result/{sub['rid']}")
+        if st == 200:
+            break
+        time.sleep(0.05)
+    assert st == 200 and res["status"] == "done", (st, res)
+    print("async submit -> poll: OK")
+
+    # --- overload: low-priority traffic sheds with explicit 429 ------
+    # a quick burst may or may not build a backlog (a fast engine can
+    # drain 16-row submits between HTTP round trips), so the
+    # deterministic check is admission's fast-reject contract: a single
+    # low submit larger than the low-class budget (CI starts the server
+    # with --serve.max_pending_rows 64, low fraction 0.5 -> 32 rows)
+    # must be rejected immediately rather than queued
+    rejected = served_high = 0
+    for i in range(50):
+        st, out = call(base, "POST", "/v1/submit",
+                       {"seeds": list(range(16)), "priority": "low"})
+        if st == 429:
+            assert out["error"] == "overload", out
+            rejected += 1
+        else:
+            assert st == 202, (st, out)
+    st, out = call(base, "POST", "/v1/submit",
+                   {"seeds": list(range(100, 148)), "priority": "low"})
+    assert st == 429 and out["error"] == "overload", (st, out)
+    rejected += 1
+    # high priority keeps its reserved headroom under the same backlog
+    st, out = call(base, "POST", "/v1/infer",
+                   {"seeds": [11, 12], "priority": "high"})
+    assert st == 200 and out["status"] == "done", (st, out)
+    served_high += 1
+    assert rejected >= 1, "low-priority flood never tripped admission"
+    print(f"overload shedding: {rejected} explicit 429s, "
+          f"high priority still served: OK")
+
+    # --- stats from the same ring the bench reads --------------------
+    st, stats = call(base, "GET", "/stats")
+    assert st == 200, (st, stats)
+    assert stats["requests_served"] >= len(seeds) + 2 + served_high
+    assert stats["p50_ms"] > 0, stats
+    assert stats["admission"]["rejected_overload"] >= rejected, stats
+    if stats.get("replicas", 1) > 1:
+        assert stats["cache_disjoint"], "replica cache shards overlap"
+    print(f"stats: served={stats['requests_served']} "
+          f"p50_ms={stats['p50_ms']:.2f} "
+          f"rejected_overload={stats['admission']['rejected_overload']}")
+
+    st, out = call(base, "POST", "/admin/shutdown")
+    assert st == 200 and out["status"] == "shutting_down", (st, out)
+    print("shutdown: OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "http://127.0.0.1:7199")

@@ -19,6 +19,12 @@ graph construction, training, and inference for every registered task.
   PYTHONPATH=src python -m repro.cli.gs --serve \
       --restore-model-path out/nc_mag --serve.requests 256
 
+  # or serve over HTTP (asyncio front end; POST /v1/infer, GET /stats)
+  # with multi-replica routing and admission control
+  PYTHONPATH=src python -m repro.cli.gs --serve --port 8080 \
+      --restore-model-path out/nc_mag --serve.num_replicas 2 \
+      --serve.max_pending_rows 256
+
 Tasks are registry entries (repro.runner.TASK_REGISTRY):
 node_classification, node_regression, edge_classification,
 edge_regression, link_prediction, multi_task.
@@ -48,6 +54,11 @@ def main(argv=None):
                     help="serve a batched inference request stream from "
                          "the restored model (serve.* config keys set the "
                          "traffic shape; docs/serving.md)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="with --serve: bind the asyncio HTTP front end "
+                         "here (0 = ephemeral) instead of running the "
+                         "synthetic request stream; shorthand for "
+                         "--serve.port")
     ap.add_argument("--restore-model-path", default=None,
                     help="checkpoint dir; without --cf, the config "
                          "persisted next to the model is used")
@@ -65,6 +76,10 @@ def main(argv=None):
     if args.restore_model_path:
         raw.setdefault("output", {})["restore_model_path"] = \
             args.restore_model_path
+    if args.port is not None:
+        if not args.serve:
+            ap.error("--port requires --serve")
+        raw.setdefault("serve", {})["port"] = args.port
     if overrides:
         raw = apply_overrides(raw, overrides)
 

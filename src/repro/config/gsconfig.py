@@ -305,6 +305,22 @@ class ServeConfig:
     cache_slots: int = _field("int", 4096)
     # a cached row older than this many program steps is recomputed
     max_staleness_steps: int = _field("int", 64)
+    # service replicas behind the ReplicaRouter; seeds hash-partition
+    # across them so each replica caches a disjoint shard of the hot
+    # set; cache_slots is the TOTAL budget (split evenly)
+    num_replicas: int = _field("int", 1)
+    # bind the asyncio HTTP front end here instead of running the
+    # synthetic request stream (0 = ephemeral port; unset = no HTTP)
+    port: Optional[int] = _field("int", None, optional=True)
+    # admission control: hard pending-row budget (0 = unlimited) and
+    # per-class budget fractions; declaration order is scheduling order
+    # (first class drains first)
+    max_pending_rows: int = _field("int", 0)
+    priorities: Dict[str, float] = \
+        _field("dict", default_factory=lambda: {"high": 1.0, "low": 0.5})
+    # snapshot the embedding cache next to the checkpoint on exit and
+    # restore it on start, so a restarted server comes up warm
+    persist_cache: bool = _field("bool", False)
     # synthetic request stream of the CLI path (see serve.request_stream)
     requests: int = _field("int", 64)
     request_size: int = _field("int", 4)
@@ -454,6 +470,22 @@ class GSConfig:
                     raise _err(f"serve.{key}", "must be positive")
             if not 0.0 <= sv.hot_fraction <= 1.0:
                 raise _err("serve.hot_fraction", "must be in [0, 1]")
+            if sv.num_replicas < 1:
+                raise _err("serve.num_replicas", "must be >= 1")
+            if sv.port is not None and not 0 <= sv.port <= 65535:
+                raise _err("serve.port",
+                           "must be in [0, 65535] (0 = ephemeral)")
+            if sv.max_pending_rows < 0:
+                raise _err("serve.max_pending_rows",
+                           "must be >= 0 (0 = unlimited)")
+            if not sv.priorities:
+                raise _err("serve.priorities",
+                           "needs at least one priority class")
+            for name, frac in sv.priorities.items():
+                if not isinstance(frac, (int, float)) or \
+                        not 0.0 < float(frac) <= 1.0:
+                    raise _err(f"serve.priorities.{name}",
+                               "budget fraction must be in (0, 1]")
         if (inp.dataset is None) == (inp.gconstruct_conf is None):
             raise _err("input",
                        "exactly one of 'input.dataset' (built-in synthetic "

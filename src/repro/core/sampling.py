@@ -321,7 +321,7 @@ class DeviceNeighborSampler:
 
     # ------------------------------------------------------------------
     def sample(self, tables, plan: SamplePlan, seeds, step,
-               exclude=None, dp=None, seed_maps=None):
+               exclude=None, dp=None, seed_maps=None, seed_keyed=False):
         """Trace one minibatch draw (call inside jit).
 
         tables: the sampler's ``.tables`` pytree (passed through the jit
@@ -339,6 +339,15 @@ class DeviceNeighborSampler:
         stream that belong to this shard, so the union of all shards'
         draws is bit-identical to the single-device draw (see
         ``_extend_row_map``).
+
+        seed_keyed: draw each frontier row's fanout from a key folded
+        with the row's *node id* instead of its batch position (and do
+        not fold ``step``).  A row's whole sampled subtree — and hence
+        its served embedding — becomes a pure function of its node id,
+        invariant to batch composition, padding, request splitting, and
+        replica routing.  This is the serving determinism mode
+        (``DeviceInferProgram``; docs/serving.md); it is mutually
+        exclusive with ``dp``, whose bit-stream contract is positional.
 
         seed_maps: optional ``{ntype: (base, stride)}`` trace-time numpy
         local->global row maps of the *seed* block itself, for dp runs
@@ -358,6 +367,10 @@ class DeviceNeighborSampler:
         frontier = {nt: jnp.asarray(seeds[nt]).astype(jnp.int32)
                     for nt, _ in plan.seed_counts}
         from repro.kernels.nbr_sample import nbr_sample
+        if seed_keyed and dp is not None:
+            raise ValueError("seed_keyed draws and dp sharding are "
+                             "mutually exclusive — the dp bit-stream "
+                             "contract is positional")
         if dp is not None:
             axis_name, n_shards = dp
             shard = jax.lax.axis_index(axis_name)
@@ -377,10 +390,21 @@ class DeviceNeighborSampler:
             for ei, pe in enumerate(pl_layer.edges):
                 t = tables[pe.etype]
                 key = jax.random.fold_in(
-                    jax.random.fold_in(self.base_key, step),
+                    jax.random.fold_in(self.base_key,
+                                       0 if seed_keyed else step),
                     li * 131071 + ei)
                 dst_ids = frontier[pe.etype[2]]
                 bits = None
+                if seed_keyed:
+                    # one key per frontier *node id*: the draw no longer
+                    # depends on the row's position or the step counter,
+                    # so a node's fanout — and recursively its whole
+                    # subtree — is identical in any batch that contains it
+                    row_keys = jax.vmap(jax.random.fold_in,
+                                        in_axes=(None, 0))(key, dst_ids)
+                    bits = jax.vmap(
+                        lambda k: jax.random.bits(k, (pe.fanout,),
+                                                  jnp.uint32))(row_keys)
                 if dp is not None:
                     # generate the global batch's bits (cheap, counter-
                     # based, identical on every shard) and keep our rows

@@ -183,29 +183,80 @@ class TaskRunner:
     def inference(self) -> dict:
         raise NotImplementedError
 
-    def serve(self) -> dict:
-        """Serve a synthetic seed-request stream against the (restored)
-        model through the batched inference service (docs/serving.md);
-        returns latency percentiles, throughput, and cache counters.
-        Every device-capable task serves: node tasks answer with
-        logits + embeddings, edge/LP tasks with embeddings."""
-        from repro.config import ServeConfig
-        from repro.serve import GSgnnInferenceService, request_stream
-        sv = self.cfg.serve if self.cfg.serve is not None else ServeConfig()
+    def _serve_engine(self, sv):
+        """The serving engine a config asks for: one service, or a
+        ``ReplicaRouter`` over ``serve.num_replicas`` hash-partitioned
+        replicas, always behind an ``AdmissionController`` built from
+        the ``serve.*`` admission keys."""
+        from repro.serve import (AdmissionController, GSgnnInferenceService,
+                                 ReplicaRouter)
         batch = sv.batch_size or self.hp.batch_size
-        service = GSgnnInferenceService(
+        admission = AdmissionController(
+            max_pending_rows=sv.max_pending_rows,
+            priorities=sv.priorities)
+        if sv.num_replicas > 1:
+            return ReplicaRouter.for_trainer(
+                self.trainer, sv.num_replicas, batch_size=batch,
+                cache_slots=sv.cache_slots,
+                max_staleness_steps=sv.max_staleness_steps,
+                admission=admission)
+        return GSgnnInferenceService(
             self.trainer, batch_size=batch, cache_slots=sv.cache_slots,
-            max_staleness_steps=sv.max_staleness_steps)
-        reqs = request_stream(
-            self.graph.num_nodes[service.ntype], num_requests=sv.requests,
-            request_size=sv.request_size, hot_fraction=sv.hot_fraction,
-            hot_set=sv.hot_set, seed=self.hp.seed)
-        responses = service.serve(reqs)
-        out = {"task": self.task_name, "serve_ntype": service.ntype,
-               "batch_size": batch,
-               "row_shapes": {"emb": list(responses[0]["emb"].shape[1:]),
-                              "out": list(responses[0]["out"].shape[1:])}}
-        out.update(service.stats())
+            max_staleness_steps=sv.max_staleness_steps,
+            admission=admission)
+
+    def serve(self) -> dict:
+        """Serve against the (restored) model through the batched
+        inference engine (docs/serving.md): with ``serve.port`` set,
+        run the asyncio HTTP front end until ``/admin/shutdown``;
+        otherwise drain the synthetic seed-request stream.  Returns
+        latency percentiles, throughput, and cache/admission counters.
+        Every device-capable task serves: node tasks answer with
+        logits + embeddings, edge/LP tasks with embeddings.  With
+        ``serve.persist_cache`` the embedding cache restores from (and
+        snapshots back to) ``<restore_model_path>/serve_cache`` so a
+        restarted server comes up warm."""
+        import os
+        from repro.config import ServeConfig
+        from repro.serve import ServeFrontend, request_stream
+        sv = self.cfg.serve if self.cfg.serve is not None else ServeConfig()
+        engine = self._serve_engine(sv)
+        out = {"task": self.task_name, "serve_ntype": engine.ntype,
+               "batch_size": engine.batch_size,
+               "num_replicas": sv.num_replicas}
+        cache_dir = None
+        if sv.persist_cache and self.cfg.output.restore_model_path:
+            cache_dir = os.path.join(self.cfg.output.restore_model_path,
+                                     "serve_cache")
+            try:
+                out["cache_restored_entries"] = engine.load_cache(cache_dir)
+            except ValueError as e:
+                # shape mismatch (changed cache_slots / replica count):
+                # serve cold rather than load wrong rows
+                out["cache_restored_entries"] = 0
+                out["cache_restore_note"] = str(e)
+        if sv.port is not None:
+            front = ServeFrontend(engine, port=sv.port)
+            front.start()
+            out["url"] = f"http://{front.host}:{front.port}"
+            # announce the bound endpoint before blocking so clients
+            # (and the CI smoke script) know where to connect
+            print(json.dumps({"serving": out["url"]}), flush=True)
+            front.wait()
+        else:
+            reqs = request_stream(
+                self.graph.num_nodes[engine.ntype],
+                num_requests=sv.requests, request_size=sv.request_size,
+                hot_fraction=sv.hot_fraction, hot_set=sv.hot_set,
+                seed=self.hp.seed)
+            responses = engine.serve(reqs)
+            out["row_shapes"] = {
+                "emb": list(responses[0]["emb"].shape[1:]),
+                "out": list(responses[0]["out"].shape[1:])}
+        if cache_dir is not None:
+            engine.save_cache(cache_dir)
+            out["cache_snapshot_dir"] = cache_dir
+        out.update(engine.stats())
         return out
 
     def restore(self, path: str):

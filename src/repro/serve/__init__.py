@@ -1,13 +1,23 @@
 """Batched GNN inference serving on the device engine (docs/serving.md).
 
-Request queue -> continuous batching into the static BlockSchema ->
-one jitted inference program for cold seeds -> device-resident LRU
-embedding cache (staleness-bounded) for warm seeds.  Entry points:
-``GSgnnInferenceService`` (programmatic), ``gs --serve`` (CLI).
+Request queue -> admission control -> continuous batching into the
+static BlockSchema -> one jitted inference program for cold seeds ->
+device-resident LRU embedding cache (staleness-bounded, persistable)
+for warm seeds.  Scale-out pieces: ``ReplicaRouter`` hash-partitions
+the seed space over N service replicas (disjoint cache shards,
+bit-identical fan-in); ``ServeFrontend`` is the stdlib asyncio HTTP
+transport.  Entry points: ``GSgnnInferenceService`` (programmatic),
+``gs --serve [--port N]`` (CLI).
 """
+from repro.serve.admission import (AdmissionController, RequestRejected)
 from repro.serve.batcher import ContinuousBatcher, ServeRequest
 from repro.serve.cache import DeviceEmbeddingCache
-from repro.serve.service import GSgnnInferenceService, request_stream
+from repro.serve.frontend import ServeFrontend
+from repro.serve.router import ReplicaRouter, shard_of
+from repro.serve.service import (GSgnnInferenceService, LatencyRing,
+                                 request_stream, snapshot_file)
 
-__all__ = ["ContinuousBatcher", "DeviceEmbeddingCache",
-           "GSgnnInferenceService", "ServeRequest", "request_stream"]
+__all__ = ["AdmissionController", "ContinuousBatcher",
+           "DeviceEmbeddingCache", "GSgnnInferenceService", "LatencyRing",
+           "ReplicaRouter", "RequestRejected", "ServeFrontend",
+           "ServeRequest", "request_stream", "shard_of", "snapshot_file"]

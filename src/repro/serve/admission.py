@@ -1,0 +1,158 @@
+"""Admission control for the serving front end (docs/serving.md).
+
+Production serving queues must be *bounded*: under overload, letting the
+pending queue grow without limit turns every request's latency into the
+backlog's, and the operator finds out from tail-latency graphs instead
+of error rates.  ``AdmissionController`` enforces a hard pending-row
+budget at submit time with per-class headroom:
+
+- **Priority classes.** ``priorities`` maps class name -> the fraction
+  of ``max_pending_rows`` that class may fill (declaration order is the
+  scheduling order the batcher drains — first entry is served first).
+  With the default ``{"high": 1.0, "low": 0.5}``, low-priority traffic
+  is rejected once the queue is half full, which reserves the upper half
+  of the budget for high-priority requests; a low-priority flood
+  therefore costs high-priority traffic at most a bounded backlog, not
+  an unbounded one.
+- **Fast explicit rejection.** An over-budget submit raises
+  :class:`RequestRejected` with a machine-readable ``reason``
+  (``overload`` / ``draining`` / ``deadline_expired`` /
+  ``unknown_priority``) instead of queueing — the HTTP front end maps
+  these onto 429/503 responses.
+- **Deadline shedding.** A submit whose deadline has already passed is
+  rejected outright; queued requests whose deadline expires before they
+  reach a batch are shed by the service (``shed_rows``), releasing their
+  budget immediately.
+- **Drain / readiness.** ``start_drain()`` flips the controller into
+  draining: new submits are rejected (``reason="draining"``) while
+  already-admitted rows complete, and ``ready()`` goes false so a load
+  balancer stops routing here.  ``drained`` turns true once the pending
+  count reaches zero — the clean-shutdown handshake the front end's
+  ``/admin/shutdown`` uses.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+
+class RequestRejected(RuntimeError):
+    """A submit the admission controller refused; ``reason`` is one of
+    ``overload`` / ``draining`` / ``deadline_expired`` /
+    ``unknown_priority`` (machine-readable — the HTTP layer keys status
+    codes off it)."""
+
+    def __init__(self, reason: str, priority: str, detail: str = ""):
+        self.reason = reason
+        self.priority = priority
+        super().__init__(
+            f"request rejected ({reason}, priority={priority!r})"
+            + (f": {detail}" if detail else ""))
+
+
+DEFAULT_PRIORITIES = {"high": 1.0, "low": 0.5}
+
+
+class AdmissionController:
+    """Bounded pending-row budget with priority classes (module docs).
+
+    ``max_pending_rows <= 0`` means an unlimited budget — priorities
+    then only order scheduling, and drain/readiness still work.  The
+    controller is clock-agnostic (inject ``clock`` for tests); all
+    deadlines are absolute values of that clock.
+    """
+
+    def __init__(self, max_pending_rows: int = 0,
+                 priorities: Optional[Dict[str, float]] = None,
+                 clock=time.perf_counter):
+        self.max_pending_rows = int(max_pending_rows)
+        prio = dict(priorities) if priorities else dict(DEFAULT_PRIORITIES)
+        for name, frac in prio.items():
+            if not 0.0 < float(frac) <= 1.0:
+                raise ValueError(
+                    f"priority {name!r}: budget fraction must be in "
+                    f"(0, 1], got {frac!r}")
+        self.priorities = {k: float(v) for k, v in prio.items()}
+        self._rank = {name: i for i, name in enumerate(self.priorities)}
+        self._clock = clock
+        self.pending_rows = 0
+        self.draining = False
+        self.counters = {"admitted_requests": 0, "admitted_rows": 0,
+                         "rejected_overload": 0, "rejected_draining": 0,
+                         "rejected_deadline": 0, "rejected_priority": 0,
+                         "released_rows": 0}
+
+    # ------------------------------------------------------------------
+    def rank(self, priority: str) -> int:
+        """Scheduling rank of a class: declaration order in
+        ``priorities`` (0 drains first)."""
+        if priority not in self._rank:
+            raise RequestRejected("unknown_priority", priority,
+                                  f"known: {list(self._rank)}")
+        return self._rank[priority]
+
+    def budget_for(self, priority: str) -> Optional[int]:
+        """The absolute pending-row ceiling this class submits under
+        (None = unlimited)."""
+        if self.max_pending_rows <= 0:
+            return None
+        return max(1, int(self.priorities[priority] *
+                          self.max_pending_rows))
+
+    def try_admit(self, rows: int, priority: str = "high",
+                  deadline: Optional[float] = None) -> None:
+        """Admit ``rows`` pending rows for ``priority`` or raise
+        :class:`RequestRejected`.  ``deadline`` is an absolute clock
+        value; one already in the past is rejected immediately (the
+        client would shed it anyway — fail fast, spend nothing)."""
+        if priority not in self._rank:
+            self.counters["rejected_priority"] += 1
+            raise RequestRejected("unknown_priority", priority,
+                                  f"known: {list(self._rank)}")
+        if self.draining:
+            self.counters["rejected_draining"] += 1
+            raise RequestRejected("draining", priority)
+        if deadline is not None and self._clock() > deadline:
+            self.counters["rejected_deadline"] += 1
+            raise RequestRejected("deadline_expired", priority)
+        ceiling = self.budget_for(priority)
+        if ceiling is not None and self.pending_rows + rows > ceiling:
+            self.counters["rejected_overload"] += 1
+            raise RequestRejected(
+                "overload", priority,
+                f"pending_rows={self.pending_rows} + {rows} > "
+                f"budget={ceiling}")
+        self.pending_rows += rows
+        self.counters["admitted_requests"] += 1
+        self.counters["admitted_rows"] += rows
+
+    def release(self, rows: int) -> None:
+        """Return ``rows`` served or shed rows to the budget."""
+        self.pending_rows = max(0, self.pending_rows - int(rows))
+        self.counters["released_rows"] += int(rows)
+
+    # ------------------------------------------------------------------
+    # drain / readiness protocol
+    # ------------------------------------------------------------------
+    def start_drain(self) -> None:
+        self.draining = True
+
+    @property
+    def drained(self) -> bool:
+        return self.draining and self.pending_rows == 0
+
+    def ready(self) -> bool:
+        """True while accepting traffic (the front end's ``/ready``)."""
+        return not self.draining
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        out = dict(self.counters)
+        out.update(pending_rows=self.pending_rows,
+                   max_pending_rows=self.max_pending_rows,
+                   draining=self.draining,
+                   priorities=dict(self.priorities))
+        rej = sum(v for k, v in self.counters.items()
+                  if k.startswith("rejected_"))
+        out["rejected_requests"] = rej
+        return out

@@ -3,10 +3,12 @@
 Serving traffic arrives as variable-size requests ("embed/classify these
 seed nodes"); the device program wants one fixed ``(batch_size,)`` seed
 vector per dispatch (the static shape is the jit cache key — padding,
-never recompiling).  The batcher bridges the two: requests queue FIFO at
-per-seed granularity, and each ``next_batch`` pulls items in arrival
-order until the batch's *compute set* — unique seeds the caller's
-classifier cannot resolve from cache — would exceed ``batch_size``.
+never recompiling).  The batcher bridges the two: requests queue at
+per-seed granularity in one FIFO deque per priority rank, and each
+``next_batch`` pulls items — higher priority classes first, arrival
+order within a class — until the batch's *compute set* — unique seeds
+the caller's classifier cannot resolve from cache — would exceed
+``batch_size``.
 
 Consequences of that rule:
 
@@ -16,13 +18,21 @@ Consequences of that rule:
   compute slot — cross-request dedup: a hot node is sampled/gathered
   once per batch and fanned back out to every requester;
 - cache-warm rows ride along for free (they cost one gather row, not a
-  program slot), so a warm burst drains in a single step.
+  program slot), so a warm burst drains in a single step;
+- a high-priority request never waits behind queued low-priority rows:
+  under overload, low-priority backlog is bounded by admission control
+  (``repro.serve.admission``) and drained only after every higher rank
+  is empty.
+
+``shed`` removes queued rows of requests the caller declares dead
+(deadline passed) before they reach a batch — their compute cost is
+never paid.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -30,13 +40,20 @@ import numpy as np
 @dataclasses.dataclass
 class ServeRequest:
     """One in-flight request: ``rows[i]`` fills as seed ``seeds[i]``
-    resolves; done when ``remaining`` hits zero."""
+    resolves; done when ``remaining`` hits zero.  ``rank`` is the
+    scheduling rank (0 drains first); ``deadline`` is an absolute clock
+    value after which the request is shed instead of served; ``status``
+    is ``pending`` -> ``done`` | ``expired``."""
     rid: int
     seeds: np.ndarray
     t_submit: float
+    priority: str = "high"
+    rank: int = 0
+    deadline: Optional[float] = None
     rows: List[Optional[tuple]] = dataclasses.field(default_factory=list)
     remaining: int = 0
     t_done: Optional[float] = None
+    status: str = "pending"
 
     def __post_init__(self):
         self.seeds = np.asarray(self.seeds, np.int64).reshape(-1)
@@ -50,44 +67,78 @@ class ServeRequest:
             self.remaining -= 1
         self.rows[row_index] = payload
 
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
 
 class ContinuousBatcher:
-    """FIFO request queue -> per-step work orders (see module docstring)."""
+    """Priority-ranked FIFO request queues -> per-step work orders (see
+    module docstring)."""
 
     def __init__(self, batch_size: int):
         if batch_size <= 0:
             raise ValueError("batch_size must be positive")
         self.batch_size = int(batch_size)
-        self._queue: deque = deque()     # (request, row_index, seed)
+        self._queues: Dict[int, deque] = {}   # rank -> (req, row, seed)
 
     def __len__(self) -> int:
-        return len(self._queue)
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def pending_rows(self) -> int:
+        return len(self)
 
     def add(self, req: ServeRequest):
+        q = self._queues.setdefault(int(req.rank), deque())
         for i, s in enumerate(req.seeds):
-            self._queue.append((req, i, int(s)))
+            q.append((req, i, int(s)))
+
+    def shed(self, should_shed: Callable[[ServeRequest], bool]
+             ) -> List[tuple]:
+        """Remove every queued item whose request ``should_shed``;
+        returns the removed ``(request, row_index, seed)`` triples (the
+        caller marks the requests expired and releases their admission
+        budget).  Memoized per request so the predicate runs once per
+        distinct request, not once per row."""
+        verdict: Dict[int, bool] = {}
+
+        def dead(req):
+            v = verdict.get(req.rid)
+            if v is None:
+                v = verdict[req.rid] = bool(should_shed(req))
+            return v
+
+        removed: List[tuple] = []
+        for rank, q in self._queues.items():
+            kept = deque()
+            for item in q:
+                (removed if dead(item[0]) else kept).append(item)
+            self._queues[rank] = kept
+        return removed
 
     def next_batch(self, is_cached: Callable[[int], bool]
                    ) -> Tuple[List[tuple], List[int]]:
-        """Pull the next batch's items off the queue.
+        """Pull the next batch's items off the queues, best rank first.
 
         Returns ``(items, compute_ids)``: ``items`` are the
         ``(request, row_index, seed)`` triples this batch serves, in
-        arrival order; ``compute_ids`` are the unique seeds the program
-        must compute (first-seen order, ``<= batch_size`` of them —
-        pad-to-batch is the caller's job).  ``is_cached(seed)`` says a
-        seed resolves from cache without a compute slot; it must be
-        stable for the duration of the call."""
+        rank-then-arrival order; ``compute_ids`` are the unique seeds the
+        program must compute (first-seen order, ``<= batch_size`` of
+        them — pad-to-batch is the caller's job).  ``is_cached(seed)``
+        says a seed resolves from cache without a compute slot; it must
+        be stable for the duration of the call."""
         items: List[tuple] = []
         compute: List[int] = []
         in_compute = set()
-        while self._queue:
-            req, row, seed = self._queue[0]
-            if seed not in in_compute and not is_cached(seed):
-                if len(compute) == self.batch_size:
-                    break                # next batch starts with this item
-                compute.append(seed)
-                in_compute.add(seed)
-            items.append((req, row, seed))
-            self._queue.popleft()
+        for rank in sorted(self._queues):
+            q = self._queues[rank]
+            while q:
+                req, row, seed = q[0]
+                if seed not in in_compute and not is_cached(seed):
+                    if len(compute) == self.batch_size:
+                        return items, compute   # next batch starts here
+                    compute.append(seed)
+                    in_compute.add(seed)
+                items.append((req, row, seed))
+                q.popleft()
         return items, compute

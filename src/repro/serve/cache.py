@@ -143,6 +143,49 @@ class DeviceEmbeddingCache:
         return tuple(_take(t, sl) for t in self._tables)
 
     # ------------------------------------------------------------------
+    # persistence: snapshot warm rows next to the checkpoint so a
+    # restarted server comes up warm (docs/serving.md, "Scaling out")
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        """Snapshot slot bookkeeping + row tables to one ``.npz``.  The
+        payload is written bit-exactly (host copies of the device
+        arrays), so a restored warm hit returns the same bits the
+        pre-restart insert cached."""
+        state = {"ids": self._ids, "step": self._step, "used": self._used,
+                 "tick": np.int64(self._tick),
+                 "capacity": np.int64(self.capacity),
+                 "max_staleness": np.int64(self.max_staleness),
+                 "n_tables": np.int64(0 if self._tables is None
+                                      else len(self._tables))}
+        if self._tables is not None:
+            for i, t in enumerate(self._tables):
+                state[f"table_{i}"] = np.asarray(t)
+        np.savez(path, **state)
+
+    def load(self, path: str) -> int:
+        """Restore a snapshot into this cache (shapes must match: same
+        ``capacity``, and the row payloads must fit the program that
+        will serve them — persist a cache only next to the checkpoint it
+        was computed from).  Returns the number of restored entries."""
+        with np.load(path) as z:
+            if int(z["capacity"]) != self.capacity:
+                raise ValueError(
+                    f"cache snapshot capacity {int(z['capacity'])} != "
+                    f"configured cache_slots {self.capacity}")
+            self._ids = z["ids"].astype(np.int64)
+            self._step = z["step"].astype(np.int64)
+            self._used = z["used"].astype(np.int64)
+            self._tick = int(z["tick"])
+            n = int(z["n_tables"])
+            self._tables = tuple(jnp.asarray(z[f"table_{i}"])
+                                 for i in range(n)) if n else None
+        self._slot_of = {int(nid): s for s, nid in enumerate(self._ids)
+                         if nid >= 0}
+        self._free = [s for s in range(self.capacity - 1, -1, -1)
+                      if self._ids[s] < 0]
+        return len(self._slot_of)
+
+    # ------------------------------------------------------------------
     def stats(self) -> dict:
         return {"capacity": self.capacity, "entries": len(self),
                 "hits": self.hits, "evictions": self.evictions}

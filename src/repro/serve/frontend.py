@@ -1,0 +1,363 @@
+"""Async HTTP transport for the serving engine (stdlib-only).
+
+``ServeFrontend`` puts an asyncio HTTP/1.1 server in front of a serving
+engine — a single :class:`~repro.serve.service.GSgnnInferenceService`
+or a :class:`~repro.serve.router.ReplicaRouter`; both expose the same
+``submit`` / ``step`` / ``result`` / ``stats`` surface, so the
+transport does not care how many replicas answer.
+
+Two-thread design, no external dependencies:
+
+- the **event loop thread** runs ``asyncio.start_server`` and parses
+  requests.  Engine calls are short (submit / result / stats) but take
+  the engine lock, so handlers push them onto the default executor and
+  the loop never blocks behind a compute batch;
+- the **pump thread** drives ``engine.step()`` under the same lock —
+  shedding expired requests, serving one batch per iteration — and
+  signals per-request completion events that awaiting ``/v1/infer``
+  handlers sleep on.  When the queue is empty it parks on a wakeup
+  event instead of spinning.
+
+Endpoints (JSON in, JSON out):
+
+- ``POST /v1/submit``  ``{"seeds": [..], "priority": "high",
+  "deadline_ms": 50}`` -> ``202 {"rid": n, "status": "pending"}``.
+  An admission rejection maps onto transport status codes: 429 for
+  ``overload`` / ``deadline_expired``, 503 for ``draining``, 400 for
+  ``unknown_priority`` — always with a machine-readable ``error``.
+- ``GET /v1/result/<rid>`` -> 200 with rows when done (``emb`` /
+  ``out`` as nested lists — float32 survives the JSON round trip
+  bit-exactly through binary64), 202 while pending, 404 for unknown.
+- ``POST /v1/infer`` — submit *and await* completion in one call
+  (``timeout_s`` bounds the wait; 504 on timeout).
+- ``GET /stats`` — the engine's full ``stats()`` dict.
+- ``GET /ready`` — 200 while accepting traffic, 503 once draining
+  (the load-balancer health check).
+- ``POST /admin/drain`` — stop admitting, keep serving the backlog.
+- ``POST /admin/shutdown`` — drain, stop the pump, close the server.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serve.admission import RequestRejected
+
+_REJECT_HTTP = {"overload": 429, "deadline_expired": 429,
+                "draining": 503, "unknown_priority": 400}
+_MAX_BODY = 16 << 20
+
+
+def _jsonable(x):
+    """Recursively convert numpy scalars/arrays so ``json.dumps``
+    accepts an engine stats() or result() dict unchanged."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, np.generic):
+        return x.item()
+    return x
+
+
+class ServeFrontend:
+    """HTTP front end over one serving engine (module docstring).
+
+    ``port=0`` binds an ephemeral port; the bound port is in
+    ``self.port`` once ``start()`` returns.  ``start()`` runs the event
+    loop and the pump on background threads (tests drive it
+    in-process); ``run_forever()`` blocks the caller until
+    ``/admin/shutdown`` — the ``gs --serve --port`` path.
+    """
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 8080):
+        self.engine = engine
+        self.host = host
+        self.port = int(port)
+        self._lock = threading.Lock()
+        self._work = threading.Event()      # queue may be non-empty
+        self._stop = threading.Event()
+        self._done_events: Dict[int, threading.Event] = {}
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._loop_thread: Optional[threading.Thread] = None
+        self._pump_thread: Optional[threading.Thread] = None
+        self.started = threading.Event()
+
+    # ------------------------------------------------------------------
+    # pump thread: the only caller of engine.step()
+    # ------------------------------------------------------------------
+    def _pump(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                worked = self.engine.step()
+                self._signal_done()
+            if not worked:
+                self._work.clear()
+                # deadlines can expire while idle: wake periodically
+                self._work.wait(timeout=0.02)
+
+    def _signal_done(self) -> None:
+        for rid in list(self._done_events):
+            if self.engine.status(rid) != "pending":
+                self._done_events.pop(rid).set()
+
+    # ------------------------------------------------------------------
+    # engine calls (run on the executor, under the engine lock)
+    # ------------------------------------------------------------------
+    def _submit(self, body: dict):
+        seeds = body.get("seeds")
+        if not isinstance(seeds, list) or not seeds:
+            return 400, {"error": "bad_request",
+                         "detail": "seeds must be a non-empty list"}
+        priority = body.get("priority", "high")
+        deadline = None
+        if body.get("deadline_ms") is not None:
+            deadline = self.engine.clock() + \
+                float(body["deadline_ms"]) / 1e3
+        with self._lock:
+            try:
+                rid = self.engine.submit(seeds, priority=priority,
+                                         deadline=deadline)
+            except RequestRejected as e:
+                status = _REJECT_HTTP.get(e.reason, 429)
+                return status, {"error": e.reason, "priority": e.priority,
+                                "detail": str(e)}
+            except ValueError as e:
+                return 400, {"error": "bad_request", "detail": str(e)}
+            ev = self._done_events.setdefault(rid, threading.Event())
+        self._work.set()
+        return 202, {"rid": rid, "status": "pending", "_event": ev}
+
+    def _result(self, rid: int):
+        with self._lock:
+            st = self.engine.status(rid)
+            if st == "unknown":
+                return 404, {"error": "unknown_rid", "rid": rid}
+            if st == "pending":
+                return 202, {"rid": rid, "status": "pending"}
+            return 200, _jsonable(self.engine.result(rid))
+
+    def _stats(self):
+        with self._lock:
+            return 200, _jsonable(self.engine.stats())
+
+    def _ready(self):
+        adm = getattr(self.engine, "admission", None)
+        ok = adm is None or adm.ready()
+        return (200, {"status": "ok"}) if ok else \
+            (503, {"status": "draining"})
+
+    def _drain(self):
+        adm = getattr(self.engine, "admission", None)
+        if adm is not None:
+            adm.start_drain()
+        self._work.set()
+        return 200, {"status": "draining"}
+
+    # ------------------------------------------------------------------
+    # HTTP plumbing
+    # ------------------------------------------------------------------
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                line = await reader.readline()
+                if not line or line in (b"\r\n", b"\n"):
+                    break
+                try:
+                    method, path, _ = line.decode("latin1").split(None, 2)
+                except ValueError:
+                    break
+                headers = {}
+                while True:
+                    h = await reader.readline()
+                    if h in (b"\r\n", b"\n", b""):
+                        break
+                    k, _, v = h.decode("latin1").partition(":")
+                    headers[k.strip().lower()] = v.strip()
+                n = int(headers.get("content-length", 0))
+                if n > _MAX_BODY:
+                    await self._respond(writer, 413,
+                                        {"error": "body_too_large"})
+                    break
+                raw = await reader.readexactly(n) if n else b""
+                try:
+                    body = json.loads(raw) if raw else {}
+                except json.JSONDecodeError:
+                    await self._respond(writer, 400,
+                                        {"error": "bad_json"})
+                    continue
+                keep = await self._route(writer, method.upper(), path,
+                                         body)
+                if not keep or \
+                        headers.get("connection", "").lower() == "close":
+                    break
+        except (asyncio.IncompleteReadError, ConnectionError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _route(self, writer, method: str, path: str,
+                     body: dict) -> bool:
+        loop = asyncio.get_running_loop()
+        if method == "POST" and path == "/v1/submit":
+            status, out = await loop.run_in_executor(
+                None, self._submit, body)
+            out.pop("_event", None)
+            await self._respond(writer, status, out)
+        elif method == "GET" and path.startswith("/v1/result/"):
+            try:
+                rid = int(path.rsplit("/", 1)[1])
+            except ValueError:
+                await self._respond(writer, 400,
+                                    {"error": "bad_rid"})
+                return True
+            status, out = await loop.run_in_executor(
+                None, self._result, rid)
+            await self._respond(writer, status, out)
+        elif method == "POST" and path == "/v1/infer":
+            status, out = await loop.run_in_executor(
+                None, self._submit, body)
+            ev = out.pop("_event", None)
+            if status != 202:
+                await self._respond(writer, status, out)
+                return True
+            timeout = float(body.get("timeout_s", 30.0))
+            done = await loop.run_in_executor(None, ev.wait, timeout)
+            if not done:
+                await self._respond(writer, 504, {
+                    "error": "timeout", "rid": out["rid"]})
+                return True
+            status, res = await loop.run_in_executor(
+                None, self._result, out["rid"])
+            await self._respond(writer, status, res)
+        elif method == "GET" and path == "/stats":
+            status, out = await loop.run_in_executor(None, self._stats)
+            await self._respond(writer, status, out)
+        elif method == "GET" and path == "/ready":
+            status, out = self._ready()
+            await self._respond(writer, status, out)
+        elif method == "POST" and path == "/admin/drain":
+            status, out = self._drain()
+            await self._respond(writer, status, out)
+        elif method == "POST" and path == "/admin/shutdown":
+            self._drain()
+            await self._respond(writer, 200, {"status": "shutting_down"})
+            loop.call_soon(self._begin_shutdown)
+            return False
+        else:
+            await self._respond(writer, 404, {"error": "not_found",
+                                              "path": path})
+        return True
+
+    @staticmethod
+    async def _respond(writer, status: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        reason = {200: "OK", 202: "Accepted", 400: "Bad Request",
+                  404: "Not Found", 413: "Payload Too Large",
+                  429: "Too Many Requests", 503: "Service Unavailable",
+                  504: "Gateway Timeout"}.get(status, "OK")
+        writer.write(
+            f"HTTP/1.1 {status} {reason}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        await writer.drain()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    async def _serve_async(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self.started.set()
+        async with self._server:
+            try:
+                await self._server.serve_forever()
+            except asyncio.CancelledError:
+                pass
+
+    def _begin_shutdown(self) -> None:
+        """Drain the backlog, stop the pump, close the server (runs on
+        the loop thread via ``call_soon``)."""
+        def finish():
+            # serve already-admitted requests to completion
+            deadline = time.monotonic() + 30.0
+            while time.monotonic() < deadline:
+                with self._lock:
+                    worked = self.engine.step()
+                    self._signal_done()
+                if not worked:
+                    break
+            self._stop.set()
+            self._work.set()
+            if self._loop is not None:
+                self._loop.call_soon_threadsafe(self._close_server)
+        threading.Thread(target=finish, daemon=True).start()
+
+    def _close_server(self) -> None:
+        if self._server is not None:
+            self._server.close()
+        for task in asyncio.all_tasks(self._loop):
+            task.cancel()
+
+    def start(self) -> None:
+        """Run the server + pump on background threads; returns once
+        the socket is bound (``self.port`` is then final)."""
+        def run_loop():
+            self._loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(self._loop)
+            try:
+                self._loop.run_until_complete(self._serve_async())
+            finally:
+                self._loop.close()
+        self._loop_thread = threading.Thread(target=run_loop, daemon=True)
+        self._loop_thread.start()
+        if not self.started.wait(timeout=10.0):
+            raise RuntimeError("HTTP front end failed to bind "
+                               f"{self.host}:{self.port}")
+        self._pump_thread = threading.Thread(target=self._pump,
+                                             daemon=True)
+        self._pump_thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Stop from the host process (tests / signal handlers);
+        idempotent — a no-op after ``/admin/shutdown`` already ran."""
+        self._stop.set()
+        self._work.set()
+        if self._loop is not None and not self._loop.is_closed():
+            try:
+                self._loop.call_soon_threadsafe(self._close_server)
+            except RuntimeError:
+                pass                     # loop closed between check and call
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=timeout)
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=timeout)
+
+    def wait(self) -> None:
+        """Block the caller until ``/admin/shutdown`` (or Ctrl-C)."""
+        try:
+            while not self._stop.is_set():
+                time.sleep(0.1)
+        except KeyboardInterrupt:
+            self.stop()
+        if self._loop_thread is not None:
+            self._loop_thread.join(timeout=10.0)
+
+    def run_forever(self) -> None:
+        """Start and block until shutdown (the CLI serving path)."""
+        self.start()
+        self.wait()

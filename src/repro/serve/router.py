@@ -1,0 +1,289 @@
+"""Multi-replica request routing with disjoint cache sharding.
+
+``ReplicaRouter`` runs N independent :class:`GSgnnInferenceService`
+replicas (one per device or worker thread in a real deployment; in this
+single-process engine they share one trainer and therefore one compiled
+program) and hash-partitions the seed-id space across them:
+
+- **Routing.** ``shard_of(seed)`` is a splitmix64-style mix of the seed
+  id modulo the replica count — deterministic across runs, processes,
+  and platforms, and independent of request arrival order.  An incoming
+  request splits along the same partition into at most one sub-request
+  per replica; the router fans the per-replica rows back into the
+  caller's original row order.
+- **Disjoint cache shards.** Because a seed id always routes to the
+  same replica, each replica's ``DeviceEmbeddingCache`` holds a
+  *disjoint* shard of the hot set — the aggregate cache budget
+  (``serve.cache_slots``) buys unique rows, never duplicates
+  (``stats()["cache_disjoint"]`` asserts it live).
+- **Parity.** Serve-time draws are seed-keyed
+  (``DeviceNeighborSampler.sample(seed_keyed=True)``), so a seed's row
+  is a pure function of its node id: replicas=N returns bit-identical
+  rows to replicas=1 — and to offline ``trainer.infer_device`` —
+  whatever order replicas step in, cold or warm.
+- **Admission.** The router admits once at its own entry (whole
+  requests, all-or-nothing) and fans sub-requests out pre-admitted.
+  The replicas *share* the router's admission controller: each
+  replica's ``step`` releases budget as its rows are served or shed,
+  and every layer resolves priority names to the same scheduling
+  ranks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.service import GSgnnInferenceService, LatencyRing
+
+_M64 = (1 << 64) - 1
+
+
+def shard_of(seeds, num_replicas: int):
+    """splitmix64 finalizer over seed ids -> replica index.  Stable by
+    construction (pure integer arithmetic, no process salt) so cache
+    shards survive restarts and every process routes identically."""
+    x = np.asarray(seeds, np.uint64)
+    x = (x + np.uint64(0x9E3779B97F4A7C15)) & np.uint64(_M64)
+    x = ((x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9))
+    x = ((x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB))
+    x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(num_replicas)).astype(np.int64)
+
+
+class _RouterRequest:
+    """Bookkeeping for one routed request: which replica serves which
+    of the caller's row positions."""
+
+    __slots__ = ("rid", "seeds", "parts", "t_submit", "t_done", "status",
+                 "priority")
+
+    def __init__(self, rid, seeds, parts, t_submit, priority):
+        self.rid = rid
+        self.seeds = seeds
+        self.parts = parts            # [(replica_idx, sub_rid, positions)]
+        self.t_submit = t_submit
+        self.t_done: Optional[float] = None
+        self.status = "pending"
+        self.priority = priority
+
+
+class ReplicaRouter:
+    """Hash-partitioned fan-out over N service replicas (module docs).
+
+    The router exposes the same engine surface as a single service —
+    ``submit`` / ``step`` / ``result`` / ``status`` / ``drain`` /
+    ``serve`` / ``stats`` / ``save_cache`` / ``load_cache`` — so the
+    HTTP front end and the runner drive either interchangeably.
+    """
+
+    def __init__(self, replicas: List[GSgnnInferenceService],
+                 admission=None, clock=time.perf_counter,
+                 latency_window: int = 2048):
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        self.admission = admission
+        if admission is not None:
+            # one shared controller: replicas release served/shed rows
+            # themselves and rank priorities identically to the router
+            for svc in self.replicas:
+                svc.admission = admission
+        self.clock = clock
+        self.latency = LatencyRing(latency_window)
+        self.ntype = replicas[0].ntype
+        self.batch_size = replicas[0].batch_size
+        self._next_rid = 0
+        self._requests: Dict[int, _RouterRequest] = {}
+        self._pending: Dict[int, _RouterRequest] = {}
+        self.counters = {"requests": 0, "split_requests": 0,
+                         "sub_requests": 0, "requests_served": 0,
+                         "requests_expired": 0}
+
+    @classmethod
+    def for_trainer(cls, trainer, num_replicas: int, batch_size: int,
+                    cache_slots: int = 4096, max_staleness_steps: int = 64,
+                    admission=None, clock=time.perf_counter):
+        """N replicas over one trainer.  The total cache budget
+        ``cache_slots`` splits evenly across replicas — shards are
+        disjoint, so the aggregate capacity is preserved, not
+        multiplied."""
+        per_replica = max(1, cache_slots // num_replicas) \
+            if cache_slots > 0 else 0
+        replicas = [GSgnnInferenceService(
+            trainer, batch_size=batch_size, cache_slots=per_replica,
+            max_staleness_steps=max_staleness_steps, clock=clock,
+            admission=admission) for _ in range(num_replicas)]
+        return cls(replicas, admission=admission, clock=clock)
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    # ------------------------------------------------------------------
+    def submit(self, seeds, priority: str = "high",
+               deadline: Optional[float] = None,
+               admitted: bool = False) -> int:
+        seeds = np.asarray(seeds, np.int64).reshape(-1)
+        if len(seeds) == 0:
+            raise ValueError("a serve request needs at least one seed id")
+        if self.admission is not None and not admitted:
+            self.admission.try_admit(len(seeds), priority,
+                                     deadline=deadline)
+        rid = self._next_rid
+        self._next_rid += 1
+        shards = shard_of(seeds, self.num_replicas)
+        parts = []
+        for r in np.unique(shards):
+            positions = np.flatnonzero(shards == r)
+            sub_rid = self.replicas[int(r)].submit(
+                seeds[positions], priority=priority, deadline=deadline,
+                admitted=True)
+            parts.append((int(r), sub_rid, positions))
+        req = _RouterRequest(rid, seeds, parts, self.clock(), priority)
+        self._requests[rid] = req
+        self._pending[rid] = req
+        self.counters["requests"] += 1
+        self.counters["sub_requests"] += len(parts)
+        if len(parts) > 1:
+            self.counters["split_requests"] += 1
+        return rid
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One round-robin pass: each replica sheds + serves one batch.
+        False when every replica was idle."""
+        worked = False
+        for svc in self.replicas:
+            worked = svc.step() or worked
+        self._settle()
+        return worked
+
+    def step_replica(self, i: int) -> bool:
+        """Step one replica only (tests drive out-of-order completion
+        with this)."""
+        worked = self.replicas[i].step()
+        self._settle()
+        return worked
+
+    def _settle(self) -> None:
+        """Mark router requests whose every part completed."""
+        for rid in list(self._pending):
+            req = self._pending[rid]
+            statuses = [self.replicas[r].status(sub)
+                        for r, sub, _ in req.parts]
+            if any(s == "pending" for s in statuses):
+                continue
+            del self._pending[rid]
+            if any(s == "expired" for s in statuses):
+                req.status = "expired"
+                req.t_done = self.clock()
+                self.counters["requests_expired"] += 1
+                continue
+            req.status = "done"
+            req.t_done = max(self.replicas[r].result(sub)["t_done"]
+                             for r, sub, _ in req.parts)
+            self.counters["requests_served"] += 1
+            self.latency.record(req.t_done - req.t_submit, req.t_done)
+
+    def drain(self):
+        while self.step():
+            pass
+
+    # ------------------------------------------------------------------
+    def status(self, rid: int) -> str:
+        req = self._requests.get(rid)
+        return "unknown" if req is None else req.status
+
+    def result(self, rid: int) -> Optional[dict]:
+        """Assembled response: rows fan back from the replica shards
+        into the caller's original row order — ``emb[i]`` answers
+        ``seeds[i]`` exactly as a single-replica serve would."""
+        req = self._requests.get(rid)
+        if req is None or req.status == "pending":
+            return None
+        if req.status == "expired":
+            return {"rid": rid, "status": "expired",
+                    "seeds": req.seeds.copy(),
+                    "latency_s": req.t_done - req.t_submit}
+        emb = out = None
+        for r, sub, positions in req.parts:
+            part = self.replicas[r].result(sub)
+            if emb is None:
+                n = len(req.seeds)
+                emb = np.empty((n,) + part["emb"].shape[1:],
+                               part["emb"].dtype)
+                out = np.empty((n,) + part["out"].shape[1:],
+                               part["out"].dtype)
+            emb[positions] = part["emb"]
+            out[positions] = part["out"]
+        return {"rid": rid, "status": "done", "seeds": req.seeds.copy(),
+                "emb": emb, "out": out,
+                "latency_s": req.t_done - req.t_submit,
+                "t_done": req.t_done}
+
+    def serve(self, seed_lists, priority: str = "high") -> List[dict]:
+        rids = [self.submit(s, priority=priority) for s in seed_lists]
+        self.drain()
+        return [self.result(r) for r in rids]
+
+    # ------------------------------------------------------------------
+    def save_cache(self, directory: str) -> List[str]:
+        paths = []
+        for i, svc in enumerate(self.replicas):
+            p = svc.save_cache(directory, shard=i, of=self.num_replicas)
+            if p:
+                paths.append(p)
+        return paths
+
+    def load_cache(self, directory: str) -> int:
+        """Restore per-replica snapshots; returns total restored
+        entries.  Snapshots taken under a different replica count miss
+        by filename (re-partitioned seed space -> cold start)."""
+        return sum(svc.load_cache(directory, shard=i, of=self.num_replicas)
+                   for i, svc in enumerate(self.replicas))
+
+    # ------------------------------------------------------------------
+    def reset_latency(self) -> None:
+        self.latency.reset()
+        for svc in self.replicas:
+            svc.reset_latency()
+
+    def stats(self) -> dict:
+        """Router counters + latency percentiles, the summed replica
+        counters, per-replica detail, and the live disjointness check:
+        replica cache shards never share a node id."""
+        out = dict(self.counters)
+        out["replicas"] = self.num_replicas
+        out.update(self.latency.summary())
+        per = [svc.stats() for svc in self.replicas]
+        agg = {}
+        for k in ("rows_served", "compute_batches", "computed_rows",
+                  "padding_rows", "warm_rows", "dedup_rows", "cold_misses",
+                  "stale_refreshes", "shed_rows"):
+            agg[k] = sum(p[k] for p in per)
+        out.update(agg)
+        out["hit_rate"] = agg["warm_rows"] / max(agg["rows_served"], 1)
+        caches = [svc.cache for svc in self.replicas
+                  if svc.cache is not None]
+        if caches:
+            ids = [set(c._slot_of) for c in caches]
+            union = set().union(*ids)
+            out["cache"] = {
+                "capacity": sum(c.capacity for c in caches),
+                "entries": sum(len(c) for c in caches),
+                "hits": sum(c.hits for c in caches),
+                "evictions": sum(c.evictions for c in caches),
+            }
+            out["cache_disjoint"] = \
+                len(union) == sum(len(i) for i in ids)
+        if self.admission is not None:
+            out["admission"] = self.admission.stats()
+        out["per_replica"] = per
+        compiles = {p.get("program_compiles") for p in per
+                    if "program_compiles" in p}
+        if compiles:
+            # replicas share the trainer's program cache: still one
+            out["program_compiles"] = max(compiles)
+        return out

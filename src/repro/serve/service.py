@@ -1,28 +1,36 @@
 """Batched GNN inference serving on the device engine.
 
-``GSgnnInferenceService`` glues the three serving pieces together
+``GSgnnInferenceService`` glues the serving pieces together
 (docs/serving.md):
 
 - a :class:`~repro.serve.batcher.ContinuousBatcher` packs queued
   seed-node requests into the device program's one static batch shape
   (padding partial batches — the jitted program never recompiles),
-  splitting oversized requests and deduplicating seeds across requests;
+  splitting oversized requests, deduplicating seeds across requests,
+  and draining higher priority classes first;
 - the trainer's :class:`~repro.trainer.trainers.DeviceInferProgram`
   computes embeddings/logits for the batch's unique cold seeds — one
   fully-jitted sample -> gather -> GNN -> head dispatch;
 - a :class:`~repro.serve.cache.DeviceEmbeddingCache` keeps computed
   rows device-resident, so warm seeds resolve via one in-jit gather and
   skip message passing entirely, with staleness-bounded refresh: an
-  entry older than ``max_staleness_steps`` program steps is recomputed.
+  entry older than ``max_staleness_steps`` program steps is recomputed;
+- an optional :class:`~repro.serve.admission.AdmissionController`
+  bounds the pending-row backlog: over-budget submits raise
+  :class:`~repro.serve.admission.RequestRejected`, and queued requests
+  whose deadline passes are shed before they cost a compute slot.
 
-Determinism contract: the program's per-seed results depend on the
-padded seed vector and the step counter (the sampler's draws are
-positional), so a cold-cache batch is bit-identical to
-``trainer.infer_device`` with the same unique-seed pack and step, and a
-warm hit returns exactly the bits computed at insert time.
+Determinism contract: the inference program's draws are *seed-keyed*
+(``DeviceNeighborSampler.sample(seed_keyed=True)``) — a seed's sampled
+subtree is a pure function of its node id, independent of batch
+composition, padding, position, and the step counter.  Every served row
+is therefore bit-identical to ``trainer.infer_device([seed])``, however
+requests are batched, split, routed across replicas, or replayed from a
+persisted cache.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -32,6 +40,55 @@ from repro.core.sampling import pad_seeds
 from repro.serve.batcher import ContinuousBatcher, ServeRequest
 from repro.serve.cache import DeviceEmbeddingCache
 
+# admission-free services still understand these class names (scheduling
+# rank = position); an AdmissionController overrides with its own order
+_DEFAULT_PRIORITY_ORDER = ("high", "low")
+
+
+def snapshot_file(directory: str, shard: int, of: int) -> str:
+    """Cache snapshot path for replica ``shard`` of ``of``.  The replica
+    count is part of the name on purpose: a restart with a different
+    ``serve.num_replicas`` re-partitions the seed space, so stale-shape
+    snapshots must miss (cold start) instead of loading wrong shards."""
+    return os.path.join(directory, f"cache_{shard}_of_{of}.npz")
+
+
+class LatencyRing:
+    """Fixed-size ring of completed-request latencies — the one code
+    path both ``/stats`` and ``benchmarks/bench_serving.py`` report
+    percentiles from.  ``record`` is O(1); ``summary`` computes
+    p50/p99/req_per_s over the current window.  ``reset`` starts a new
+    measurement window (the bench calls it between phases)."""
+
+    def __init__(self, capacity: int = 2048):
+        self.capacity = int(capacity)
+        self._buf = np.zeros(self.capacity, np.float64)
+        self._n = 0                       # total recorded this window
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def record(self, latency_s: float, now: float) -> None:
+        self._buf[self._n % self.capacity] = latency_s
+        self._n += 1
+        if self._t_first is None:
+            self._t_first = now
+        self._t_last = now
+
+    def reset(self) -> None:
+        self._n = 0
+        self._t_first = self._t_last = None
+
+    def summary(self) -> dict:
+        if self._n == 0:
+            return {"window": 0}
+        lat = self._buf[:min(self._n, self.capacity)] * 1e3
+        out = {"window": self._n,
+               "p50_ms": float(np.percentile(lat, 50)),
+               "p99_ms": float(np.percentile(lat, 99))}
+        span = (self._t_last or 0.0) - (self._t_first or 0.0)
+        out["req_per_s"] = float(self._n / max(span, 1e-9))
+        return out
+
 
 def request_stream(num_nodes: int, num_requests: int = 64,
                    request_size: int = 4, hot_fraction: float = 0.8,
@@ -39,7 +96,9 @@ def request_stream(num_nodes: int, num_requests: int = 64,
     """Synthetic serving traffic: each request draws ``request_size``
     seed ids, from a small hot set with probability ``hot_fraction``
     (the skewed production shape cross-request dedup and the cache are
-    built for), else uniformly from all nodes."""
+    built for), else uniformly from all nodes.  ``seed`` fully
+    determines the stream *and* its hot set — the CLI path passes
+    ``hyperparam.seed``, so a rerun replays identical traffic."""
     rng = np.random.default_rng(seed)
     hot = rng.choice(num_nodes, size=min(int(hot_set), num_nodes),
                      replace=False)
@@ -56,21 +115,25 @@ def request_stream(num_nodes: int, num_requests: int = 64,
 class GSgnnInferenceService:
     """Continuous-batching inference service over one trained model.
 
-    ``submit`` enqueues a request and returns its id; ``step`` processes
-    one batch (False when idle); ``result`` returns a completed
-    request's rows.  ``serve`` is the batch-offline convenience: submit
-    a whole stream, drain, return every response.
+    ``submit`` enqueues a request and returns its id (raising
+    ``RequestRejected`` when an attached admission controller refuses
+    it); ``step`` sheds expired requests and processes one batch (False
+    when idle); ``result`` returns a completed request's rows.
+    ``serve`` is the batch-offline convenience: submit a whole stream,
+    drain, return every response.
 
     ``cache_slots: 0`` disables the cache (every batch computes —
     cold-path behavior, and the parity reference).  ``program`` injects
     a program double for harness tests; by default the trainer's
     ``device_infer_program(batch_size)`` is used (shared across
-    services on one trainer, so the schema compiles once).
+    services on one trainer, so the schema compiles once — N routing
+    replicas over one trainer still compile once).
     """
 
     def __init__(self, trainer=None, batch_size: Optional[int] = None,
                  cache_slots: int = 4096, max_staleness_steps: int = 64,
-                 clock=time.perf_counter, program=None):
+                 clock=time.perf_counter, program=None, admission=None,
+                 latency_window: int = 2048):
         if program is None:
             if trainer is None or batch_size is None:
                 raise ValueError("pass trainer= and batch_size= "
@@ -82,29 +145,73 @@ class GSgnnInferenceService:
         self.cache = DeviceEmbeddingCache(cache_slots, max_staleness_steps) \
             if cache_slots > 0 else None
         self.batcher = ContinuousBatcher(self.batch_size)
-        self._clock = clock
-        self._step_no = 0            # program step counter (RNG fold-in)
+        self.admission = admission
+        self.clock = clock
+        self.latency = LatencyRing(latency_window)
+        self._step_no = 0            # program step counter (staleness age)
         self._next_rid = 0
         self._requests: Dict[int, ServeRequest] = {}
         self.counters = {k: 0 for k in (
             "requests", "rows_served", "compute_batches", "computed_rows",
             "padding_rows", "warm_rows", "dedup_rows", "cold_misses",
-            "stale_refreshes")}
+            "stale_refreshes", "shed_rows", "requests_served",
+            "requests_expired")}
 
     # ------------------------------------------------------------------
-    def submit(self, seeds) -> int:
+    def _rank_of(self, priority: str) -> int:
+        if self.admission is not None:
+            return self.admission.rank(priority)
+        if priority not in _DEFAULT_PRIORITY_ORDER:
+            raise ValueError(f"unknown priority {priority!r}; known: "
+                             f"{list(_DEFAULT_PRIORITY_ORDER)}")
+        return _DEFAULT_PRIORITY_ORDER.index(priority)
+
+    def submit(self, seeds, priority: str = "high",
+               deadline: Optional[float] = None,
+               admitted: bool = False) -> int:
+        """Enqueue a request.  ``deadline`` is an absolute ``clock``
+        value (None = never sheds).  ``admitted=True`` skips the
+        admission check — the router admits once at its own entry and
+        fans sub-requests out pre-admitted."""
+        rank = self._rank_of(priority)
+        seeds = np.asarray(seeds, np.int64).reshape(-1)
+        if self.admission is not None and not admitted:
+            self.admission.try_admit(len(seeds), priority,
+                                     deadline=deadline)
         rid = self._next_rid
         self._next_rid += 1
-        req = ServeRequest(rid=rid, seeds=seeds, t_submit=self._clock())
+        req = ServeRequest(rid=rid, seeds=seeds, t_submit=self.clock(),
+                           priority=priority, rank=rank, deadline=deadline)
         self._requests[rid] = req
         self.batcher.add(req)
         self.counters["requests"] += 1
         return rid
 
-    def step(self) -> bool:
-        """Serve one batch off the queue; False when nothing is queued."""
+    # ------------------------------------------------------------------
+    def _shed_expired(self, now_t: float) -> int:
+        """Drop queued rows of deadline-expired requests; marks the
+        requests expired and releases their admission budget."""
         if not len(self.batcher):
-            return False
+            return 0
+        shed = self.batcher.shed(lambda r: r.expired(now_t))
+        if not shed:
+            return 0
+        for req, _, _ in shed:
+            if req.status == "pending":
+                req.status = "expired"
+                req.t_done = now_t
+                self.counters["requests_expired"] += 1
+        self.counters["shed_rows"] += len(shed)
+        if self.admission is not None:
+            self.admission.release(len(shed))
+        return len(shed)
+
+    def step(self) -> bool:
+        """Shed expired requests, then serve one batch off the queue;
+        False when nothing was done (idle)."""
+        shed = self._shed_expired(self.clock())
+        if not len(self.batcher):
+            return shed > 0
         now = self._step_no
         cache = self.cache
         is_cached = (lambda s: cache.fresh(s, now)) if cache is not None \
@@ -149,8 +256,13 @@ class GSgnnInferenceService:
             else:
                 req.resolve(row, warm[s])
             if req.remaining == 0 and req.t_done is None:
-                req.t_done = self._clock()
+                req.t_done = self.clock()
+                req.status = "done"
+                self.counters["requests_served"] += 1
+                self.latency.record(req.t_done - req.t_submit, req.t_done)
         self.counters["rows_served"] += len(items)
+        if self.admission is not None:
+            self.admission.release(len(items))
         return True
 
     def _gather_warm(self, items, pos, now) -> Dict[int, tuple]:
@@ -184,40 +296,80 @@ class GSgnnInferenceService:
             pass
 
     # ------------------------------------------------------------------
+    def status(self, rid: int) -> str:
+        """``pending`` / ``done`` / ``expired`` / ``unknown``."""
+        req = self._requests.get(rid)
+        return "unknown" if req is None else req.status
+
     def result(self, rid: int) -> Optional[dict]:
         """The completed response for ``rid``: row ``i`` answers seed
         ``seeds[i]`` (duplicates included — padding and dedup never leak
-        into the row count).  None while still in flight."""
+        into the row count).  None while still in flight; an expired
+        request answers with ``status: "expired"`` and no rows."""
         req = self._requests.get(rid)
-        if req is None or req.remaining > 0:
+        if req is None or req.status == "pending":
             return None
-        return {"rid": rid, "seeds": req.seeds.copy(),
+        if req.status == "expired":
+            return {"rid": rid, "status": "expired",
+                    "seeds": req.seeds.copy(),
+                    "latency_s": req.t_done - req.t_submit}
+        return {"rid": rid, "status": "done", "seeds": req.seeds.copy(),
                 "emb": np.stack([p[0] for p in req.rows]),
                 "out": np.stack([p[1] for p in req.rows]),
-                "latency_s": req.t_done - req.t_submit}
+                "latency_s": req.t_done - req.t_submit,
+                "t_done": req.t_done}
 
-    def serve(self, seed_lists) -> List[dict]:
+    def serve(self, seed_lists, priority: str = "high") -> List[dict]:
         """Submit a whole stream, drain it, return responses in order."""
-        rids = [self.submit(s) for s in seed_lists]
+        rids = [self.submit(s, priority=priority) for s in seed_lists]
         self.drain()
         return [self.result(r) for r in rids]
 
     # ------------------------------------------------------------------
+    # cache persistence: warm restarts (docs/serving.md, "Scaling out")
+    # ------------------------------------------------------------------
+    def save_cache(self, directory: str, shard: int = 0, of: int = 1
+                   ) -> Optional[str]:
+        """Snapshot the cache into ``directory`` (shard-named; see
+        ``snapshot_file``).  No-op returning None when caching is off."""
+        if self.cache is None:
+            return None
+        os.makedirs(directory, exist_ok=True)
+        path = snapshot_file(directory, shard, of)
+        self.cache.save(path)
+        return path
+
+    def load_cache(self, directory: str, shard: int = 0, of: int = 1
+                   ) -> int:
+        """Restore a snapshot taken by ``save_cache``; returns the
+        number of restored entries (0 when no snapshot exists or the
+        cache is disabled).  The step clock restarts just past the
+        newest restored insert, so restored entries are warm (age >= 1)
+        under any positive staleness bound and age out from there."""
+        if self.cache is None:
+            return 0
+        path = snapshot_file(directory, shard, of)
+        if not os.path.exists(path):
+            return 0
+        n = self.cache.load(path)
+        if n:
+            self._step_no = int(self.cache._step.max()) + 1
+        return n
+
+    # ------------------------------------------------------------------
+    def reset_latency(self) -> None:
+        """Start a fresh latency window (bench phase boundaries)."""
+        self.latency.reset()
+
     def stats(self) -> dict:
-        done = [r for r in self._requests.values() if r.t_done is not None]
         out = dict(self.counters)
-        out["requests_served"] = len(done)
         rows = max(self.counters["rows_served"], 1)
         out["hit_rate"] = self.counters["warm_rows"] / rows
-        if done:
-            lat = np.asarray([r.t_done - r.t_submit for r in done])
-            out["p50_ms"] = float(np.percentile(lat, 50) * 1e3)
-            out["p99_ms"] = float(np.percentile(lat, 99) * 1e3)
-            span = max(r.t_done for r in done) - \
-                min(r.t_submit for r in done)
-            out["req_per_s"] = float(len(done) / max(span, 1e-9))
+        out.update(self.latency.summary())
         if self.cache is not None:
             out["cache"] = self.cache.stats()
+        if self.admission is not None:
+            out["admission"] = self.admission.stats()
         if hasattr(self.program, "compiles"):
             out["program_compiles"] = self.program.compiles()
         return out

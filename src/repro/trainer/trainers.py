@@ -541,10 +541,11 @@ class _TrainerBase:
         inference-only program once at ``step``.  Returns host arrays
         ``{"emb": (n, hidden), "out": (n, ...)}``.
 
-        This is the serving parity anchor: a cold-cache served batch
-        whose padded seed vector and step counter match is bit-identical
-        (the sampler's draws are positional — per-seed results depend on
-        the whole padded vector, not just the seed's id)."""
+        This is the serving parity anchor: the program's draws are
+        seed-keyed (``sample(seed_keyed=True)``), so each returned row
+        is a pure function of its seed's node id — bit-identical to the
+        same seed served in any batch, at any position, at any step, by
+        any replica."""
         ids = np.asarray(seeds, np.int64).reshape(-1)
         from repro.core.sampling import pad_seeds
         padded, _ = pad_seeds(ids, int(batch_size or len(ids)))
@@ -683,8 +684,14 @@ class DeviceInferProgram:
         nt, plan, schema = self.ntype, self.plan, self.schema
 
         def infer(params, sparse_state, tables, csr, seeds, step):
+            # seed-keyed draws: a seed's sampled subtree is a pure
+            # function of its node id — invariant to batch composition,
+            # padding, position, the step counter, and (therefore)
+            # request splitting across serving replicas.  ``step`` stays
+            # in the signature for staleness bookkeeping only.
+            del step
             masks, dts, frontier = sampler.sample(csr, plan, {nt: seeds},
-                                                  step)
+                                                  0, seed_keyed=True)
             arr = {"masks": masks, "delta_t": dts,
                    "feats": {**{m: tables[m][frontier[m]]
                                 for m in store_nts},

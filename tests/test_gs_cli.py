@@ -145,6 +145,30 @@ def test_nc_train_then_artifact_only_serve(tmp_path):
     assert r["row_shapes"]["emb"] == [16]
 
 
+def test_serve_persist_cache_warm_restart(tmp_path):
+    """`gs --serve` with serve.persist_cache: the embedding cache shards
+    snapshot next to the checkpoint and a restarted server comes back
+    warm — the replayed (hyperparam.seed-seeded) request stream is
+    answered entirely from the restored rows, zero recompute."""
+    from repro.cli.gs import main
+    conf = tmp_path / "nc.yaml"
+    conf.write_text(json.dumps(_tiny_nc(tmp_path)))
+    main(["--cf", str(conf)])
+    args = ["--serve", "--restore-model-path", str(tmp_path / "model"),
+            "--serve.requests", "8", "--serve.request_size", "4",
+            "--serve.num_replicas", "2", "--serve.persist_cache", "true"]
+    r1 = main(args)
+    snap = tmp_path / "model" / "serve_cache"
+    assert r1["cache_restored_entries"] == 0          # first run: cold
+    assert r1["cache_snapshot_dir"] == str(snap)
+    assert sorted(p.name for p in snap.iterdir()) == [
+        "cache_0_of_2.npz", "cache_1_of_2.npz"]
+    r2 = main(args)                                   # warm restart
+    assert r2["cache_restored_entries"] > 0
+    assert r2["hit_rate"] == 1.0 and r2["compute_batches"] == 0
+    assert r2["cache_disjoint"]
+
+
 def test_serve_and_inference_flags_are_exclusive(tmp_path):
     from repro.cli.gs import main
     conf = tmp_path / "nc.yaml"

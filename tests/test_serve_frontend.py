@@ -1,0 +1,153 @@
+"""HTTP transport (repro.serve.frontend): in-process asyncio server over
+an engine double — submit/poll and blocking-infer round trips, row
+parity between split and batched submissions, admission rejections
+mapped onto status codes, and the drain/ready/shutdown protocol."""
+import json
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.serve import (AdmissionController, GSgnnInferenceService,
+                         ReplicaRouter, ServeFrontend)
+from test_serving import _EchoProgram
+
+
+class _SlowEchoProgram(_EchoProgram):
+    """Echo program that takes real wall time per batch, so a submit
+    burst reliably outruns the pump and trips admission control."""
+
+    def __call__(self, seeds, step):
+        time.sleep(0.15)
+        return super().__call__(seeds, step)
+
+
+def _call(base, method, path, body=None, timeout=30):
+    req = urllib.request.Request(
+        base + path, method=method,
+        data=json.dumps(body).encode() if body is not None else None,
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+@pytest.fixture()
+def frontend():
+    """Ephemeral-port front end over a 2-replica echo router with a
+    bounded admission budget; yields (base_url, frontend)."""
+    adm = AdmissionController(max_pending_rows=64,
+                              priorities={"high": 1.0, "low": 0.5})
+    replicas = [GSgnnInferenceService(program=_EchoProgram(4),
+                                      cache_slots=0) for _ in range(2)]
+    front = ServeFrontend(ReplicaRouter(replicas, admission=adm), port=0)
+    front.start()
+    yield f"http://127.0.0.1:{front.port}", front
+    front.stop()
+
+
+def test_infer_submit_result_roundtrip_and_parity(frontend):
+    base, _ = frontend
+    assert _call(base, "GET", "/ready")[0] == 200
+
+    # blocking infer: rows come back in request order, echoing seeds
+    st, out = _call(base, "POST", "/v1/infer",
+                    {"seeds": [3, 1, 4, 1, 5, 9, 2, 6]})
+    assert st == 200 and out["status"] == "done"
+    batched = np.asarray(out["emb"], np.float32)
+    np.testing.assert_array_equal(batched[:, 0],
+                                  np.asarray([3, 1, 4, 1, 5, 9, 2, 6],
+                                             np.float32))
+    np.testing.assert_array_equal(np.asarray(out["out"]), batched * 2.0)
+
+    # the same seeds split across submissions return the same seed rows
+    # (the echo double stamps the step in column 1, so only the seed
+    # column is comparable — the real program is step-free and the full
+    # bit parity lives in test_serve_router / the CI smoke)
+    rows = []
+    for s in [3, 1, 4, 1, 5, 9, 2, 6]:
+        st, one = _call(base, "POST", "/v1/infer", {"seeds": [s]})
+        assert st == 200
+        rows.append(np.asarray(one["emb"], np.float32)[0])
+    np.testing.assert_array_equal(np.stack(rows)[:, 0], batched[:, 0])
+
+    # async submit -> poll
+    st, sub = _call(base, "POST", "/v1/submit", {"seeds": [7, 8]})
+    assert st == 202 and sub["status"] == "pending"
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        st, res = _call(base, "GET", f"/v1/result/{sub['rid']}")
+        if st == 200:
+            break
+        assert st == 202
+        time.sleep(0.01)
+    assert st == 200 and res["status"] == "done"
+    np.testing.assert_array_equal(
+        np.asarray(res["emb"], np.float32)[:, 0],
+        np.asarray([7, 8], np.float32))
+
+    st, stats = _call(base, "GET", "/stats")
+    assert st == 200
+    assert stats["requests_served"] >= 10
+    assert stats["replicas"] == 2 and "p50_ms" in stats
+
+
+def test_error_statuses(frontend):
+    base, _ = frontend
+    assert _call(base, "GET", "/v1/result/12345")[0] == 404
+    assert _call(base, "GET", "/nope")[0] == 404
+    assert _call(base, "POST", "/v1/submit", {"seeds": []})[0] == 400
+    assert _call(base, "POST", "/v1/submit", {})[0] == 400
+    st, out = _call(base, "POST", "/v1/submit",
+                    {"seeds": [1], "priority": "zz"})
+    assert st == 400 and out["error"] == "unknown_priority"
+    # pre-expired deadline: explicit fast rejection, never queued
+    st, out = _call(base, "POST", "/v1/submit",
+                    {"seeds": [1], "deadline_ms": -1})
+    assert st == 429 and out["error"] == "deadline_expired"
+
+
+def test_overload_rejects_low_priority_with_429():
+    adm = AdmissionController(max_pending_rows=16,
+                              priorities={"high": 1.0, "low": 0.5})
+    svc = GSgnnInferenceService(program=_SlowEchoProgram(4),
+                                cache_slots=0, admission=adm)
+    front = ServeFrontend(svc, port=0)
+    front.start()
+    base = f"http://127.0.0.1:{front.port}"
+    try:
+        # fill the queue faster than the slow program drains it
+        st, _ = _call(base, "POST", "/v1/submit",
+                      {"seeds": list(range(12)), "priority": "high"})
+        assert st == 202
+        st, out = _call(base, "POST", "/v1/submit",
+                        {"seeds": [50, 51], "priority": "low"})
+        assert st == 429 and out["error"] == "overload"
+        # high priority still has headroom under the same backlog
+        st, _ = _call(base, "POST", "/v1/submit",
+                      {"seeds": [60], "priority": "high"})
+        assert st == 202
+        _, stats = _call(base, "GET", "/stats")
+        assert stats["admission"]["rejected_overload"] >= 1
+    finally:
+        front.stop()
+
+
+def test_drain_then_shutdown(frontend):
+    base, front = frontend
+    st, _ = _call(base, "POST", "/v1/submit", {"seeds": [1, 2, 3]})
+    assert st == 202
+    assert _call(base, "POST", "/admin/drain")[0] == 200
+    assert _call(base, "GET", "/ready")[0] == 503
+    st, out = _call(base, "POST", "/v1/submit", {"seeds": [4]})
+    assert st == 503 and out["error"] == "draining"
+    st, out = _call(base, "POST", "/admin/shutdown")
+    assert st == 200 and out["status"] == "shutting_down"
+    front._loop_thread.join(timeout=10)
+    assert not front._loop_thread.is_alive()
+    # the admitted request was served, not dropped, during shutdown
+    assert front.engine.status(0) == "done"

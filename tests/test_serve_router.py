@@ -1,0 +1,199 @@
+"""Multi-replica routing (repro.serve.router): hash-partitioned fan-out
+is bit-identical to a single-replica serve (cold and warm), cache shards
+stay disjoint, out-of-order replica completion still matches offline
+inference, and admission budgets flow through the router correctly."""
+import numpy as np
+import pytest
+
+from repro.config import GSConfig
+from repro.runner import TASK_REGISTRY, build_graph
+from repro.serve import (AdmissionController, GSgnnInferenceService,
+                         ReplicaRouter, RequestRejected, shard_of)
+from test_serving import FakeClock, _EchoProgram
+
+B = 16
+
+
+@pytest.fixture(scope="module")
+def nc_trainer():
+    raw = {"task": "node_classification",
+           "gnn": {"hidden": 16, "fanout": [2, 2]},
+           "hyperparam": {"batch_size": B, "num_epochs": 1,
+                          "sample_on_device": True},
+           "input": {"dataset": "mag",
+                     "dataset_conf": {"n_paper": 80, "n_author": 40}},
+           "device_features": True,
+           "node_classification": {}}
+    cfg = GSConfig.from_dict(raw).resolved()
+    return TASK_REGISTRY[cfg.task](cfg, build_graph(cfg)).trainer
+
+
+def _echo_router(n, bsz=4, **kw):
+    replicas = [GSgnnInferenceService(program=_EchoProgram(bsz),
+                                      cache_slots=0) for _ in range(n)]
+    return ReplicaRouter(replicas, **kw)
+
+
+# ---------------------------------------------------------------------------
+# shard_of: stable, total, roughly balanced
+# ---------------------------------------------------------------------------
+def test_shard_of_deterministic_and_in_range():
+    ids = np.arange(1000)
+    a = shard_of(ids, 4)
+    np.testing.assert_array_equal(a, shard_of(ids, 4))
+    assert a.min() >= 0 and a.max() < 4
+    # splitmix64 spreads consecutive ids: every shard gets a fair share
+    counts = np.bincount(a, minlength=4)
+    assert counts.min() > 150
+
+
+def test_shard_of_single_replica_routes_everything_to_zero():
+    assert not shard_of(np.arange(64), 1).any()
+
+
+# ---------------------------------------------------------------------------
+# parity: replicas=4 == replicas=1 == offline, cold and warm
+# ---------------------------------------------------------------------------
+def test_router_parity_cold_warm_and_disjoint_shards(nc_trainer):
+    reqs = [np.array([3, 7, 11, 2, 40, 7]), np.array([5, 9, 9, 1]),
+            np.arange(20), np.array([63])]
+    single = GSgnnInferenceService(nc_trainer, batch_size=B,
+                                   cache_slots=64)
+    router = ReplicaRouter.for_trainer(nc_trainer, 4, batch_size=B,
+                                       cache_slots=64)
+    for label in ("cold", "warm"):
+        ref = single.serve(reqs)
+        got = router.serve(reqs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a["emb"], b["emb"], err_msg=label)
+            np.testing.assert_array_equal(a["out"], b["out"], err_msg=label)
+    s = router.stats()
+    # no hot row is cached twice: shards partition the seed space
+    assert s["cache_disjoint"]
+    entries = [set(r.cache._slot_of) for r in router.replicas]
+    assert sum(len(e) for e in entries) == len(set().union(*entries))
+    assert s["split_requests"] >= 3     # multi-seed requests did split
+    assert s["warm_rows"] > 0           # the second pass was warm
+    # replicas share the trainer's program cache: one compile total
+    assert s["program_compiles"] == 1
+
+
+def test_out_of_order_replica_completion_matches_offline(nc_trainer):
+    """Satellite edge case: a split request whose sub-requests resolve
+    out of order (last replica first) still assembles rows bit-identical
+    to ``trainer.infer_device``, in the caller's row order."""
+    seeds = np.arange(24)
+    router = ReplicaRouter.for_trainer(nc_trainer, 3, batch_size=B,
+                                       cache_slots=0)
+    rid = router.submit(seeds)
+    assert router.status(rid) == "pending"
+    for i in reversed(range(3)):        # drive replicas back to front
+        while router.replicas[i].step() or \
+                len(router.replicas[i].batcher):
+            router.step_replica(i)
+        router.step_replica(i)          # settle after the last batch
+    assert router.status(rid) == "done"
+    resp = router.result(rid)
+    np.testing.assert_array_equal(resp["seeds"], seeds)
+    for i, s in enumerate(seeds):
+        ref = nc_trainer.infer_device(np.array([s]), batch_size=B)
+        np.testing.assert_array_equal(resp["emb"][i], ref["emb"][0])
+        np.testing.assert_array_equal(resp["out"][i], ref["out"][0])
+
+
+# ---------------------------------------------------------------------------
+# admission through the router
+# ---------------------------------------------------------------------------
+def test_router_admits_once_and_releases_on_completion():
+    adm = AdmissionController(max_pending_rows=8)
+    router = _echo_router(2, admission=adm)
+    rid = router.submit(list(range(6)))
+    assert adm.pending_rows == 6
+    assert adm.counters["admitted_requests"] == 1   # one admit, not per part
+    with pytest.raises(RequestRejected, match="overload"):
+        router.submit(list(range(3)))
+    router.drain()
+    assert router.status(rid) == "done"
+    assert adm.pending_rows == 0
+    assert adm.counters["released_rows"] == 6
+
+
+def test_router_expired_part_expires_whole_request():
+    clock = FakeClock()
+    adm = AdmissionController(max_pending_rows=0, clock=clock)
+    router = _echo_router(2, admission=adm, clock=clock)
+    rid = router.submit(list(range(8)), deadline=1.0)
+    clock.t = 2.0
+    router.drain()
+    assert router.status(rid) == "expired"
+    resp = router.result(rid)
+    assert resp["status"] == "expired" and "emb" not in resp
+    assert adm.pending_rows == 0        # shed rows released everywhere
+    assert router.stats()["requests_expired"] == 1
+
+
+def test_router_priorities_rank_consistently_across_layers():
+    adm = AdmissionController(priorities={"rt": 1.0, "batch": 0.9,
+                                          "bulk": 0.5})
+    router = _echo_router(2, admission=adm)
+    rid = router.submit([1, 2, 3], priority="bulk")
+    router.drain()
+    assert router.status(rid) == "done"
+    with pytest.raises(RequestRejected, match="unknown_priority"):
+        router.submit([1], priority="low")
+
+
+# ---------------------------------------------------------------------------
+# persistence: per-shard snapshots, replica-count change = cold start
+# ---------------------------------------------------------------------------
+def test_router_warm_restart_from_shard_snapshots(nc_trainer, tmp_path):
+    reqs = [np.arange(12), np.array([40, 41, 42])]
+    router = ReplicaRouter.for_trainer(nc_trainer, 2, batch_size=B,
+                                       cache_slots=64)
+    before = router.serve(reqs)
+    paths = router.save_cache(str(tmp_path))
+    assert len(paths) == 2
+    restarted = ReplicaRouter.for_trainer(nc_trainer, 2, batch_size=B,
+                                          cache_slots=64)
+    assert restarted.load_cache(str(tmp_path)) == 15
+    after = restarted.serve(reqs)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a["emb"], b["emb"])
+        np.testing.assert_array_equal(a["out"], b["out"])
+    s = restarted.stats()
+    assert s["compute_batches"] == 0 and s["hit_rate"] == 1.0
+
+
+def test_router_replica_count_change_cold_starts(nc_trainer, tmp_path):
+    router = ReplicaRouter.for_trainer(nc_trainer, 2, batch_size=B,
+                                       cache_slots=64)
+    router.serve([np.arange(8)])
+    router.save_cache(str(tmp_path))
+    # snapshots are named per (shard, of): a different replica count
+    # must not load them — the partition changed
+    other = ReplicaRouter.for_trainer(nc_trainer, 3, batch_size=B,
+                                      cache_slots=64)
+    assert other.load_cache(str(tmp_path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# router bookkeeping
+# ---------------------------------------------------------------------------
+def test_router_counters_and_unknown_rid():
+    router = _echo_router(4)
+    assert router.status(99) == "unknown" and router.result(99) is None
+    router.serve([np.arange(16), np.array([7])])
+    s = router.stats()
+    assert s["requests"] == 2 and s["requests_served"] == 2
+    assert s["rows_served"] == 17
+    assert s["sub_requests"] >= 5       # 16 seeds spread over 4 replicas
+    assert s["p50_ms"] >= 0.0 and s["window"] == 2
+    assert len(s["per_replica"]) == 4
+
+
+def test_router_rejects_empty_inputs():
+    with pytest.raises(ValueError, match="at least one replica"):
+        ReplicaRouter([])
+    router = _echo_router(2)
+    with pytest.raises(ValueError, match="at least one seed"):
+        router.submit([])

@@ -9,8 +9,20 @@ from hypothesis import strategies as st
 
 from repro.config import GSConfig
 from repro.runner import TASK_REGISTRY, build_graph
-from repro.serve import (ContinuousBatcher, DeviceEmbeddingCache,
-                         GSgnnInferenceService, ServeRequest)
+from repro.serve import (AdmissionController, ContinuousBatcher,
+                         DeviceEmbeddingCache, GSgnnInferenceService,
+                         LatencyRing, RequestRejected, ServeRequest,
+                         request_stream)
+
+
+class FakeClock:
+    """Settable clock for deadline tests (``clock()`` returns ``t``)."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
 
 B = 16  # serve batch size shared by the real-trainer tests
 
@@ -33,9 +45,9 @@ def nc_trainer():
 # parity: served rows == offline device inference, bit for bit
 # ---------------------------------------------------------------------------
 def test_cold_cache_parity_bit_identical(nc_trainer):
-    """A cold-cache batch is exactly ``trainer.infer_device`` with the
-    same unique-seed pack and step (the sampler's draws are positional,
-    so this is the strongest possible check — no tolerance)."""
+    """A cold-cache batch is exactly ``trainer.infer_device`` over the
+    same seeds (the inference program's draws are seed-keyed, so every
+    row is a pure function of its seed id — no tolerance)."""
     seeds = np.array([3, 7, 11, 2, 40])
     ref = nc_trainer.infer_device(seeds, batch_size=B, step=0)
     svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=0)
@@ -284,3 +296,217 @@ def test_property_cache_never_changes_answers(requests, bsz, slots):
 def test_request_rejects_empty_seed_list():
     with pytest.raises(ValueError, match="at least one seed"):
         ServeRequest(rid=0, seeds=np.array([]), t_submit=0.0)
+
+
+# ---------------------------------------------------------------------------
+# seed-keyed draws: a seed's row is a pure function of its node id
+# ---------------------------------------------------------------------------
+def test_seed_keyed_rows_invariant_to_batch_position_and_step(nc_trainer):
+    """The determinism contract the router is built on: the same seed
+    served alone, in a different batch, at a different padded position,
+    and at a different step returns bit-identical rows."""
+    ref = nc_trainer.infer_device(np.array([13]), batch_size=B, step=0)
+    mixed = nc_trainer.infer_device(np.array([2, 40, 13, 7]),
+                                    batch_size=B, step=9)
+    np.testing.assert_array_equal(mixed["emb"][2], ref["emb"][0])
+    np.testing.assert_array_equal(mixed["out"][2], ref["out"][0])
+    late = nc_trainer.infer_device(np.array([13]), batch_size=B, step=123)
+    np.testing.assert_array_equal(late["emb"], ref["emb"])
+
+
+def test_oversized_all_duplicate_of_inflight_request(nc_trainer):
+    """Edge case: an oversized request (> batch size) whose seeds all
+    duplicate an already-queued request.  Dedup collapses the overlap,
+    the split batches resolve across steps, and every row still equals
+    the offline reference."""
+    first = np.arange(B + 3)                    # in flight, spans batches
+    dup = np.concatenate([first, first])[: B + 5]   # only duplicates
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=64)
+    ra = svc.submit(first)
+    rb = svc.submit(dup)
+    svc.drain()
+    for rid, seeds in ((ra, first), (rb, dup)):
+        resp = svc.result(rid)
+        assert resp["status"] == "done"
+        for i, s in enumerate(seeds):
+            ref = nc_trainer.infer_device(np.array([s]), batch_size=B)
+            np.testing.assert_array_equal(resp["emb"][i], ref["emb"][0])
+    # the duplicate request never took a compute slot of its own
+    assert svc.counters["computed_rows"] == len(first)
+
+
+# ---------------------------------------------------------------------------
+# request_stream determinism (the CLI path seeds it from hyperparam.seed)
+# ---------------------------------------------------------------------------
+def test_request_stream_seeded_replay_is_identical():
+    a = request_stream(500, num_requests=32, request_size=5, seed=11)
+    b = request_stream(500, num_requests=32, request_size=5, seed=11)
+    c = request_stream(500, num_requests=32, request_size=5, seed=12)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+    assert all(len(r) == 5 and r.max() < 500 for r in a)
+
+
+# ---------------------------------------------------------------------------
+# LatencyRing: the one percentile code path /stats and the bench share
+# ---------------------------------------------------------------------------
+def test_latency_ring_percentiles_and_reset():
+    ring = LatencyRing(capacity=8)
+    assert ring.summary() == {"window": 0}
+    for i, lat in enumerate([0.010, 0.020, 0.030, 0.040]):
+        ring.record(lat, now=float(i))
+    s = ring.summary()
+    assert s["window"] == 4
+    assert s["p50_ms"] == pytest.approx(25.0)
+    assert s["p99_ms"] <= 40.0 + 1e-9
+    assert s["req_per_s"] == pytest.approx(4 / 3.0)
+    ring.reset()
+    assert ring.summary() == {"window": 0}
+
+
+def test_latency_ring_window_wraps():
+    ring = LatencyRing(capacity=4)
+    for i in range(10):                 # only the last 4 stay resident
+        ring.record(float(i), now=float(i))
+    s = ring.summary()
+    assert s["window"] == 10
+    assert s["p50_ms"] >= 6_000.0       # old cheap samples rotated out
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_admission_priority_budgets_and_overload():
+    adm = AdmissionController(max_pending_rows=10,
+                              priorities={"high": 1.0, "low": 0.5})
+    assert adm.rank("high") == 0 and adm.rank("low") == 1
+    adm.try_admit(5, "low")             # fills low's whole budget
+    with pytest.raises(RequestRejected, match="overload") as ei:
+        adm.try_admit(1, "low")
+    assert ei.value.reason == "overload" and ei.value.priority == "low"
+    adm.try_admit(5, "high")            # high still has headroom
+    with pytest.raises(RequestRejected, match="overload"):
+        adm.try_admit(1, "high")
+    adm.release(6)
+    adm.try_admit(1, "low")             # budget frees as rows complete
+    s = adm.stats()
+    assert s["rejected_overload"] == 2 and s["rejected_requests"] == 2
+    assert s["pending_rows"] == 5
+
+
+def test_admission_unlimited_budget_still_ranks():
+    adm = AdmissionController(max_pending_rows=0)
+    adm.try_admit(10**6, "low")
+    assert adm.budget_for("high") is None
+    with pytest.raises(RequestRejected, match="unknown_priority"):
+        adm.try_admit(1, "bulk")
+
+
+def test_admission_rejects_expired_deadline_at_submit():
+    clock = FakeClock(5.0)
+    adm = AdmissionController(max_pending_rows=0, clock=clock)
+    with pytest.raises(RequestRejected, match="deadline_expired"):
+        adm.try_admit(1, "high", deadline=4.0)
+    adm.try_admit(1, "high", deadline=6.0)      # future deadline admits
+
+
+def test_admission_drain_protocol():
+    adm = AdmissionController(max_pending_rows=0)
+    adm.try_admit(3, "high")
+    adm.start_drain()
+    assert not adm.ready() and not adm.drained
+    with pytest.raises(RequestRejected, match="draining"):
+        adm.try_admit(1, "high")
+    adm.release(3)
+    assert adm.drained
+
+
+def test_priority_classes_drain_high_first():
+    """Queued low-priority rows never delay a high-priority request:
+    the batch that serves next drains rank 0 before rank 1."""
+    prog = _EchoProgram(2)
+    svc = GSgnnInferenceService(program=prog, cache_slots=0,
+                                admission=AdmissionController())
+    lo = svc.submit([1, 2, 3, 4], priority="low")
+    hi = svc.submit([9, 8], priority="high")
+    svc.step()
+    assert svc.status(hi) == "done"         # served in the first batch
+    assert svc.status(lo) == "pending"
+    svc.drain()
+    assert svc.status(lo) == "done"
+
+
+def test_deadline_shed_releases_budget_and_answers_expired():
+    clock = FakeClock()
+    adm = AdmissionController(max_pending_rows=16, clock=clock)
+    svc = GSgnnInferenceService(program=_EchoProgram(2), cache_slots=0,
+                                admission=adm, clock=clock)
+    dead = svc.submit([1, 2, 3], priority="low", deadline=1.0)
+    live = svc.submit([4, 5], priority="low")
+    clock.t = 2.0                       # deadline passes while queued
+    svc.drain()
+    assert svc.status(dead) == "expired" and svc.status(live) == "done"
+    resp = svc.result(dead)
+    assert resp["status"] == "expired" and "emb" not in resp
+    assert svc.counters["shed_rows"] == 3
+    assert svc.counters["requests_expired"] == 1
+    assert adm.pending_rows == 0        # shed rows returned their budget
+    # none of the shed rows reached the program
+    assert svc.counters["computed_rows"] == 2
+
+
+# ---------------------------------------------------------------------------
+# cache persistence: warm restarts
+# ---------------------------------------------------------------------------
+def test_cache_save_load_roundtrip_bit_exact(tmp_path):
+    c = DeviceEmbeddingCache(4, max_staleness_steps=10)
+    c.insert([5, 6], _rows([5, 6], 4), 3)
+    path = str(tmp_path / "snap.npz")
+    c.save(path)
+    c2 = DeviceEmbeddingCache(4, max_staleness_steps=10)
+    assert c2.load(path) == 2
+    assert 5 in c2 and 6 in c2 and len(c2) == 2
+    slots, stale = c2.lookup([5, 6], 3)
+    assert not stale.any()
+    np.testing.assert_array_equal(
+        np.asarray(c2.gather(np.resize(slots, 4))[0]),
+        np.asarray(c.gather(np.resize(slots, 4))[0]))
+    # LRU state survives too: inserting under pressure evicts the same
+    c2.insert([7, 8], _rows([7, 8], 4), 4)
+    assert len(c2) == 4 and c2.evictions == 0   # free slots were rebuilt
+
+
+def test_cache_load_rejects_capacity_mismatch(tmp_path):
+    c = DeviceEmbeddingCache(4)
+    c.insert([1], _rows([1], 4), 0)
+    path = str(tmp_path / "snap.npz")
+    c.save(path)
+    with pytest.raises(ValueError, match="capacity"):
+        DeviceEmbeddingCache(8).load(path)
+
+
+def test_service_warm_restart_serves_without_compute(nc_trainer,
+                                                     tmp_path):
+    """Persist the cache, restart the service, replay the hot set: the
+    first post-restart batch is all warm (no program dispatch) and
+    returns exactly the pre-restart bits."""
+    seeds = np.array([3, 7, 11, 2])
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=32)
+    before = svc.serve([seeds])[0]
+    svc.save_cache(str(tmp_path))
+    svc2 = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=32)
+    assert svc2.load_cache(str(tmp_path)) == len(seeds)
+    after = svc2.serve([seeds])[0]
+    np.testing.assert_array_equal(after["emb"], before["emb"])
+    np.testing.assert_array_equal(after["out"], before["out"])
+    s = svc2.stats()
+    assert s["compute_batches"] == 0 and s["warm_rows"] == len(seeds)
+    assert s["hit_rate"] == 1.0
+
+
+def test_service_load_cache_missing_snapshot_is_cold_start(nc_trainer,
+                                                           tmp_path):
+    svc = GSgnnInferenceService(nc_trainer, batch_size=B, cache_slots=32)
+    assert svc.load_cache(str(tmp_path / "nowhere")) == 0
+    assert svc.counters["compute_batches"] == 0
