@@ -64,6 +64,55 @@ def _bench_data_parallel(bench: Bench, fast: bool = True):
                   f"loss={r['loss']:.4f} global_batch=1024")
 
 
+def _exchanged_bytes_step(dp: int, batch: int, fanouts, feat_dim: int) -> int:
+    """Analytic collective traffic of one sharded-table step, in bytes
+    (global, all shards).  Every :class:`RaggedExchange` moves statically
+    shaped ``(dp, m)`` buffers, so the traffic is exact from shapes
+    alone: 4 B/slot at construction (the all-gathered int32 id lists),
+    then the payload itemsize per gather (reduce-scatter of the masked
+    owner contributions).  The sampler routes once per layer and pulls
+    col_idx + edge_id as one stacked 8 B payload; the feature store
+    routes the layer-0 frontier and pulls ``feat_dim`` float32 rows."""
+    b = batch // dp
+    per_shard = 0
+    dst = b
+    for f in reversed(list(fanouts)):     # outermost layer first
+        m = dst * f                       # flat draw ids this layer
+        per_shard += dp * m * (4 + 2 * 4)
+        dst = dst + m                     # self rows + sampled neighbours
+    per_shard += dp * dst * (4 + 4 * feat_dim)   # frontier[0] features
+    return per_shard * dp
+
+
+def _bench_sharded(bench: Bench, fast: bool = True):
+    """``shard/`` rows: the sharded-table step at equal global batch on
+    8 fake devices, on a graph whose feature table (262k x 64 f32) is
+    large enough that sharding it is the point.  ``replicated`` keeps
+    every table on every shard (the memory-hungry baseline), ``gspmd``
+    row-shards them and lets the compiler lower the gathers (all-gather
+    fallbacks that scale with *table* size), ``alltoall`` is the explicit
+    ragged-exchange fast path (traffic scales with the *frontier*, not
+    the table).  Acceptance: alltoall beats gspmd, and its gap to
+    replicated is the price of actually fitting the tables."""
+    epochs = 4 if fast else 8
+    kw = dict(n_nodes=262144, avg_degree=10)
+    repl = _dp_child(8, epochs, **kw)
+    bench.add("shard/replicated", repl["step_us"],
+              f"loss={repl['loss']:.4f} global_batch=1024 tables=replicated")
+    gspmd = _dp_child(8, epochs, flags=("shard_tables",),
+                      shard_gather="gspmd", **kw)
+    bench.add("shard/gspmd", gspmd["step_us"],
+              f"slowdown_vs_replicated="
+              f"{gspmd['step_us'] / repl['step_us']:.2f}x "
+              f"loss={gspmd['loss']:.4f}")
+    a2a = _dp_child(8, epochs, flags=("shard_tables",), **kw)
+    xb = _exchanged_bytes_step(8, 1024, (5, 5), 64)
+    bench.add("shard/alltoall", a2a["step_us"],
+              f"speedup_vs_gspmd={gspmd['step_us'] / a2a['step_us']:.2f}x "
+              f"gap_vs_replicated={a2a['step_us'] / repl['step_us']:.2f}x "
+              f"loss={a2a['loss']:.4f} exchanged_bytes_step={xb}")
+
+
 def _bench_link_prediction(bench: Bench, fast: bool = True):
     """``lp_host`` vs ``lp_device`` isolates the sampling location for
     the industrial LP workload (in-batch negatives): both keep features
@@ -118,10 +167,22 @@ def run_smoke(bench: Bench):
                   f"speedup={base / r['step_us']:.2f}x "
                   f"loss={r['loss']:.4f} mrr={r.get('mrr', 0):.4f} "
                   f"global_batch=512")
+    # sharded-table lane: both gather strategies train end to end at 8
+    # devices (the alltoall-vs-gspmd timing claim is the full bench's job)
+    g = _dp_child(8, epochs=2, n_nodes=2048, batch_size=512,
+                  flags=("shard_tables",), shard_gather="gspmd")
+    bench.add("shard/gspmd", g["step_us"],
+              f"loss={g['loss']:.4f} global_batch=512")
+    a = _dp_child(8, epochs=2, n_nodes=2048, batch_size=512,
+                  flags=("shard_tables",))
+    bench.add("shard/alltoall", a["step_us"],
+              f"speedup_vs_gspmd={g['step_us'] / a['step_us']:.2f}x "
+              f"loss={a['loss']:.4f} global_batch=512")
 
 
 def run(bench: Bench, fast: bool = True):
     _bench_data_parallel(bench, fast)
+    _bench_sharded(bench, fast)
     _bench_link_prediction(bench, fast)
     sizes = [(1_000, 100), (10_000, 100)] if fast else \
         [(1_000, 100), (10_000, 100), (100_000, 100)]

@@ -32,6 +32,11 @@ def main():
     ap.add_argument("--epochs", type=int, default=4)
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--shard-tables", action="store_true")
+    ap.add_argument("--shard-gather", default="alltoall",
+                    choices=["alltoall", "gspmd"],
+                    help="sharded-table gather strategy (shard/ rows "
+                         "compare the two at equal global batch)")
+    ap.add_argument("--remote-prefetch", type=int, default=1)
     ap.add_argument("--task", default="node_classification",
                     choices=["node_classification", "link_prediction"])
     ap.add_argument("--host-sampling", action="store_true",
@@ -60,7 +65,9 @@ def main():
                        "num_epochs": args.epochs, "seed": 0,
                        "sample_on_device": not args.host_sampling,
                        "data_parallel": args.dp,
-                       "shard_tables": args.shard_tables},
+                       "shard_tables": args.shard_tables,
+                       "shard_gather": args.shard_gather,
+                       "remote_prefetch": args.remote_prefetch},
         "input": {"dataset": "scaling",
                   "dataset_conf": {"n_nodes": args.n_nodes,
                                    "avg_degree": args.avg_degree}},

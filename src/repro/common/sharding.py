@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisLike = Union[None, str, Tuple[str, ...]]
@@ -85,11 +86,28 @@ def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
-def shard_rows(mesh: Mesh, x, axis: AxisLike = "data"):
-    """Place a (rows, dim) table on the mesh, rows split over ``axis``
-    (replicating if the axis does not divide the row count).  Gathers by
-    global row id against such a table lower to all-to-all/all-gather
-    collectives — the JAX analogue of DistDGL's kvstore feature pull."""
+def padded_row_count(rows: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` >= ``rows``."""
+    return -(-rows // n_shards) * n_shards
+
+
+def shard_rows(mesh: Mesh, x, axis: AxisLike = "data", pad: bool = False):
+    """Place a (rows, dim) table on the mesh, rows split over ``axis``.
+
+    Without ``pad``, an axis that does not divide the row count falls back
+    to replication (explicit ``in_shardings`` are strict about ragged
+    splits).  With ``pad=True`` the table is zero-padded to the next
+    multiple of the axis size first, so every row count shards — callers
+    own stripping the pad rows back off (they are never addressed: valid
+    global ids stay < the unpadded row count)."""
+    if pad and axis is not None:
+        n = axis_size(mesh, axis)
+        rows = x.shape[0]
+        extra = padded_row_count(rows, n) - rows
+        if extra:
+            x = jnp.concatenate(
+                [jnp.asarray(x),
+                 jnp.zeros((extra,) + tuple(x.shape[1:]), dtype=x.dtype)], axis=0)
     spec = best_spec(mesh, x.shape, (axis,) + (None,) * (x.ndim - 1))
     return jax.device_put(x, NamedSharding(mesh, spec))
 
@@ -125,6 +143,95 @@ def shard_batch(mesh: Mesh, x, batch_dim: int = 0, axis: AxisLike = "data"):
     while wish and wish[-1] is None:   # trimmed specs round-trip GSPMD
         wish.pop()
     return jax.device_put(x, NamedSharding(mesh, P(*wish)))
+
+
+@jax.tree_util.register_pytree_node_class
+class RaggedExchange:
+    """Ragged cross-shard row exchange for row-sharded tables under shard_map.
+
+    Each shard requests ``n`` global row ids (``idx``) against a table whose
+    rows are contiguously owned: global row ``r`` lives on shard
+    ``r // rows_per_shard``.  Construction routes the request set once: the
+    id lists are all-gathered (ids only — 4 B/slot), and each shard keeps an
+    ownership mask plus local row offsets for *every* shard's requests.  Any
+    number of payload exchanges can then reuse the routing:
+
+    - :meth:`gather` pulls the requested rows from the owners (forward pass:
+      features, CSR columns, embedding rows) — each owner contributes its
+      rows mask-zeroed and a reduce-scatter hands every shard exactly its
+      own request block.  Because each row has exactly one owner the
+      reduce-scatter carries no actual summation: it degenerates to the
+      ragged all-to-all, but on a dense statically-shaped wire format
+      (no per-destination bucket padding, no recompiles on skewed
+      ownership, and the collective is one XLA reduce-scatter instead of
+      sorted bucket scatters + a transposed all-to-all);
+    - :meth:`scatter_rows` pushes per-request rows back to the owners
+      (backward pass: sparse embedding gradients).
+
+    Shards ship O(requests) rows instead of all-gathering table slices,
+    which is what makes the sharded table the fast path rather than a GSPMD
+    memory fallback.
+    """
+
+    def __init__(self, idx, *, axis_name: str, n_shards: int,
+                 rows_per_shard: int):
+        idx = idx.astype(jnp.int32)
+        all_ids = jax.lax.all_gather(idx, axis_name)      # (n_shards, n)
+        my = jax.lax.axis_index(axis_name)
+        owner = jnp.clip(all_ids // rows_per_shard, 0, n_shards - 1)
+        self.mine = owner == my
+        # non-owned slots clip in-bounds; their looked-up rows are zeroed
+        # by the ownership mask before any collective
+        self.local = jnp.clip(all_ids - my * rows_per_shard,
+                              0, rows_per_shard - 1)
+        self._axis_name = axis_name
+        self._n_shards = n_shards
+        self.n_requests = idx.shape[0]
+
+    def gather(self, local_table):
+        """Return ``table[idx]`` (global semantics) from per-shard rows.
+
+        ``local_table`` is this shard's ``(rows_per_shard, ...)`` block; the
+        result is bit-identical to gathering the requested ids against the
+        replicated table (exactly one owner contributes each slot, so the
+        reduce-scatter sum is ``row + 0``, exact in floating point).
+        """
+        n_shards, n = self._n_shards, self.n_requests
+        tail = local_table.shape[1:]
+        rows = jnp.take(local_table, self.local.reshape(-1), axis=0)
+        rows = rows.reshape((n_shards, n) + tail)
+        mask = self.mine.reshape((n_shards, n) + (1,) * len(tail))
+        contrib = jnp.where(mask, rows, 0)
+        out = jax.lax.psum_scatter(
+            contrib, self._axis_name, scatter_dimension=0, tiled=True)
+        return out.reshape((n,) + tail)
+
+    def scatter_rows(self, rows):
+        """Route per-request rows back to their owning shards.
+
+        ``rows`` is ``(n, ...)`` aligned with the request ids.  Returns
+        ``(payload, local_ids, mask)``: ``payload[s, k]`` is shard ``s``'s
+        ``k``-th request row, destined for local row ``local_ids[s, k]``,
+        valid where ``mask[s, k]`` (this shard owns it).  Callers typically
+        ``.at[local_ids].add`` the mask-zeroed payload (duplicate ids sum,
+        matching the replicated scatter-add).
+        """
+        payload = jax.lax.all_gather(rows, self._axis_name)
+        return payload, self.local, self.mine
+
+    # pytree protocol: routed exchanges flow through scan carries (the
+    # prefetch pipeline holds batch k+1's routing while batch k computes)
+    def tree_flatten(self):
+        children = (self.mine, self.local)
+        aux = (self._axis_name, self._n_shards, self.n_requests)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.mine, obj.local = children
+        obj._axis_name, obj._n_shards, obj.n_requests = aux
+        return obj
 
 
 def constrain_replicated(mesh: Mesh, tree):

@@ -205,8 +205,19 @@ class HyperparamConfig:
     # table layout under data_parallel: false replicates feature / CSR /
     # sparse-embedding tables on every shard (fastest while they fit);
     # true row-shards them over the data axis (memory scales with
-    # devices; gathers lower to collectives)
+    # devices; gathers become explicit row exchanges, see shard_gather)
     shard_tables: bool = _field("bool", False)
+    # gather lowering for row-sharded tables: "alltoall" (default) routes
+    # exactly the requested rows between shards through a ragged
+    # all-to-all exchange inside shard_map; "gspmd" keeps the legacy
+    # sharding-annotated-jit lowering (GSPMD inserts blanket collectives)
+    shard_gather: str = _field("str", "alltoall",
+                               choices=("alltoall", "gspmd"))
+    # remote-row prefetch depth for the alltoall path: 1 (default)
+    # issues batch k+1's row exchanges while batch k's model compute
+    # runs in the epoch scan (double-buffered remote rows on device);
+    # 0 disables the pipeline (each step exchanges synchronously)
+    remote_prefetch: int = _field("int", 1)
 
 
 @dataclasses.dataclass
@@ -456,6 +467,15 @@ class GSConfig:
                            f"be divisible by data_parallel "
                            f"({h.data_parallel}) — every shard carries an "
                            f"equal slice of the global batch")
+        if h.remote_prefetch not in (0, 1):
+            raise _err("hyperparam.remote_prefetch",
+                       "must be 0 (synchronous) or 1 (double-buffered "
+                       "remote rows — deeper pipelines would need more "
+                       "scan-carry buffers than the exchange keeps)")
+        if h.shard_gather != "alltoall" and not h.shard_tables:
+            raise _err("hyperparam.shard_gather",
+                       "only applies with shard_tables: true (replicated "
+                       "tables never exchange rows)")
         if self.serve is not None:
             sv = self.serve
             if sv.batch_size is not None and sv.batch_size <= 0:

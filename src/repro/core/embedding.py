@@ -33,15 +33,27 @@ class SparseEmbedding:
         table = jax.random.normal(rng, (num_nodes, dim), jnp.float32) * 0.1
         self.table = table.astype(dtype)
         self.gsum = jnp.zeros((num_nodes,), jnp.float32)  # adagrad accum
-        if mesh is not None:
-            from repro.common.sharding import replicate, shard_rows
-            if axis is not None and axis in mesh.axis_names \
-                    and num_nodes % mesh.shape[axis] == 0:
-                self.table = shard_rows(mesh, self.table, axis)
-                self.gsum = shard_rows(mesh, self.gsum, axis)
-            else:
-                self.table = replicate(mesh, self.table)
-                self.gsum = replicate(mesh, self.gsum)
+        self._mesh = mesh
+        self._axis = axis if (mesh is not None and axis is not None
+                              and axis in mesh.axis_names) else None
+        self._place()
+
+    def _place(self):
+        """(Re)apply the mesh placement chosen at construction.  Sharded
+        tables are zero-padded to the axis size (pad rows are never looked
+        up, and their adagrad accumulator stays 0 so updates never touch
+        them); ``state_dict`` strips the pad back off."""
+        if self._mesh is None:
+            return
+        from repro.common.sharding import replicate, shard_rows
+        if self._axis is not None:
+            self.table = shard_rows(self._mesh, self.table, self._axis,
+                                    pad=True)
+            self.gsum = shard_rows(self._mesh, self.gsum, self._axis,
+                                   pad=True)
+        else:
+            self.table = replicate(self._mesh, self.table)
+            self.gsum = replicate(self._mesh, self.gsum)
 
     # ------------------------------------------------------------------
     def lookup(self, ids) -> jax.Array:
@@ -66,9 +78,12 @@ class SparseEmbedding:
         self.gsum = self.gsum.at[uids].set(new_gsum_rows)
 
     def state_dict(self):
-        return {"table": np.asarray(self.table),
-                "gsum": np.asarray(self.gsum)}
+        # strip any sharding pad rows: checkpoints always hold exactly
+        # (num_nodes, dim) regardless of mesh layout
+        return {"table": np.asarray(self.table)[:self.num_nodes],
+                "gsum": np.asarray(self.gsum)[:self.num_nodes]}
 
     def load_state_dict(self, st):
-        self.table = jnp.asarray(st["table"])
-        self.gsum = jnp.asarray(st["gsum"])
+        self.table = jnp.asarray(st["table"])[:self.num_nodes]
+        self.gsum = jnp.asarray(st["gsum"])[:self.num_nodes]
+        self._place()

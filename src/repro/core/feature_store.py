@@ -51,8 +51,10 @@ class DeviceFeatureStore:
                 continue
             x = jnp.asarray(f, dtype) if dtype is not None else jnp.asarray(f)
             if mesh is not None:
-                x = (shard_rows(mesh, x, row_axis) if row_axis is not None
-                     else replicate(mesh, x))
+                # pad=True: every row count shards (zero rows appended past
+                # the real ids, which no valid frontier index ever reaches)
+                x = (shard_rows(mesh, x, row_axis, pad=True)
+                     if row_axis is not None else replicate(mesh, x))
             self.tables[nt] = x
 
     def __contains__(self, ntype: str) -> bool:

@@ -59,7 +59,13 @@ class DeviceCSR:
     def from_csc(csc: "CSC", mesh=None, row_axis: Optional[str] = "data",
                  pad_multiple: int = 128) -> "DeviceCSR":
         import jax.numpy as jnp
+        import math
         e = len(csc.indices)
+        if mesh is not None and row_axis is not None:
+            # sharded tables must split evenly over the row axis — pad to
+            # the lcm so shapes stay lane-friendly AND divisible
+            from repro.common.sharding import axis_size
+            pad_multiple = math.lcm(pad_multiple, axis_size(mesh, row_axis))
         # e itself must fit: row_ptr[-1] == e (one past the largest edge id)
         checks = [(e, "edge count"), (int(csc.indptr[-1]), "indptr range")]
         if e:

@@ -321,7 +321,8 @@ class DeviceNeighborSampler:
 
     # ------------------------------------------------------------------
     def sample(self, tables, plan: SamplePlan, seeds, step,
-               exclude=None, dp=None, seed_maps=None, seed_keyed=False):
+               exclude=None, dp=None, seed_maps=None, seed_keyed=False,
+               shard=None):
         """Trace one minibatch draw (call inside jit).
 
         tables: the sampler's ``.tables`` pytree (passed through the jit
@@ -349,6 +350,16 @@ class DeviceNeighborSampler:
         (``DeviceInferProgram``; docs/serving.md); it is mutually
         exclusive with ``dp``, whose bit-stream contract is positional.
 
+        shard: ``(axis_name, n_shards)`` when the CSR ``col_idx``/
+        ``edge_id`` tables are *row-sharded* over the mesh axis (so each
+        shard_map body sees only its local block).  The draw then splits
+        into position math against the replicated ``row_ptr`` plus a
+        :class:`repro.common.sharding.RaggedExchange` that pulls exactly
+        the drawn entries from their owning shards — the same bit stream
+        and positions as the replicated draw, so results stay
+        bit-identical.  Composes with ``dp`` (which governs whose rows of
+        the global bit stream this shard consumes).
+
         seed_maps: optional ``{ntype: (base, stride)}`` trace-time numpy
         local->global row maps of the *seed* block itself, for dp runs
         whose seed layout concatenates several roles per ntype (edge
@@ -373,7 +384,7 @@ class DeviceNeighborSampler:
                              "contract is positional")
         if dp is not None:
             axis_name, n_shards = dp
-            shard = jax.lax.axis_index(axis_name)
+            shard_idx = jax.lax.axis_index(axis_name)
             # local row p of the per-ntype frontier sits at global row
             # base[p] + shard * stride[p] (affine; numpy, trace-time)
             maps = seed_maps if seed_maps is not None else \
@@ -409,14 +420,20 @@ class DeviceNeighborSampler:
                     # generate the global batch's bits (cheap, counter-
                     # based, identical on every shard) and keep our rows
                     base, stride = maps[pe.etype[2]]
-                    rows = jnp.asarray(base) + shard * jnp.asarray(stride)
+                    rows = jnp.asarray(base) + \
+                        shard_idx * jnp.asarray(stride)
                     bits = jax.random.bits(
                         key, (pe.num_dst * n_shards, pe.fanout),
                         jnp.uint32)[rows]
-                nbr, eid, mask = nbr_sample(
-                    t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids, key,
-                    fanout=pe.fanout, use_pallas=self.use_pallas,
-                    interpret=self.interpret, bits=bits)
+                if shard is not None:
+                    nbr, eid, mask = _nbr_sample_sharded(
+                        t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids,
+                        key, fanout=pe.fanout, bits=bits, shard=shard)
+                else:
+                    nbr, eid, mask = nbr_sample(
+                        t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids,
+                        key, fanout=pe.fanout, use_pallas=self.use_pallas,
+                        interpret=self.interpret, bits=bits)
                 if exclude is not None and pe.etype in exclude:
                     hit = _pair_exclusion_hit(nbr, dst_ids,
                                               *exclude[pe.etype])
@@ -446,6 +463,45 @@ class DeviceNeighborSampler:
         layer_masks.reverse()
         layer_dts.reverse()
         return layer_masks, layer_dts, frontier
+
+
+def _nbr_sample_sharded(row_ptr, col_idx_local, edge_id_local, dst_ids, key,
+                        *, fanout, bits, shard):
+    """The ``nbr_sample`` draw against *row-sharded* CSR tables.
+
+    ``row_ptr`` is replicated, so each shard computes the exact same edge
+    positions the replicated oracle would (same bits, same modulo draw,
+    same clip); only the gather differs — the drawn positions are pulled
+    from their owning shards through one
+    :class:`~repro.common.sharding.RaggedExchange`, with ``col_idx`` and
+    ``edge_id`` stacked into a single payload so the drawn entries cross
+    shards in one collective instead of all-gathering table slices.  Must
+    be traced inside ``shard_map`` over the axis in ``shard``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.common.sharding import RaggedExchange
+    from repro.kernels.nbr_sample import segment_bounds_ref
+    axis_name, n_shards = shard
+    dst_ids = dst_ids.astype(jnp.int32)
+    n = dst_ids.shape[0]
+    starts, degs = segment_bounds_ref(row_ptr, dst_ids)
+    if bits is None:
+        bits = jax.random.bits(key, (n, fanout), jnp.uint32)
+    deg_u = jnp.maximum(degs, 1).astype(jnp.uint32)
+    draw = (bits % deg_u[:, None]).astype(jnp.int32)
+    local_e = col_idx_local.shape[0]
+    flat = jnp.clip(starts[:, None] + draw, 0, local_e * n_shards - 1)
+    ex = RaggedExchange(flat.reshape(-1), axis_name=axis_name,
+                        n_shards=n_shards, rows_per_shard=local_e)
+    # one payload exchange for both tables: stack (col, eid) per edge so
+    # the drawn entries cross shards in a single collective
+    pair = jnp.stack([col_idx_local.astype(jnp.int32),
+                      edge_id_local.astype(jnp.int32)], axis=1)
+    got = ex.gather(pair).reshape(n, fanout, 2)
+    nbr, eid = got[..., 0], got[..., 1]
+    mask = jnp.broadcast_to((degs > 0)[:, None], (n, fanout))
+    return nbr, eid, mask
 
 
 def _pair_exclusion_hit(nbr, dst_ids, ex_src, ex_dst):

@@ -276,7 +276,9 @@ class NodeClassificationRunner(TaskRunner):
             self.model, nc.target_ntype, num_classes=nc.num_classes,
             lr=self.hp.lr, rng=self.trainer_rng, sparse_embeds=self.sparse,
             evaluator=GSgnnAccEvaluator(), feature_store=self.store,
-            device_sampler=self.device_sampler, mesh=self.mesh)
+            device_sampler=self.device_sampler, mesh=self.mesh,
+            shard_gather=self.hp.shard_gather,
+            remote_prefetch=self.hp.remote_prefetch)
 
     def _loader(self, ids, shuffle=True):
         return GSgnnNodeDataLoader(
@@ -332,7 +334,9 @@ class NodeRegressionRunner(NodeClassificationRunner):
             self.model, nr.target_ntype, task="node_regression",
             lr=self.hp.lr, rng=self.trainer_rng, sparse_embeds=self.sparse,
             evaluator=GSgnnRegressionEvaluator(), feature_store=self.store,
-            device_sampler=self.device_sampler, mesh=self.mesh)
+            device_sampler=self.device_sampler, mesh=self.mesh,
+            shard_gather=self.hp.shard_gather,
+            remote_prefetch=self.hp.remote_prefetch)
 
 
 # ---------------------------------------------------------------------------
@@ -381,7 +385,9 @@ class _EdgeTaskRunner(TaskRunner):
             task=self.task_name, lr=self.hp.lr, rng=self.trainer_rng,
             sparse_embeds=self.sparse, evaluator=evaluator,
             feature_store=self.store, device_sampler=self.device_sampler,
-            mesh=self.mesh)
+            mesh=self.mesh,
+            shard_gather=self.hp.shard_gather,
+            remote_prefetch=self.hp.remote_prefetch)
 
     def _loader(self, eids, shuffle=True):
         return GSgnnEdgeDataLoader(
@@ -455,6 +461,8 @@ class LinkPredictionRunner(TaskRunner):
             rng=self.trainer_rng, sparse_embeds=self.sparse,
             evaluator=GSgnnMrrEvaluator(), feature_store=self.store,
             device_sampler=self.device_sampler, mesh=self.mesh,
+            shard_gather=self.hp.shard_gather,
+            remote_prefetch=self.hp.remote_prefetch,
             neg_method=lp.neg_method, num_negatives=lp.num_negatives,
             local_nodes=self.local_nodes)
 
@@ -590,6 +598,9 @@ def _serve_ready(cfg: GSConfig) -> GSConfig:
     hp["sample_on_device"] = True
     hp["data_parallel"] = 1
     hp["shard_tables"] = False
+    # an artifact trained with shard_gather: gspmd would fail validation
+    # once shard_tables is forced off — the knob is moot without a mesh
+    hp["shard_gather"] = "alltoall"
     raw["device_features"] = True
     return GSConfig.from_dict(raw)
 

@@ -116,6 +116,23 @@ class ContinuousBatcher:
             self._queues[rank] = kept
         return removed
 
+    def peek_compute_ids(self, is_cached: Callable[[int], bool]
+                         ) -> List[int]:
+        """Dry run of ``next_batch``: the compute set the next call would
+        pull, without consuming the queues.  The serving prefetch peeks
+        at the upcoming batch to dispatch its program call while the
+        current batch's rows are still resolving on host."""
+        compute: List[int] = []
+        in_compute = set()
+        for rank in sorted(self._queues):
+            for _req, _row, seed in self._queues[rank]:
+                if seed not in in_compute and not is_cached(seed):
+                    if len(compute) == self.batch_size:
+                        return compute
+                    compute.append(seed)
+                    in_compute.add(seed)
+        return compute
+
     def next_batch(self, is_cached: Callable[[int], bool]
                    ) -> Tuple[List[tuple], List[int]]:
         """Pull the next batch's items off the queues, best rank first.

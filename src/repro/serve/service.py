@@ -133,7 +133,7 @@ class GSgnnInferenceService:
     def __init__(self, trainer=None, batch_size: Optional[int] = None,
                  cache_slots: int = 4096, max_staleness_steps: int = 64,
                  clock=time.perf_counter, program=None, admission=None,
-                 latency_window: int = 2048):
+                 latency_window: int = 2048, prefetch_next: bool = True):
         if program is None:
             if trainer is None or batch_size is None:
                 raise ValueError("pass trainer= and batch_size= "
@@ -151,11 +151,12 @@ class GSgnnInferenceService:
         self._step_no = 0            # program step counter (staleness age)
         self._next_rid = 0
         self._requests: Dict[int, ServeRequest] = {}
+        self.prefetch_next = bool(prefetch_next)
         self.counters = {k: 0 for k in (
             "requests", "rows_served", "compute_batches", "computed_rows",
             "padding_rows", "warm_rows", "dedup_rows", "cold_misses",
             "stale_refreshes", "shed_rows", "requests_served",
-            "requests_expired")}
+            "requests_expired", "prefetch_dispatches")}
 
     # ------------------------------------------------------------------
     def _rank_of(self, priority: str) -> int:
@@ -242,6 +243,12 @@ class GSgnnInferenceService:
         warm = self._gather_warm(items, pos, now)
         if compute_ids and cache is not None:
             cache.insert(compute_ids, (emb_d, out_d), now)
+        # Prefetch: with rows still queued, peek at the batch the next
+        # step will compute and dispatch its program call now — the
+        # device works on batch k+1 while this batch's rows transfer to
+        # host and resolve below (insert above already happened, so the
+        # peek sees the same cache state next_batch will).
+        self._maybe_prefetch()
         # row accounting (partition of the batch's served rows):
         #   computed_rows — unique seeds the program computed,
         #   dedup_rows   — extra rows that shared a compute slot,
@@ -264,6 +271,27 @@ class GSgnnInferenceService:
         if self.admission is not None:
             self.admission.release(len(items))
         return True
+
+    def _maybe_prefetch(self):
+        """Dispatch the next queued batch's program call ahead of time
+        (no-op when idle, when prefetch is disabled, or when the program
+        has no prefetch slot — e.g. a harness test double)."""
+        if not self.prefetch_next or not len(self.batcher):
+            return
+        prefetch = getattr(self.program, "prefetch", None)
+        if prefetch is None:
+            return
+        nxt = self._step_no
+        cache = self.cache
+        is_cached = (lambda s: cache.fresh(s, nxt)) if cache is not None \
+            else (lambda s: False)
+        nxt_ids = self.batcher.peek_compute_ids(is_cached)
+        if not nxt_ids:
+            return
+        padded, _ = pad_seeds(np.asarray(nxt_ids, np.int64),
+                              self.batch_size)
+        prefetch(padded, nxt)
+        self.counters["prefetch_dispatches"] += 1
 
     def _gather_warm(self, items, pos, now) -> Dict[int, tuple]:
         """Host rows for the batch's cache-resolved seeds: unique warm

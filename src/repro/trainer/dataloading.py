@@ -506,7 +506,11 @@ class PrefetchIterator:
 
     ``transfer`` (optional) runs in the producer thread — e.g. converting
     index blocks to device arrays so the H2D copy also overlaps compute.
-    Exceptions in the producer re-raise at the consumer's next ``next()``.
+    Exceptions in the producer re-raise at the consumer's next ``next()``;
+    a producer that dies without reporting (interpreter teardown killing
+    the daemon thread) raises instead of hanging or silently truncating
+    the epoch, and the thread is joined when the consumer exits early —
+    no orphaned sampler keeps drawing into the next epoch.
     """
 
     _POLL_S = 0.1
@@ -551,7 +555,22 @@ class PrefetchIterator:
         thread.start()
         try:
             while True:
-                kind, value = q.get()
+                try:
+                    kind, value = q.get(timeout=self._POLL_S)
+                except queue.Empty:
+                    if thread.is_alive():
+                        continue
+                    # the producer is gone; whatever it ever enqueued is
+                    # already in the queue, so one non-blocking drain
+                    # distinguishes "sentinel in flight" from "died
+                    # without reporting" (which must raise, not hang)
+                    try:
+                        kind, value = q.get_nowait()
+                    except queue.Empty:
+                        raise RuntimeError(
+                            "prefetch sampler thread died without "
+                            "delivering a batch, an error, or the "
+                            "end-of-epoch sentinel") from None
                 if kind == "done":
                     return
                 if kind == "err":
@@ -559,6 +578,14 @@ class PrefetchIterator:
                 yield value
         finally:
             stop.set()  # unblock the producer if the consumer bails early
+            # drain until the producer notices the stop flag, then join:
+            # it may be blocked on a full queue mid-put
+            while thread.is_alive():
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                thread.join(timeout=self._POLL_S)
 
 
 def host_transfer_bytes(batch, store_ntypes: Sequence[str] = (),

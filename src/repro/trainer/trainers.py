@@ -11,8 +11,14 @@ replicate with mean-all-reduced gradients, and the loss/metrics keep
 their global-batch semantics (docs/pipeline.md §3d).  With replicated
 tables the step is an explicit ``shard_map`` (per-shard local programs,
 bit-identical sample stream to the 1-device run); with row-sharded
-tables (``shard_tables``) it runs under sharding-annotated jit and GSPMD
-lowers cross-shard gathers to collectives.
+tables (``shard_tables``) it is also a ``shard_map``, where every table
+gather and the sparse gradient scatter-back go through an explicit
+ragged all-to-all exchange (``shard_gather: alltoall``, the default —
+shards ship only the rows others drew) and the epoch scan prefetches
+batch k+1's row exchanges under batch k's compute
+(``remote_prefetch``).  ``shard_gather: gspmd`` keeps the legacy
+sharding-annotated-jit lowering, where GSPMD turns cross-shard gathers
+into blanket collectives.
 
 Device-resident pipeline (docs/pipeline.md): pass ``feature_store=``
 a ``repro.core.feature_store.DeviceFeatureStore`` and pair it with loaders
@@ -74,6 +80,25 @@ def _sparse_adagrad_dp(table, gsum, ids, grad_rows, lr, axis_name):
     return table - (scale[:, None] * summed).astype(table.dtype), gsum
 
 
+def _sparse_adagrad_shard(table, gsum, ex, grad_rows, lr):
+    """Sparse adagrad for a *row-sharded* table inside shard_map: each
+    request's gradient row is routed to the shard owning that row through
+    the presampled :class:`~repro.common.sharding.RaggedExchange` (the
+    reverse of the forward gather), scatter-added into a local-block-shaped
+    buffer (duplicate ids sum — the local block of exactly the global
+    duplicate-summed gradient ``_sparse_adagrad_dp`` builds), and the
+    identical adagrad update applied to the owned rows.  No psum: every
+    row has exactly one owner."""
+    payload, local_ids, mask = ex.scatter_rows(grad_rows)
+    rows = jnp.where(mask[..., None], payload, 0).astype(table.dtype)
+    summed = jnp.zeros_like(table).at[local_ids.reshape(-1)].add(
+        rows.reshape((-1,) + rows.shape[2:]))
+    gnorm = jnp.sum(summed.astype(jnp.float32) ** 2, axis=1)
+    gsum = gsum + gnorm          # untouched rows: gnorm == 0, unchanged
+    scale = lr / (jnp.sqrt(gsum) + 1e-10)
+    return table - (scale[:, None] * summed).astype(table.dtype), gsum
+
+
 def _sparse_adagrad(table, gsum, ids, grad_rows, lr):
     """In-jit sparse adagrad with ``SparseEmbedding.apply_sparse_grad``'s
     exact semantics: dedupe ids, sum duplicate-row grads, one adagrad
@@ -112,7 +137,8 @@ class _TrainerBase:
                  lr: float = 1e-3, rng=None,
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
                  evaluator=None, feature_store=None, device_sampler=None,
-                 mesh=None):
+                 mesh=None, shard_gather: str = "alltoall",
+                 remote_prefetch: int = 1):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(rng)
         self.model = model
@@ -131,6 +157,12 @@ class _TrainerBase:
         self.device_sampler = device_sampler
         self.evaluator = evaluator
         self.mesh = mesh
+        if shard_gather not in ("alltoall", "gspmd"):
+            raise ValueError(
+                f"shard_gather must be 'alltoall' or 'gspmd', got "
+                f"{shard_gather!r}")
+        self.shard_gather = shard_gather
+        self.remote_prefetch = int(remote_prefetch)
         if mesh is not None:
             self._place_on_mesh(mesh)
         self._steps: Dict = {}
@@ -372,11 +404,12 @@ class _TrainerBase:
 
     def _dp_tables_replicated(self) -> bool:
         """True when every table the device step reads is fully
-        replicated on the mesh — the layout the fast shard_map path
-        requires (each shard gathers locally; only gradients and the
-        sparse scatter cross shards).  Row-sharded tables
-        (``shard_tables: true``) instead run the sharding-annotated-jit
-        path, where GSPMD lowers cross-shard gathers to collectives."""
+        replicated on the mesh — the layout where each shard gathers
+        locally and only gradients and the sparse scatter cross shards.
+        Row-sharded tables (``shard_tables: true``) instead run the
+        ragged all-to-all shard_map path (``shard_gather: alltoall``) or
+        the legacy sharding-annotated-jit path (``gspmd``), where GSPMD
+        lowers cross-shard gathers to collectives."""
         from jax.sharding import PartitionSpec as P
         leaves = []
         if self.feature_store is not None:
@@ -479,6 +512,202 @@ class _TrainerBase:
             out_specs=(repl, repl, repl, repl, repl, P("data")),
             check_rep=False)
 
+    def _make_device_fns_alltoall(self, plan, batch_size, store_nts,
+                                  sparse_nts):
+        """Data-parallel device step/epoch over *row-sharded* tables with
+        explicit ragged all-to-all gathers (the ``shard_gather: alltoall``
+        fast path).  Structure mirrors ``_make_device_step_shard_map`` —
+        per-shard local programs on a ``batch/n`` slice of the global
+        counter-based streams — but every table gather and the sparse
+        scatter-back go through :class:`~repro.common.sharding
+        .RaggedExchange`: shards ship only the rows others actually drew
+        instead of letting GSPMD all-gather table slices.
+
+        The step splits into two halves along the mutable-state boundary:
+
+        - ``presample`` reads only *frozen* state (seed blocks, CSR,
+          feature-store tables): task expand, the sharded draw (CSR row
+          exchanges), the store-feature row exchange, and the *routing*
+          (id exchange) for the sparse-embedding rows;
+        - ``compute`` reads the mutable state (params, sparse tables):
+          the sparse-row payload gather over the presampled routing, the
+          differentiable loss, optimizer, and the gradient scatter-back
+          through the same routing.
+
+        With ``remote_prefetch > 0`` the epoch scan issues
+        ``presample(k+1)`` before ``compute(k)`` each iteration — the two
+        are dataflow-independent, so XLA overlaps batch k+1's row
+        exchanges with batch k's model compute (remote rows double-buffer
+        in the scan carry).  Semantics are unchanged: the sparse payload
+        gather still sees the post-update tables, so losses are identical
+        to the unpipelined step.
+        """
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.common.sharding import RaggedExchange
+        from repro.gnn.schema import schema_of_plan
+        from repro.trainer.task_programs import device_capability
+        mesh = self.mesh
+        n = int(mesh.shape["data"])
+        sampler = self.device_sampler
+        if batch_size % n != 0:
+            raise ValueError(
+                f"global batch {batch_size} is not divisible by the "
+                f"{n}-way data mesh")
+        missing = device_capability(
+            self.task, neg_method=getattr(self, "neg_method", None),
+            num_negatives=getattr(self, "num_negatives", 0),
+            batch_size=batch_size, data_parallel=n)
+        if missing:
+            raise ValueError(f"sample_on_device: {missing}")
+        program = self._device_program(batch_size // n)
+        got = dict(plan.seed_counts)
+        for nt, c in program.seed_counts().items():
+            if got.get(nt) != c * n:
+                raise ValueError(
+                    f"seed rows for ntype {nt!r} ({got.get(nt)}) are not "
+                    f"{n} x the per-shard layout ({c}) — the loader's "
+                    f"plan and the trainer's task program disagree")
+        local_plan = sampler.plan_for(program.seed_counts())
+        dp = ("data", n)
+        loss_fn = self._build_loss_fn(
+            schema_of_plan(local_plan),
+            head=lambda p, e, a: program.loss(p, e, a, dp=dp))
+        seed_maps = program.seed_maps(n)
+        sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+
+        def spec_of(x):
+            s = getattr(x.sharding, "spec", None)
+            return s if s is not None else P()
+
+        store_tables = (self.feature_store.tables
+                        if self.feature_store is not None else {})
+        # mixed layouts are legal: a table whose rows did not shard (or
+        # was placed replicated) keeps the plain local gather
+        store_sh = {nt: spec_of(store_tables[nt]) != P() for nt in store_nts}
+        sparse_sh = {nt: spec_of(self.sparse_embeds[nt].table) != P()
+                     for nt in sparse_nts}
+        # per-shard row block of each sharded sparse table, captured at
+        # build time (presample never sees the mutable table itself)
+        sparse_rps = {nt: self.sparse_embeds[nt].table.shape[0] // n
+                      for nt in sparse_nts if sparse_sh[nt]}
+        csr_sh = [spec_of(e["col_idx"]) != P()
+                  for e in sampler.tables.values()]
+        if any(csr_sh) and not all(csr_sh):
+            raise ValueError(
+                "mixed sharded/replicated CSR tables in one sampler are "
+                "not supported by the alltoall gather path")
+        shard_arg = dp if csr_sh and all(csr_sh) else None
+
+        def presample(tables, csr, blocks, stepno):
+            seeds, aux_in, exclude = program.expand(blocks, stepno, dp=dp)
+            masks, dts, frontier = sampler.sample(
+                csr, local_plan, seeds, stepno, exclude=exclude,
+                dp=dp, seed_maps=seed_maps, shard=shard_arg)
+            store_feats = {}
+            for nt in store_nts:
+                if store_sh[nt]:
+                    ex = RaggedExchange(
+                        frontier[nt], axis_name="data", n_shards=n,
+                        rows_per_shard=tables[nt].shape[0])
+                    store_feats[nt] = ex.gather(tables[nt])
+                else:
+                    store_feats[nt] = tables[nt][frontier[nt]]
+            sparse_route = {
+                nt: RaggedExchange(frontier[nt], axis_name="data",
+                                   n_shards=n,
+                                   rows_per_shard=sparse_rps[nt])
+                for nt in sparse_nts if sparse_sh[nt]}
+            sparse_ids = {nt: frontier[nt] for nt in sparse_nts
+                          if not sparse_sh[nt]}
+            return {"masks": masks, "dts": dts, "aux_in": aux_in,
+                    "store_feats": store_feats,
+                    "sparse_route": sparse_route,
+                    "sparse_ids": sparse_ids}
+
+        def compute(params, opt_state, stepno, sparse_state, pf):
+            arrays = {"masks": pf["masks"], "delta_t": pf["dts"]}
+            aux_in = pf["aux_in"]
+            feats = dict(pf["store_feats"])
+            for nt in sparse_nts:
+                feats[nt] = (pf["sparse_route"][nt].gather(
+                                 sparse_state[nt][0]) if sparse_sh[nt]
+                             else sparse_state[nt][0][pf["sparse_ids"][nt]])
+
+            def global_loss(p, f):
+                # loss_fn yields the LOCAL masked mean; rescale so the
+                # psum over shards is the GLOBAL masked mean
+                loss, out = loss_fn(p, f, arrays, aux_in, {}, {})
+                den = aux_in["mask"].sum().astype(jnp.float32)
+                gden = jax.lax.psum(den, "data")
+                return loss * den / jnp.maximum(gden, 1.0), out
+
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                global_loss, argnums=(0, 1), has_aux=True)(params, feats)
+            gp = jax.lax.psum(gp, "data")
+            loss = jax.lax.psum(loss, "data")
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state,
+                                                      params, stepno, lr)
+            sparse_state = dict(sparse_state)
+            for nt in sparse_nts:
+                if sparse_sh[nt]:
+                    sparse_state[nt] = _sparse_adagrad_shard(
+                        *sparse_state[nt], pf["sparse_route"][nt], gf[nt],
+                        sparse_lrs[nt])
+                else:
+                    sparse_state[nt] = _sparse_adagrad_dp(
+                        *sparse_state[nt], pf["sparse_ids"][nt], gf[nt],
+                        sparse_lrs[nt], "data")
+            return params, opt_state, stepno + 1, sparse_state, loss, out
+
+        def local_step(params, opt_state, stepno, sparse_state, tables,
+                       csr, blocks):
+            pf = presample(tables, csr, blocks, stepno)
+            return compute(params, opt_state, stepno, sparse_state, pf)
+
+        if self.remote_prefetch > 0:
+            def local_epoch(params, opt_state, stepno, sparse_state,
+                            tables, csr, blocks):
+                tm = jax.tree_util.tree_map
+                pf0 = presample(tables, csr, tm(lambda v: v[0], blocks),
+                                stepno)
+                # xs[k] = blocks[k+1]: each iteration presamples the NEXT
+                # batch before computing the current one (the wrap-around
+                # presample of blocks[0] is discarded — static shapes)
+                shifted = tm(lambda v: jnp.roll(v, -1, axis=0), blocks)
+
+                def body(carry, xs):
+                    p, o, s, sp, pf = carry
+                    pf_next = presample(tables, csr, xs, s + 1)
+                    p, o, s, sp, loss, _ = compute(p, o, s, sp, pf)
+                    return (p, o, s, sp, pf_next), loss
+                (params, opt_state, stepno, sparse_state, _), losses = \
+                    jax.lax.scan(
+                        body,
+                        (params, opt_state, stepno, sparse_state, pf0),
+                        shifted)
+                return params, opt_state, stepno, sparse_state, losses
+        else:
+            local_epoch = self._make_device_epoch(local_step)
+
+        repl = P()
+        sparse_specs = {nt: (spec_of(emb.table), spec_of(emb.gsum))
+                        for nt, emb in self.sparse_embeds.items()}
+        table_specs = {nt: spec_of(t) for nt, t in store_tables.items()}
+        csr_specs = {et: {k: spec_of(t) for k, t in entry.items()}
+                     for et, entry in sampler.tables.items()}
+        common = (repl, repl, repl, sparse_specs, table_specs, csr_specs)
+        step_sm = shard_map(
+            local_step, mesh=mesh, in_specs=common + (P("data"),),
+            out_specs=(repl, repl, repl, sparse_specs, repl, P("data")),
+            check_rep=False)
+        epoch_sm = shard_map(
+            local_epoch, mesh=mesh, in_specs=common + (P(None, "data"),),
+            out_specs=(repl, repl, repl, sparse_specs, repl),
+            check_rep=False)
+        return step_sm, epoch_sm
+
     @staticmethod
     def _make_device_epoch(step):
         """lax.scan the device step over a stacked epoch of seed-block
@@ -515,11 +744,17 @@ class _TrainerBase:
     def _device_fns_for(self, schema, plan, batch_size):
         key = ("device", schema)
         if key not in self._steps:
-            raw = self._make_device_step(schema, plan, batch_size)
+            if (self.mesh is not None and self.shard_gather == "alltoall"
+                    and not self._dp_tables_replicated()):
+                store_nts, sparse_nts = self._store_and_sparse_ntypes(plan)
+                raw_step, raw_epoch = self._make_device_fns_alltoall(
+                    plan, batch_size, store_nts, sparse_nts)
+            else:
+                raw_step = self._make_device_step(schema, plan, batch_size)
+                raw_epoch = self._make_device_epoch(raw_step)
             self._steps[key] = {
-                "step": jax.jit(raw, donate_argnums=(0, 1, 2, 3)),
-                "epoch": jax.jit(self._make_device_epoch(raw),
-                                 donate_argnums=(0, 1, 2, 3)),
+                "step": jax.jit(raw_step, donate_argnums=(0, 1, 2, 3)),
+                "epoch": jax.jit(raw_epoch, donate_argnums=(0, 1, 2, 3)),
             }
         return self._steps[key]
 
@@ -701,22 +936,57 @@ class DeviceInferProgram:
             return emb, (emb if head is None else head(params, emb))
 
         self._jit = jax.jit(infer)
+        # one-slot prefetch: (key, async device result) of a dispatched-
+        # ahead batch.  jax dispatch is async, so ``prefetch`` costs the
+        # host nothing; the next ``__call__`` with the same seed vector
+        # returns the in-flight result instead of dispatching again.
+        self._prefetched = None
 
-    def __call__(self, seeds, step: int = 0):
-        """One padded batch -> device ``(emb, out)`` of shape
-        ``(batch_size, ...)`` (rows beyond the real seeds are padding)."""
-        seeds = jnp.asarray(np.asarray(seeds), jnp.int32)
-        if seeds.shape != (self.batch_size,):
-            raise ValueError(
-                f"expected a padded ({self.batch_size},) seed vector, got "
-                f"shape {tuple(seeds.shape)} — pad with "
-                f"repro.core.sampling.pad_seeds")
+    def _dispatch(self, seeds, step):
         tr = self.trainer
         tables = (tr.feature_store.tables
                   if tr.feature_store is not None else {})
         return self._jit(tr.params, tr._sparse_pack(), tables,
                          tr.device_sampler.tables, seeds,
                          jnp.asarray(step, jnp.int32))
+
+    def _check_seeds(self, seeds):
+        seeds = jnp.asarray(np.asarray(seeds), jnp.int32)
+        if seeds.shape != (self.batch_size,):
+            raise ValueError(
+                f"expected a padded ({self.batch_size},) seed vector, got "
+                f"shape {tuple(seeds.shape)} — pad with "
+                f"repro.core.sampling.pad_seeds")
+        return seeds
+
+    def _key_of(self, seeds):
+        # draws are seed-keyed (``step`` never reaches the trace), so the
+        # seed bytes identify the result; params identity guards against
+        # a restore/training step between prefetch and use
+        return (np.asarray(seeds).tobytes(), id(self.trainer.params))
+
+    def prefetch(self, seeds, step: int = 0):
+        """Dispatch the program for an upcoming batch without waiting:
+        the row gathers and GNN compute for batch k+1 run under batch
+        k's host-side resolution (the serving analogue of the trainer's
+        ``remote_prefetch`` scan pipeline).  Same jit, same static
+        shape — never a new compile."""
+        seeds = self._check_seeds(seeds)
+        key = self._key_of(seeds)
+        if self._prefetched is not None and self._prefetched[0] == key:
+            return
+        self._prefetched = (key, self._dispatch(seeds, step))
+
+    def __call__(self, seeds, step: int = 0):
+        """One padded batch -> device ``(emb, out)`` of shape
+        ``(batch_size, ...)`` (rows beyond the real seeds are padding)."""
+        seeds = self._check_seeds(seeds)
+        if self._prefetched is not None:
+            key, result = self._prefetched
+            self._prefetched = None
+            if key == self._key_of(seeds):
+                return result
+        return self._dispatch(seeds, step)
 
     def compiles(self) -> int:
         return self._jit._cache_size()

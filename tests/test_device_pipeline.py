@@ -274,6 +274,28 @@ def test_prefetch_consumer_can_bail_early():
     it.close()  # generator close -> stop event -> producer exits
 
 
+def test_prefetch_early_exit_joins_producer():
+    """Bailing early joins the sampler thread — no orphaned producer
+    keeps drawing batches into the next epoch's iteration."""
+    import threading
+    it = iter(PrefetchIterator(range(10_000), depth=2))
+    next(it)
+    it.close()
+    assert not any(t.name == "prefetch-sampler" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+def test_prefetch_detects_dead_producer(monkeypatch):
+    """A producer that dies without delivering a batch, an error, or the
+    end sentinel must raise at the consumer, not hang it forever (the
+    never-started thread stands in for a thread killed mid-flight)."""
+    import threading
+    monkeypatch.setattr(threading.Thread, "start", lambda self: None)
+    it = iter(PrefetchIterator(range(5), depth=2))
+    with pytest.raises(RuntimeError, match="died"):
+        next(it)
+
+
 def test_prefetch_with_dataloader_matches_sync(mag):
     loader = _loader(mag, host_features=True)
     sync = [b["seeds"] for b in loader]
