@@ -44,6 +44,18 @@ def main():
                          "the fully-jitted device step")
     ap.add_argument("--neg-method", default="in_batch")
     ap.add_argument("--num-negatives", type=int, default=8)
+    # streaming epoch engine knobs (docs/pipeline.md §3f)
+    ap.add_argument("--epoch-chunks", type=int, default=1)
+    ap.add_argument("--eval-on-device", action="store_true")
+    ap.add_argument("--async-checkpoint", action="store_true")
+    ap.add_argument("--save-model-path", default=None,
+                    help="checkpoint dir: enables the per-epoch engine "
+                         "checkpoint (sync unless --async-checkpoint)")
+    ap.add_argument("--timed-epochs", type=int, default=0,
+                    help="after the warm-up train() (compiles every "
+                         "program), time this many additional epochs "
+                         "end to end — train + eval + checkpoint wall "
+                         "clock per epoch goes out as epoch_wall_us")
     args = ap.parse_args()
 
     os.environ["XLA_FLAGS"] = (
@@ -67,7 +79,10 @@ def main():
                        "data_parallel": args.dp,
                        "shard_tables": args.shard_tables,
                        "shard_gather": args.shard_gather,
-                       "remote_prefetch": args.remote_prefetch},
+                       "remote_prefetch": args.remote_prefetch,
+                       "epoch_chunks": args.epoch_chunks,
+                       "eval_on_device": args.eval_on_device,
+                       "async_checkpoint": args.async_checkpoint},
         "input": {"dataset": "scaling",
                   "dataset_conf": {"n_nodes": args.n_nodes,
                                    "avg_degree": args.avg_degree}},
@@ -77,9 +92,25 @@ def main():
                                   "num_negatives": args.num_negatives}
     else:
         raw["node_classification"] = {}
+    if args.save_model_path:
+        raw["output"] = {"save_model_path": args.save_model_path}
     cfg = GSConfig.from_dict(raw).resolved()
     runner = TASK_REGISTRY[cfg.task](cfg, build_graph(cfg))
     hist = runner.train()["history"]
+    epoch_wall_us = None
+    if args.timed_epochs:
+        # every program is now compiled (same schemas -> trainer._steps
+        # cache hits); time full epochs end to end — staging + train +
+        # eval + checkpoint — through the same fit path train() used
+        import time
+        ids, va, _ = runner.data.train_val_test_nodes(
+            runner.target_ntype, rng=runner._split_rng())
+        t0 = time.time()
+        runner.trainer.fit(runner._train_loader(ids),
+                           runner._loader(va, False),
+                           num_epochs=args.timed_epochs,
+                           **runner._fit_kwargs())
+        epoch_wall_us = (time.time() - t0) / args.timed_epochs * 1e6
     if args.task == "link_prediction":
         n_items = len(runner.tr_e)
         n_batches = n_items // args.batch_size   # LP drops the ragged tail
@@ -92,6 +123,8 @@ def main():
                    ) / n_batches
     out = {"dp": args.dp, "step_us": step_s * 1e6,
            "loss": hist[-1]["loss"], "n_batches": n_batches}
+    if epoch_wall_us is not None:
+        out["epoch_wall_us"] = epoch_wall_us
     metric = runner.trainer.evaluator.name
     if metric in hist[-1]:
         out[metric] = hist[-1][metric]

@@ -23,6 +23,9 @@ SUITES = {
     "fig5": ("bench_lmgnn", "Figure 5: LM+GNN strategies"),
     "featureless": ("bench_featureless",
                     "§3.3.2 ablation: featureless-node options"),
+    "stream": ("bench_stream",
+               "§3f streaming epoch engine: blocking vs chunked vs "
+               "overlapped epoch wall-clock at equal work (8 devices)"),
     "serve": ("bench_serving",
               "§serving: batched inference cold/warm/mixed latency"),
     "serve_router": ("bench_serving_router",

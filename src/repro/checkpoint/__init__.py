@@ -1,3 +1,4 @@
+from repro.checkpoint.async_writer import AsyncCheckpointWriter
 from repro.checkpoint.io import (load_multitask_trainer, load_pytree,
                                  load_run_config, load_trainer,
                                  save_multitask_trainer, save_pytree,
@@ -5,4 +6,5 @@ from repro.checkpoint.io import (load_multitask_trainer, load_pytree,
 
 __all__ = ["save_pytree", "load_pytree", "save_trainer", "load_trainer",
            "save_run_config", "load_run_config",
-           "save_multitask_trainer", "load_multitask_trainer"]
+           "save_multitask_trainer", "load_multitask_trainer",
+           "AsyncCheckpointWriter"]

@@ -1,0 +1,89 @@
+"""Background checkpoint writer for the streaming epoch engine.
+
+The engine dispatches a jitted device *copy* of the trainer state before
+the next epoch's donation invalidates the live buffers, then submits a
+closure here; the writer thread performs the blocking ``np.asarray``
+fetch and the atomic ``checkpoint.io`` save off the training thread, so
+checkpoint I/O hides behind the next epoch's device compute.
+
+Latest-wins queue: if epochs outrun the disk, only the newest pending
+snapshot is written (a job already mid-write always completes — the
+atomic publish in ``io.py`` means readers never see it half-done).
+Writer errors are re-raised on the training thread at the next
+``submit``/``drain``/``close`` rather than dying silently.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class AsyncCheckpointWriter:
+    def __init__(self, name: str = "ckpt-writer"):
+        self._cond = threading.Condition()
+        self._job = None                       # latest pending, or None
+        self._inflight = False
+        self._error = None
+        self._closed = False
+        self._written = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    # -- training-thread API -------------------------------------------
+    def submit(self, write_fn):
+        """Queue ``write_fn()`` (fetch + atomic save).  Replaces any
+        not-yet-started pending job; raises a prior writer error."""
+        with self._cond:
+            self._raise_pending_locked()
+            if self._closed:
+                raise RuntimeError("AsyncCheckpointWriter is closed")
+            self._job = write_fn
+            self._cond.notify_all()
+
+    def drain(self):
+        """Block until everything submitted so far is published."""
+        with self._cond:
+            while self._job is not None or self._inflight:
+                self._cond.wait()
+            self._raise_pending_locked()
+
+    def close(self):
+        """Drain, stop the thread, and surface any writer error."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+        with self._cond:
+            self._raise_pending_locked()
+
+    @property
+    def written(self) -> int:
+        with self._cond:
+            return self._written
+
+    def _raise_pending_locked(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- writer thread -------------------------------------------------
+    def _run(self):
+        while True:
+            with self._cond:
+                while self._job is None and not self._closed:
+                    self._cond.wait()
+                if self._job is None:          # closed with nothing left
+                    return
+                job, self._job = self._job, None
+                self._inflight = True
+            try:
+                job()
+                with self._cond:
+                    self._written += 1
+            except BaseException as e:         # surfaced on next submit
+                with self._cond:
+                    self._error = e
+            finally:
+                with self._cond:
+                    self._inflight = False
+                    self._cond.notify_all()

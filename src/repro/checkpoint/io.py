@@ -4,15 +4,70 @@ Arrays are written per-leaf with '/'-joined tree paths, so checkpoints
 are inspectable with numpy alone and stable across refactors that keep
 key names.  At multi-host scale each host writes its addressable shards
 (the format is shard-appendable); this container writes single-shard.
+
+Every write is atomic: content lands in a temp file in the destination
+directory, is fsynced, and is published with ``os.replace`` (then the
+directory is fsynced).  A reader — including ``--restore-model-path``
+racing an async checkpoint, or a restore after a mid-write crash — only
+ever observes the previous complete file or the new complete file.
+``save_trainer`` additionally orders ``meta.json`` last, so it acts as
+the commit record for the whole checkpoint directory.
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
+import time
 from typing import Any, Dict
 
 import jax
 import numpy as np
+
+# test hook: sleep this many seconds after writing a temp file's content
+# but before publishing it — widens the kill-mid-write window so the
+# atomicity regression test can SIGKILL a writer deterministically
+_WRITE_DELAY_ENV = "REPRO_CKPT_WRITE_DELAY_S"
+
+
+def _fsync_dir(dirpath: str):
+    try:
+        fd = os.open(dirpath or ".", os.O_RDONLY)
+    except OSError:          # platform without directory fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path: str, write_fn):
+    """Run ``write_fn(file_obj)`` against a temp file and atomically
+    publish it at ``path`` (fsync file, ``os.replace``, fsync dir)."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d,
+                               prefix="." + os.path.basename(path) + ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            delay = float(os.environ.get(_WRITE_DELAY_ENV, "0") or 0.0)
+            if delay > 0:
+                time.sleep(delay)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        _fsync_dir(d)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _atomic_json(obj, path: str):
+    data = json.dumps(obj, indent=2, sort_keys=True).encode()
+    _atomic_write(path, lambda f: f.write(data))
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -33,7 +88,8 @@ def _path_str(p) -> str:
 
 def save_pytree(tree, path: str):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    flat = _flatten(tree)
+    _atomic_write(path, lambda f: np.savez(f, **flat))
 
 
 def load_pytree(path: str, like=None):
@@ -67,10 +123,11 @@ def save_trainer(trainer, path: str, config: Dict[str, Any] = None):
     for nt, emb in getattr(trainer, "sparse_embeds", {}).items():
         save_pytree(emb.state_dict(), os.path.join(path, f"emb_{nt}.npz"))
         meta.setdefault("sparse", []).append(nt)
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
     if config is not None:
         save_run_config(config, path)
+    # meta.json last: it is the commit record — a restore that finds it
+    # is guaranteed to find every data file it references
+    _atomic_json(meta, os.path.join(path, "meta.json"))
 
 
 def load_trainer(trainer, path: str):
@@ -93,8 +150,7 @@ def load_trainer(trainer, path: str):
 # ---------------------------------------------------------------------------
 def save_run_config(config: Dict[str, Any], path: str):
     os.makedirs(path, exist_ok=True)
-    with open(os.path.join(path, "config.json"), "w") as f:
-        json.dump(config, f, indent=2, sort_keys=True)
+    _atomic_json(config, os.path.join(path, "config.json"))
 
 
 def load_run_config(path: str) -> Dict[str, Any]:
@@ -121,10 +177,9 @@ def save_multitask_trainer(mt, path: str, config: Dict[str, Any] = None):
     for t in mt.tasks:
         t.trainer.params["gnn"] = mt.shared_gnn
         save_trainer(t.trainer, os.path.join(path, f"task_{t.name}"))
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
     if config is not None:
         save_run_config(config, path)
+    _atomic_json(meta, os.path.join(path, "meta.json"))
 
 
 def load_multitask_trainer(mt, path: str):

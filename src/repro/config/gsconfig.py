@@ -218,6 +218,19 @@ class HyperparamConfig:
     # runs in the epoch scan (double-buffered remote rows on device);
     # 0 disables the pipeline (each step exchanges synchronously)
     remote_prefetch: int = _field("int", 1)
+    # streaming epoch engine (docs/pipeline.md §3f): split the epoch
+    # scan into K chunk dispatches so host work (next-epoch staging,
+    # checkpoint enqueue, loss fetch) hides behind device compute.
+    # Chunking only splits the scan carry — losses are bit-identical
+    # to the unchunked scan for any K.  1 = one dispatch per epoch.
+    epoch_chunks: int = _field("int", 1)
+    # run validation as a jitted device pass (metric numerator /
+    # denominator accumulate in-jit) instead of the per-batch host
+    # evaluate() loop; the eval dispatch overlaps end-of-epoch host work
+    eval_on_device: bool = _field("bool", False)
+    # write per-epoch checkpoints on a background thread (atomic
+    # publish; the final save always happens and is always synchronous)
+    async_checkpoint: bool = _field("bool", False)
 
 
 @dataclasses.dataclass
@@ -455,18 +468,20 @@ class GSConfig:
             raise _err("hyperparam.data_parallel",
                        "must be >= 0 (0 = use every attached device)")
         if h.data_parallel != 1:
-            if not h.sample_on_device:
-                raise _err("hyperparam.data_parallel",
-                           "data-parallel training runs the fully-jitted "
-                           "device pipeline; set hyperparam."
-                           "sample_on_device: true (and device_features: "
-                           "true)")
+            # host-sampled feed modes lower through the same streaming
+            # epoch engine and dp machinery since they share BlockSchema;
+            # only the per-shard batch divisibility contract remains
             if h.data_parallel > 1 and h.batch_size % h.data_parallel != 0:
                 raise _err("hyperparam.data_parallel",
                            f"hyperparam.batch_size ({h.batch_size}) must "
                            f"be divisible by data_parallel "
                            f"({h.data_parallel}) — every shard carries an "
                            f"equal slice of the global batch")
+        if h.epoch_chunks < 1:
+            raise _err("hyperparam.epoch_chunks",
+                       "must be >= 1 (1 = one scan dispatch per epoch; "
+                       "K > 1 splits the epoch into K chunk dispatches "
+                       "so host work overlaps device compute)")
         if h.remote_prefetch not in (0, 1):
             raise _err("hyperparam.remote_prefetch",
                        "must be 0 (synchronous) or 1 (double-buffered "

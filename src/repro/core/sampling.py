@@ -576,6 +576,58 @@ def _extend_row_map(maps, pl_layer: PlanLayer, nt: str, recipe,
             np.concatenate(strides) if len(strides) > 1 else strides[0])
 
 
+def shard_host_perms(local_plan: SamplePlan, local_role_list,
+                     n_shards: int):
+    """Shard-major row permutations of a *host-sampled* global MFG.
+
+    The data-parallel shard_map lowering hands each shard the contiguous
+    ``1/n`` slice of every seed role plus exactly the frontier rows its
+    seeds expand to — the affine decomposition ``_extend_row_map`` builds
+    for device-sampled dp.  This mirrors that recursion in plain numpy
+    over the *local* plan (the per-shard seed layout): for each layer's
+    dst frontier, and for the input frontier, it returns a permutation
+    such that ``global_rows[perm]`` is shard-major — slicing the permuted
+    array into ``n_shards`` equal blocks yields every shard's local
+    frontier in local-plan row order.  Everything is static per schema;
+    apply once per stacked epoch with fancy indexing.
+
+    local_role_list: ``[(ntype, local_rows), ...]`` in role declaration
+    order (the per-shard seed layout, global role length // n_shards).
+
+    Returns ``(dst_perms, input_perms)``: ``dst_perms[li][nt]`` permutes
+    the dst rows of ``local_plan.layers[li]`` scaled to global counts
+    (the rows that layer's masks/Δt index); ``input_perms[nt]`` permutes
+    the input frontier (the feature / index rows).
+    """
+    per_nt: Dict[str, List[int]] = {}
+    for nt, c in local_role_list:
+        per_nt.setdefault(nt, []).append(int(c))
+    maps: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+    for nt, lens in per_nt.items():
+        bases, strides, off_g = [], [], 0
+        for c in lens:
+            bases.append(off_g + np.arange(c, dtype=np.int64))
+            strides.append(np.full(c, c, np.int64))
+            off_g += c * n_shards
+        maps[nt] = (
+            np.concatenate(bases) if len(bases) > 1 else bases[0],
+            np.concatenate(strides) if len(strides) > 1 else strides[0])
+
+    def perm(m):
+        base, stride = m
+        return np.concatenate([base + s * stride for s in range(n_shards)])
+
+    n_layers = len(local_plan.layers)
+    dst_perms: List[Dict[str, np.ndarray]] = [None] * n_layers
+    for li in range(n_layers - 1, -1, -1):
+        pl_layer = local_plan.layers[li]
+        dst_perms[li] = {nt: perm(maps[nt])
+                         for nt, _ in pl_layer.dst_counts}
+        maps = {nt: _extend_row_map(maps, pl_layer, nt, recipe, n_shards)
+                for nt, recipe in pl_layer.parts}
+    return dst_perms, {nt: perm(m) for nt, m in maps.items()}
+
+
 def exclusion_pairs(src: np.ndarray, dst: np.ndarray,
                     pad_to: Optional[int] = None
                     ) -> Tuple[np.ndarray, np.ndarray]:

@@ -176,6 +176,22 @@ class TaskRunner:
         inference) reproduce the same partition for one config."""
         return np.random.default_rng(self.hp.seed)
 
+    def _fit_kwargs(self):
+        """Streaming-engine knobs for ``trainer.fit`` (docs/pipeline.md
+        §3f): the three hyperparam keys, plus a per-epoch atomic
+        checkpoint closure when ``output.save_model_path`` is set so
+        long runs publish restorable state as they go (the final
+        ``save()`` still writes the same path on completion)."""
+        kw = {"epoch_chunks": self.hp.epoch_chunks,
+              "eval_on_device": self.hp.eval_on_device,
+              "async_checkpoint": self.hp.async_checkpoint}
+        path = self.cfg.output.save_model_path
+        if path:
+            cfg_dict = self.cfg.to_dict()
+            kw["checkpoint"] = lambda t: save_trainer(t, path,
+                                                      config=cfg_dict)
+        return kw
+
     # subclasses implement
     def train(self) -> dict:
         raise NotImplementedError
@@ -300,7 +316,8 @@ class NodeClassificationRunner(TaskRunner):
         hist = self.trainer.fit(self._train_loader(tr),
                                 self._loader(va, False),
                                 num_epochs=self.hp.num_epochs, verbose=True,
-                                prefetch=self.hp.prefetch)
+                                prefetch=self.hp.prefetch,
+                                **self._fit_kwargs())
         return {"task": self.task_name, "history": hist}
 
     def inference(self) -> dict:
@@ -407,7 +424,8 @@ class _EdgeTaskRunner(TaskRunner):
         hist = self.trainer.fit(self._train_loader(self.tr_e),
                                 self._loader(self.va_e, False),
                                 num_epochs=self.hp.num_epochs, verbose=True,
-                                prefetch=self.hp.prefetch)
+                                prefetch=self.hp.prefetch,
+                                **self._fit_kwargs())
         return {"task": self.task_name, "history": hist}
 
     def inference(self) -> dict:
@@ -492,7 +510,8 @@ class LinkPredictionRunner(TaskRunner):
         val_loader = self._loader(self.va_e, shuffle=False)
         hist = self.trainer.fit(loader, val_loader,
                                 num_epochs=self.hp.num_epochs, verbose=True,
-                                prefetch=self.hp.prefetch)
+                                prefetch=self.hp.prefetch,
+                                **self._fit_kwargs())
         return {"task": self.task_name, "history": hist}
 
     def inference(self) -> dict:

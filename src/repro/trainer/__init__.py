@@ -5,6 +5,7 @@ from repro.trainer.dataloading import (GSgnnData, GSgnnNodeDataLoader,
                                        GSgnnLinkPredictionDataLoader,
                                        GSgnnLinkPredictionDeviceDataLoader,
                                        PrefetchIterator, host_transfer_bytes)
+from repro.trainer.epoch_engine import StreamingEpochEngine
 from repro.trainer.trainers import (GSgnnNodeTrainer, GSgnnEdgeTrainer,
                                     GSgnnLinkPredictionTrainer)
 from repro.trainer.evaluators import (GSgnnAccEvaluator, GSgnnMrrEvaluator,
@@ -20,4 +21,5 @@ __all__ = [
     "GSgnnNodeTrainer", "GSgnnEdgeTrainer", "GSgnnLinkPredictionTrainer",
     "GSgnnAccEvaluator", "GSgnnMrrEvaluator", "GSgnnRegressionEvaluator",
     "TASK_PROGRAMS", "TaskProgram", "device_capability",
+    "StreamingEpochEngine",
 ]

@@ -18,6 +18,15 @@ Two feature-delivery modes (docs/pipeline.md):
 ``PrefetchIterator`` double-buffers either mode: a sampler thread produces
 batch t+1 while the device runs step t, hiding the CPU sampling cost that
 GraphStorm attributes to DistDGL's separate sampler processes.
+
+Every loader keys one epoch's randomness — shuffle order, host neighbor
+draws, LP negative draws — by ``(seed, epoch)``, so a run resumed from a
+checkpoint at epoch k replays the exact batch stream of the original run
+from epoch k onward (the determinism contract in docs/pipeline.md §3f).
+Host loaders additionally expose ``epoch_blocks(epoch)``: the whole
+epoch stacked into one numpy pytree of static-shape blocks, which lets
+feed modes 1-2 lower through the same scanned streaming epoch engine as
+the device loaders (per-batch ``__iter__`` remains for ``fit_batch``).
 """
 from __future__ import annotations
 
@@ -33,9 +42,9 @@ from repro.core.negative_sampling import (in_batch_negatives, joint_negatives,
                                           local_joint_negatives,
                                           uniform_negatives)
 from repro.core.sampling import (DeviceNeighborSampler, NeighborSampler,
-                                 fetch_features, pad_seeds)
+                                 fetch_features, pad_seeds, plan_sample)
 from repro.core.spot_target import batch_exclusions
-from repro.gnn.schema import arrays_of, schema_of, schema_of_plan
+from repro.gnn.schema import arrays_of, ekey, schema_of, schema_of_plan
 
 
 @dataclasses.dataclass
@@ -62,7 +71,97 @@ class _BaseLoader:
         return self.num_batches
 
 
-class GSgnnNodeDataLoader(_BaseLoader):
+class _HostLoaderBase(_BaseLoader):
+    """Host-sampled loaders (feed modes 1-2).
+
+    Besides the legacy per-batch ``__iter__``, every host loader carries
+    the static-shape metadata the streaming epoch engine needs — a
+    ``SamplePlan``/``BlockSchema`` computed at init (equal to the device
+    sampler's for the same seed counts/fanouts, so host and device feed
+    share one jit cache entry) — and builds stacked epochs via
+    ``epoch_blocks(epoch)``: a numpy pytree whose leaves are
+    ``(num_batches, ...)`` so the trainer scans the whole epoch in one
+    (chunked) dispatch.
+    """
+
+    sample_on_device = False
+    roles = None            # edge/LP loaders: static ((ntype, off, len), ...)
+    neg_shape = None        # LP loaders: "shared" | "per_edge" | "inbatch"
+    num_negatives = 0
+
+    def _init_host(self, seed: int, seed_counts: Dict[str, int]):
+        self.seed = int(seed)
+        self._auto_epoch = 0
+        self.plan = plan_sample(self.graph, self.fanout, seed_counts)
+        self.schema = schema_of_plan(self.plan)
+
+    def _rekey(self, epoch: int):
+        """(seed, epoch)-keyed rng streams: the returned rng shuffles,
+        stream 1 drives the neighbor sampler, stream 2 draws LP
+        negatives — a resumed run replays epoch k's batches exactly."""
+        self.sampler.rng = np.random.default_rng([self.seed, epoch, 1])
+        self.rng = np.random.default_rng([self.seed, epoch, 2])
+        return np.random.default_rng([self.seed, epoch])
+
+    def _iter_epoch(self, epoch: int) -> Iterator[dict]:
+        raise NotImplementedError
+
+    def __iter__(self) -> Iterator[dict]:
+        epoch = self._auto_epoch
+        self._auto_epoch += 1
+        return self._iter_epoch(epoch)
+
+    # -- stacked epochs for the streaming engine -----------------------
+    def epoch_blocks(self, epoch: Optional[int] = None) -> Dict:
+        """One host-sampled epoch stacked into the engine's xs pytree
+        ``{"feats", "masks", "delta_t", "idx", "aux"}`` (numpy leaves
+        shaped ``(num_batches, ...)``; the trainer stages/places them).
+        ``idx`` carries int32 frontier ids for ntypes without host-
+        gathered features (DeviceFeatureStore / SparseEmbedding rows)."""
+        if epoch is None:
+            epoch = self._auto_epoch
+            self._auto_epoch += 1
+        return _stack_pytree([self._batch_xs(b)
+                              for b in self._iter_epoch(int(epoch))])
+
+    def _batch_xs(self, batch: dict) -> Dict:
+        mb, feats = batch["_mb"], batch["_np_feats"]
+        masks, dts = [], []
+        for blk in mb.blocks:
+            masks.append({ekey(eb.etype): np.asarray(eb.mask)
+                          for eb in blk.edge_blocks})
+            dts.append({ekey(eb.etype): np.asarray(eb.delta_t)
+                        for eb in blk.edge_blocks
+                        if eb.delta_t is not None})
+        idx = {}
+        for nt, ids in mb.input_nodes.items():
+            if nt in feats:
+                continue
+            ids = np.asarray(ids)
+            if len(ids) and int(ids.max()) >= 2 ** 31:
+                raise ValueError(
+                    f"frontier ids up to {int(ids.max())} exceed int32 "
+                    f"index range; tables beyond 2^31 rows need an int64 "
+                    f"index path")
+            idx[nt] = ids.astype(np.int32)
+        return {"feats": {nt: np.asarray(f, np.float32)
+                          for nt, f in feats.items()},
+                "masks": masks, "delta_t": dts, "idx": idx,
+                "aux": self._batch_aux(batch)}
+
+    def _batch_aux(self, batch: dict) -> Dict[str, np.ndarray]:
+        # node/edge tasks: labels + seed padding mask (LP overrides)
+        labs = batch.get("labels")
+        if labs is None:
+            labs = np.zeros(self.batch_size, np.int32)
+        elif np.issubdtype(np.asarray(labs).dtype, np.integer):
+            labs = np.asarray(labs, np.int32)   # ship 4B, not host int64
+        else:
+            labs = np.asarray(labs, np.float32)
+        return {"labels": labs, "mask": np.asarray(batch["seed_mask"])}
+
+
+class GSgnnNodeDataLoader(_HostLoaderBase):
     def __init__(self, data: GSgnnData, target_ntype: str,
                  seed_ids: np.ndarray, fanout: Sequence[int],
                  batch_size: int, shuffle: bool = True, seed: int = 0,
@@ -79,9 +178,11 @@ class GSgnnNodeDataLoader(_BaseLoader):
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
         self.num_batches = -(-len(self.seed_ids) // batch_size)
+        self._init_host(seed, {target_ntype: batch_size})
 
-    def __iter__(self) -> Iterator[dict]:
-        order = (self.rng.permutation(len(self.seed_ids))
+    def _iter_epoch(self, epoch: int) -> Iterator[dict]:
+        shuffle_rng = self._rekey(epoch)
+        order = (shuffle_rng.permutation(len(self.seed_ids))
                  if self.shuffle else np.arange(len(self.seed_ids)))
         labels = self.data.node_labels(self.target_ntype)
         for i in range(self.num_batches):
@@ -97,6 +198,7 @@ class GSgnnNodeDataLoader(_BaseLoader):
                 "input_nodes": mb.input_nodes,
                 "seed_mask": mask,
                 "seeds": ids,
+                "_mb": mb, "_np_feats": feats,
             }
             if labels is not None:
                 batch["labels"] = labels[ids]
@@ -146,7 +248,8 @@ class _DeviceLoaderBase(_BaseLoader):
                     f"batch_size={batch_size} is not divisible by the "
                     f"{shards}-way data mesh; every shard must carry an "
                     f"equal slice of the global batch")
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self._auto_epoch = 0
         self.sampler = sampler if sampler is not None else \
             DeviceNeighborSampler(graph, fanout, seed=seed)
         self.plan = self.sampler.plan_for(seed_counts)
@@ -161,8 +264,15 @@ class _DeviceLoaderBase(_BaseLoader):
         raise NotImplementedError
 
     # ---------------------------------------------------------------------
-    def _epoch_numpy(self) -> Dict[str, np.ndarray]:
-        order = (self.rng.permutation(self._num_items())
+    def _epoch_numpy(self, epoch: Optional[int] = None
+                     ) -> Dict[str, np.ndarray]:
+        # batch order is a pure function of (seed, epoch): a run resumed
+        # at epoch k replays the original run's batch stream exactly
+        if epoch is None:
+            epoch = self._auto_epoch
+            self._auto_epoch += 1
+        order = (np.random.default_rng([self.seed, int(epoch)])
+                 .permutation(self._num_items())
                  if self.shuffle else np.arange(self._num_items()))
         B = self.batch_size
         out: Optional[Dict[str, np.ndarray]] = None
@@ -175,12 +285,14 @@ class _DeviceLoaderBase(_BaseLoader):
                 out[k][i] = v
         return out or {}
 
-    def epoch_blocks(self) -> Dict[str, np.ndarray]:
+    def epoch_blocks(self, epoch: Optional[int] = None
+                     ) -> Dict[str, np.ndarray]:
         """One (shuffled) epoch as a dict of stacked
         ``(num_batches, batch_size, ...)`` blocks — the only tensors that
-        cross host->device all epoch.  With a mesh, each block is
+        cross host->device all epoch.  ``epoch`` keys the shuffle (None
+        auto-increments an internal counter).  With a mesh, each block is
         returned already sharded over the data axis (batch dim 1)."""
-        blocks = self._epoch_numpy()
+        blocks = self._epoch_numpy(epoch)
         if self.mesh is None:
             return blocks
         from repro.common.sharding import shard_batch
@@ -350,7 +462,7 @@ class GSgnnLinkPredictionDeviceDataLoader(_DeviceLoaderBase):
                 "seed_mask": np.ones(self.batch_size, bool)}
 
 
-class GSgnnEdgeDataLoader(_BaseLoader):
+class GSgnnEdgeDataLoader(_HostLoaderBase):
     """Edge classification/regression: predicts an attribute of an edge."""
 
     def __init__(self, data: GSgnnData, target_etype: EType,
@@ -358,6 +470,8 @@ class GSgnnEdgeDataLoader(_BaseLoader):
                  batch_size: int, labels: Optional[np.ndarray] = None,
                  shuffle: bool = True, seed: int = 0,
                  host_features: bool = True):
+        from repro.trainer.task_programs import (edge_seed_counts,
+                                                 role_layout)
         self.data = data
         self.graph = data.graph
         self.host_features = host_features
@@ -370,10 +484,14 @@ class GSgnnEdgeDataLoader(_BaseLoader):
         self.rng = np.random.default_rng(seed)
         self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
         self.num_batches = -(-len(self.seed_eids) // batch_size)
+        self._init_host(seed, edge_seed_counts(target_etype, batch_size))
+        self.roles = role_layout([(target_etype[0], batch_size),
+                                  (target_etype[2], batch_size)])[1]
 
-    def __iter__(self) -> Iterator[dict]:
+    def _iter_epoch(self, epoch: int) -> Iterator[dict]:
+        shuffle_rng = self._rekey(epoch)
         s_all, d_all = self.graph.edges[self.etype]
-        order = (self.rng.permutation(len(self.seed_eids))
+        order = (shuffle_rng.permutation(len(self.seed_eids))
                  if self.shuffle else np.arange(len(self.seed_eids)))
         src_t, _, dst_t = self.etype
         for i in range(self.num_batches):
@@ -392,6 +510,7 @@ class GSgnnEdgeDataLoader(_BaseLoader):
                 "input_nodes": mb.input_nodes,
                 "seed_mask": smask,
                 "roles": roles,
+                "_mb": mb, "_np_feats": feats,
             }
             if self.labels is not None:
                 # pad the ragged last batch to the static batch size like
@@ -403,7 +522,7 @@ class GSgnnEdgeDataLoader(_BaseLoader):
             yield batch
 
 
-class GSgnnLinkPredictionDataLoader(_BaseLoader):
+class GSgnnLinkPredictionDataLoader(_HostLoaderBase):
     """LP loader: positive edges + negatives (§3.3.4 / Appendix A).
 
     neg_method: uniform | joint | local_joint | in_batch
@@ -435,6 +554,19 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
         self.sampler = NeighborSampler(self.graph, fanout, seed=seed)
         # drop last ragged batch: static shapes end-to-end
         self.num_batches = len(self.seed_eids) // batch_size
+        from repro.core.negative_sampling import negative_seed_count
+        from repro.trainer.task_programs import lp_seed_counts, role_layout
+        self._init_host(seed, lp_seed_counts(target_etype, batch_size,
+                                             neg_method, num_negatives))
+        rl = [(target_etype[0], batch_size), (target_etype[2], batch_size)]
+        n_neg = negative_seed_count(neg_method, batch_size, num_negatives)
+        if n_neg:
+            rl.append((target_etype[2], n_neg))
+        self.roles = role_layout(rl)[1]
+        self.neg_shape = {"uniform": "per_edge", "joint": "shared",
+                          "local_joint": "shared",
+                          "in_batch": "inbatch"}[neg_method]
+        self.num_negatives = num_negatives
 
     # ------------------------------------------------------------------
     def _negatives(self, dst_batch: np.ndarray):
@@ -452,11 +584,12 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
             return in_batch_negatives(self.rng, n_dst_nodes, dst_batch, self.k)
         raise ValueError(self.neg_method)
 
-    def __iter__(self) -> Iterator[dict]:
+    def _iter_epoch(self, epoch: int) -> Iterator[dict]:
         # positives index the *full* graph's edge list; message passing
         # samples from self.graph (the train graph with eval edges removed)
+        shuffle_rng = self._rekey(epoch)   # also re-keys self.rng (negatives)
         s_all, d_all = self.data.graph.edges[self.etype]
-        order = (self.rng.permutation(len(self.seed_eids))
+        order = (shuffle_rng.permutation(len(self.seed_eids))
                  if self.shuffle else np.arange(len(self.seed_eids)))
         src_t, _, dst_t = self.etype
         B = self.batch_size
@@ -496,7 +629,11 @@ class GSgnnLinkPredictionDataLoader(_BaseLoader):
                 "neg_mask": neg_mask,
                 "num_negatives": self.k,
                 "sampled_neg_nodes": len(neg_seed),
+                "_mb": mb, "_np_feats": feats,
             }
+
+    def _batch_aux(self, batch: dict) -> Dict[str, np.ndarray]:
+        return {"neg_mask": np.asarray(batch["neg_mask"], bool)}
 
 
 class PrefetchIterator:
@@ -626,6 +763,21 @@ def host_transfer_bytes(batch, store_ntypes: Sequence[str] = (),
         if key in batch:
             total += int(np.asarray(batch[key]).nbytes)
     return total
+
+
+def _stack_pytree(items: List):
+    """Stack a list of identically-structured dict/list pytrees of numpy
+    leaves along a new leading axis — one epoch of host-sampled batches
+    becomes the scanned xs of the streaming epoch engine."""
+    if not items:
+        return {}
+    head = items[0]
+    if isinstance(head, dict):
+        return {k: _stack_pytree([it[k] for it in items]) for k in head}
+    if isinstance(head, (list, tuple)):
+        return [_stack_pytree([it[i] for it in items])
+                for i in range(len(head))]
+    return np.stack(items)
 
 
 def _role_concat(role_list: List[Tuple[str, np.ndarray]]):

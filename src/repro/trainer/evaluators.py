@@ -6,9 +6,16 @@ to how the eval stream was batched — including data-parallel runs, where
 a batch arrives as one global array whose shards were computed on
 different devices.  ``update`` accepts numpy or (possibly sharded) jax
 arrays; ``np.asarray`` gathers device shards.
+
+For device-resident validation (``eval_on_device``) each evaluator also
+exposes ``device_update()``: a jit-traceable ``(num, den, *batch) ->
+(num, den)`` kernel with the *same* numerator/denominator contract, so a
+scanned eval pass accumulates the metric state in-jit and the host only
+fetches two scalars per epoch (``merge`` folds them in).
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -19,6 +26,12 @@ class _Accum:
     def reset(self):
         self.num = 0.0
         self.den = 0.0
+
+    def merge(self, num, den):
+        """Fold in a (num, den) pair accumulated elsewhere — e.g. the
+        device metric state fetched after a jitted eval pass."""
+        self.num += float(num)
+        self.den += float(den)
 
 
 class GSgnnAccEvaluator(_Accum):
@@ -68,6 +81,21 @@ class GSgnnAccEvaluator(_Accum):
     def value(self) -> float:
         return self.num / max(self.den, 1.0)
 
+    def device_update(self):
+        multilabel = self.multilabel
+
+        def upd(num, den, logits, labels, mask):
+            m = mask.astype(jnp.float32)
+            if multilabel:
+                pred = logits >= 0.0      # sigmoid(x) >= 0.5 <=> x >= 0
+                ok = (pred == (labels != 0)).astype(jnp.float32)
+                return (num + (ok * m[:, None]).sum(),
+                        den + m.sum() * labels.shape[-1])
+            ok = (logits.argmax(-1) == labels).astype(jnp.float32)
+            return num + (ok * m).sum(), den + m.sum()
+
+        return upd
+
 
 class GSgnnRegressionEvaluator(_Accum):
     name = "rmse"
@@ -86,6 +114,15 @@ class GSgnnRegressionEvaluator(_Accum):
 
     def value(self) -> float:
         return float(np.sqrt(self.num / max(self.den, 1.0)))
+
+    @staticmethod
+    def device_update():
+        def upd(num, den, preds, labels, mask):
+            se = (preds.reshape(-1) - labels.reshape(-1)) ** 2
+            m = mask.astype(jnp.float32).reshape(-1)
+            return num + (se * m).sum(), den + m.sum()
+
+        return upd
 
 
 class GSgnnMrrEvaluator(_Accum):
@@ -111,3 +148,13 @@ class GSgnnMrrEvaluator(_Accum):
 
     def value(self) -> float:
         return self.num / max(self.den, 1.0)
+
+    @staticmethod
+    def device_update():
+        def upd(num, den, pos, neg, neg_mask):
+            neg = jnp.where(neg_mask, neg, -jnp.inf)
+            rank = (1.0 + (neg > pos[:, None]).sum(axis=1)
+                    + 0.5 * (neg == pos[:, None]).sum(axis=1))
+            return num + (1.0 / rank).sum(), den + pos.shape[0]
+
+        return upd

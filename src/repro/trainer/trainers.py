@@ -51,6 +51,11 @@ from repro.gnn.model import GSgnnModel, gnn_apply_blocks, init_gnn_model
 from repro.optim import adamw
 from repro.optim.schedules import cosine_schedule
 
+# device-resident validation draws its sampling steps from a dedicated
+# range of the counter-based stream so eval subgraphs never collide with
+# (or perturb) the training step counter
+_EVAL_STEP_BASE = 1 << 30
+
 
 def _xent(logits, labels, mask):
     ls = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
@@ -759,6 +764,341 @@ class _TrainerBase:
         return self._steps[key]
 
     # ------------------------------------------------------------------
+    # streaming epoch engine (docs/pipeline.md §3f): host-sampled feed
+    # modes 1-2 lower through the SAME scanned-epoch machinery as the
+    # device path — the loader stacks a whole epoch of sampled blocks
+    # into one numpy pytree (``epoch_blocks``) and the step below runs
+    # the per-batch host program (gather -> GNN -> loss -> AdamW +
+    # sparse adagrad) inside the shared ``_make_device_epoch`` scan,
+    # with the same donation and the same data-parallel lowerings.
+    # ------------------------------------------------------------------
+    def _host_ntype_split(self, idx_nts):
+        """Partition the stacked epoch's int32 index blocks (ntypes the
+        loader gathered no host features for) into device-store gathers
+        vs in-carry sparse-embedding rows — the host-path analogue of
+        ``_store_and_sparse_ntypes``."""
+        store = self.feature_store
+        store_nts, sparse_nts = [], []
+        expected = dict(self.model.feat_dims)
+        for nt in idx_nts:
+            if store is not None and nt in store:
+                store_nts.append(nt)
+            elif nt in self.sparse_embeds:
+                sparse_nts.append(nt)
+            elif nt in expected:
+                raise ValueError(
+                    f"ntype {nt!r} has no feature source for the "
+                    f"streaming host engine: the loader gathered no host "
+                    f"feats for it (host_features=False?) and the trainer "
+                    f"has no feature_store/sparse_embeds entry — pass "
+                    f"feature_store= (with matching feat_field)")
+        return tuple(store_nts), tuple(sparse_nts)
+
+    def _make_host_step(self, schema, roles, neg_shape, k, store_nts,
+                        sparse_nts):
+        """One host-sampled batch as a scan-able step with the device
+        step's signature (``csr`` is a dummy — sampling already happened
+        on the host).  With a mesh this is also the GSPMD data-parallel
+        lowering: the program stays global and the partitioner shards
+        it along the batch-sharded inputs."""
+        loss_fn = self._build_loss_fn(schema, roles=roles,
+                                      neg_shape=neg_shape, k=k)
+        sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+        mesh = self.mesh
+        sparse_sh = {nt: (emb.table.sharding, emb.gsum.sharding)
+                     for nt, emb in self.sparse_embeds.items()} \
+            if mesh is not None else {}
+
+        def step(params, opt_state, stepno, sparse_state, tables, csr, xs):
+            del csr
+            arrays = {"masks": xs["masks"], "delta_t": xs["delta_t"]}
+            gather_idx = {nt: xs["idx"][nt] for nt in store_nts}
+            feats = dict(xs["feats"])
+            for nt in sparse_nts:
+                feats[nt] = sparse_state[nt][0][xs["idx"][nt]]
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, feats, arrays, xs["aux"], gather_idx, tables)
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state, params,
+                                                      stepno, lr)
+            sparse_state = dict(sparse_state)
+            for nt in sparse_nts:
+                sparse_state[nt] = _sparse_adagrad(
+                    *sparse_state[nt], xs["idx"][nt], gf[nt],
+                    sparse_lrs[nt])
+            if mesh is not None:
+                from repro.common.sharding import constrain_replicated
+                params = constrain_replicated(mesh, params)
+                opt_state = constrain_replicated(mesh, opt_state)
+                sparse_state = {
+                    nt: tuple(jax.lax.with_sharding_constraint(a, sh)
+                              for a, sh in zip(st, sparse_sh[nt]))
+                    for nt, st in sparse_state.items()}
+            return params, opt_state, stepno + 1, sparse_state, loss, out
+        return step
+
+    def _make_host_fns_shard_map(self, loader, xs, store_nts, sparse_nts):
+        """Host-sampled data-parallel epoch as an explicit shard_map
+        (mesh + replicated tables — mirrors the device path's
+        ``_make_device_step_shard_map``).  The loader samples the
+        GLOBAL batch once (dp1-identical draws); a host-side ``prepare``
+        pass then permutes every frontier-indexed row block shard-major
+        (``shard_host_perms`` — the numpy mirror of the device path's
+        affine seed maps), so a contiguous ``P(None, "data")`` slice of
+        each array IS one shard's local MFG in local-plan row order, and
+        every shard runs the complete local program on its slice.
+        Shards meet only at the global masked-mean rescale, the gradient
+        psum, and the sparse-embedding scatter psum."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.sampling import plan_sample, shard_host_perms
+        from repro.gnn.schema import ekey, schema_of_plan
+        from repro.trainer.task_programs import role_layout
+        mesh = self.mesh
+        n = int(mesh.shape["data"])
+        if self.task == "link_prediction":
+            raise ValueError(
+                "host-sampled link prediction cannot lower through the "
+                "shard_map data-parallel engine (shared/in-batch negative "
+                "scoring reads other shards' dst embeddings) — use a "
+                "sample_on_device loader for data-parallel LP, or "
+                "data_parallel: 1")
+        B = int(loader.batch_size)
+        roles = loader.roles
+        global_rl = ([(nt, ln) for nt, _, ln in roles] if roles is not None
+                     else [(self.target_ntype, B)])
+        if any(ln % n for _, ln in global_rl):
+            raise ValueError(
+                f"every seed role must be divisible by the {n}-way data "
+                f"mesh, got {global_rl}")
+        local_rl = [(nt, ln // n) for nt, ln in global_rl]
+        local_counts, local_roles = role_layout(local_rl)
+        local_plan = plan_sample(loader.graph, loader.fanout, local_counts)
+        local_schema = schema_of_plan(local_plan)
+        dst_perms, input_perms = shard_host_perms(local_plan, local_rl, n)
+        loss_fn = self._build_loss_fn(
+            local_schema, roles=(local_roles if roles is not None else None))
+        sparse_lrs = {nt: self.sparse_embeds[nt].lr for nt in sparse_nts}
+
+        def local_step(params, opt_state, stepno, sparse_state, tables,
+                       csr, xsb):
+            del csr
+            arrays = {"masks": xsb["masks"], "delta_t": xsb["delta_t"]}
+            gather_idx = {nt: xsb["idx"][nt] for nt in store_nts}
+            feats = dict(xsb["feats"])
+            for nt in sparse_nts:
+                feats[nt] = sparse_state[nt][0][xsb["idx"][nt]]
+            aux_in = xsb["aux"]
+
+            def global_loss(p, f):
+                # loss_fn yields the LOCAL masked mean; rescale so the
+                # psum over shards is the GLOBAL masked mean
+                loss, out = loss_fn(p, f, arrays, aux_in, gather_idx,
+                                    tables)
+                den = aux_in["mask"].sum().astype(jnp.float32)
+                gden = jax.lax.psum(den, "data")
+                return loss * den / jnp.maximum(gden, 1.0), out
+
+            (loss, out), (gp, gf) = jax.value_and_grad(
+                global_loss, argnums=(0, 1), has_aux=True)(params, feats)
+            gp = jax.lax.psum(gp, "data")
+            loss = jax.lax.psum(loss, "data")
+            lr = cosine_schedule(stepno, 10, 10000, self.lr)
+            params, opt_state = self.optimizer.update(gp, opt_state,
+                                                      params, stepno, lr)
+            sparse_state = dict(sparse_state)
+            for nt in sparse_nts:
+                sparse_state[nt] = _sparse_adagrad_dp(
+                    *sparse_state[nt], xsb["idx"][nt], gf[nt],
+                    sparse_lrs[nt], "data")
+            return params, opt_state, stepno + 1, sparse_state, loss, out
+
+        local_epoch = self._make_device_epoch(local_step)
+        repl = P()
+        xs_spec = jax.tree_util.tree_map(lambda _: P(None, "data"), xs)
+        epoch_sm = shard_map(
+            local_epoch, mesh=mesh,
+            in_specs=(repl, repl, repl, repl, repl, repl, xs_spec),
+            out_specs=(repl, repl, repl, repl, repl),
+            check_rep=False)
+
+        # which ntype's frontier rows each etype's mask/Δt block indexes
+        layer_dst = [{ekey(pe.etype): pe.etype[2] for pe in pl.edges}
+                     for pl in local_plan.layers]
+
+        def prepare(xs_np):
+            out = dict(xs_np)
+            out["feats"] = {nt: v[:, input_perms[nt]]
+                            for nt, v in xs_np["feats"].items()}
+            out["idx"] = {nt: v[:, input_perms[nt]]
+                          for nt, v in xs_np["idx"].items()}
+            out["masks"] = [
+                {ek: v[:, dst_perms[li][layer_dst[li][ek]]]
+                 for ek, v in layer.items()}
+                for li, layer in enumerate(xs_np["masks"])]
+            out["delta_t"] = [
+                {ek: v[:, dst_perms[li][layer_dst[li][ek]]]
+                 for ek, v in layer.items()}
+                for li, layer in enumerate(xs_np["delta_t"])]
+            return out
+        return epoch_sm, prepare
+
+    def _host_put(self, tree):
+        return jax.tree_util.tree_map(lambda v: self._put_batch(v, 1), tree)
+
+    def _host_fns_for(self, loader, xs):
+        key = ("host", loader.schema, tuple(loader.roles or ()),
+               loader.neg_shape, loader.num_negatives)
+        if key not in self._steps:
+            store_nts, sparse_nts = self._host_ntype_split(sorted(xs["idx"]))
+            if self.mesh is not None and self._dp_tables_replicated():
+                raw_epoch, prepare = self._make_host_fns_shard_map(
+                    loader, xs, store_nts, sparse_nts)
+            else:
+                step = self._make_host_step(
+                    loader.schema, loader.roles, loader.neg_shape,
+                    loader.num_negatives, store_nts, sparse_nts)
+                raw_epoch = self._make_device_epoch(step)
+                prepare = None
+            self._steps[key] = {
+                "epoch": jax.jit(raw_epoch, donate_argnums=(0, 1, 2, 3)),
+                "prepare": prepare, "put": self._host_put}
+        return self._steps[key]
+
+    def _engine_fns_for(self, loader, xs):
+        """Streaming-engine entry point: one scanned (chunkable) epoch
+        program for whichever feed mode the loader speaks, plus the
+        host-side ``prepare`` (shard-major permutation, when the dp
+        lowering needs one) and ``put`` (device placement) closures."""
+        if getattr(loader, "sample_on_device", False):
+            self._check_device_sampler(getattr(loader, "sampler", None))
+            fns = self._device_fns_for(loader.schema, loader.plan,
+                                       loader.batch_size)
+            return {"epoch": fns["epoch"], "prepare": None,
+                    "put": lambda blocks: {k: self._put_batch(v, 1)
+                                           for k, v in blocks.items()}}
+        return self._host_fns_for(loader, xs)
+
+    # ------------------------------------------------------------------
+    # device-resident validation (``eval_on_device``): a jitted scan
+    # over the staged validation epoch accumulates the evaluator's
+    # (num, den) state in-jit — the host fetches two scalars per epoch
+    # instead of running the per-batch ``evaluate`` loop.  Same metric
+    # contract as the host evaluators (``device_update``/``merge``).
+    # ------------------------------------------------------------------
+    def _eval_update(self):
+        """jit-traceable fold of one batch's outputs into the (num, den)
+        metric carry — mirrors ``evaluator.update`` on the host."""
+        upd = self.evaluator.device_update()
+
+        def apply(carry, out, aux_in):
+            num, den = carry
+            return upd(num, den, out, aux_in["labels"], aux_in["mask"])
+        return apply
+
+    def _make_eval_device(self, schema, plan, batch_size):
+        """Eval pass over a device-sampled loader's stacked seed blocks:
+        draws use a dedicated step range (``_EVAL_STEP_BASE + i``) of
+        the counter-based stream, so validation subgraphs are
+        deterministic per batch index and never collide with training
+        steps."""
+        program = self._device_program(batch_size)
+        self._check_plan_matches_program(plan, program)
+        sampler = self.device_sampler
+        store_nts, sparse_nts = self._store_and_sparse_ntypes(plan)
+        loss_fn = self._build_loss_fn(schema, head=program.loss)
+        upd = self._eval_update()
+
+        def eval_epoch(params, sparse_state, tables, csr, blocks):
+            nb = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+            steps = _EVAL_STEP_BASE + jnp.arange(nb, dtype=jnp.int32)
+
+            def body(carry, xsb):
+                blk, step = xsb
+                seeds, aux_in, exclude = program.expand(blk, step)
+                masks, dts, frontier = sampler.sample(csr, plan, seeds,
+                                                      step, exclude=exclude)
+                arrays = {"masks": masks, "delta_t": dts}
+                gather_idx = {nt: frontier[nt] for nt in store_nts}
+                feats = {nt: sparse_state[nt][0][frontier[nt]]
+                         for nt in sparse_nts}
+                _, out = loss_fn(params, feats, arrays, aux_in,
+                                 gather_idx, tables)
+                return upd(carry, out, aux_in), None
+
+            z = jnp.zeros((), jnp.float32)
+            (num, den), _ = jax.lax.scan(body, (z, z), (blocks, steps))
+            return num, den
+        return eval_epoch
+
+    def _make_eval_host(self, schema, roles, neg_shape, k, store_nts,
+                        sparse_nts):
+        loss_fn = self._build_loss_fn(schema, roles=roles,
+                                      neg_shape=neg_shape, k=k)
+        upd = self._eval_update()
+
+        def eval_epoch(params, sparse_state, tables, csr, xs):
+            del csr
+
+            def body(carry, xsb):
+                arrays = {"masks": xsb["masks"], "delta_t": xsb["delta_t"]}
+                gather_idx = {nt: xsb["idx"][nt] for nt in store_nts}
+                feats = dict(xsb["feats"])
+                for nt in sparse_nts:
+                    feats[nt] = sparse_state[nt][0][xsb["idx"][nt]]
+                _, out = loss_fn(params, feats, arrays, xsb["aux"],
+                                 gather_idx, tables)
+                return upd(carry, out, xsb["aux"]), None
+
+            z = jnp.zeros((), jnp.float32)
+            (num, den), _ = jax.lax.scan(body, (z, z), xs)
+            return num, den
+        return eval_epoch
+
+    def _eval_fns_for(self, loader, xs):
+        if self.evaluator is None:
+            raise ValueError("eval_on_device needs the trainer built "
+                             "with an evaluator")
+        if self.mesh is not None and not self._dp_tables_replicated():
+            raise ValueError(
+                "eval_on_device is not supported with row-sharded tables "
+                "(shard_tables: true) — run host evaluation instead "
+                "(eval_on_device: false)")
+        if getattr(loader, "sample_on_device", False):
+            key = ("eval_device", loader.schema)
+            if key not in self._steps:
+                raw = self._make_eval_device(loader.schema, loader.plan,
+                                             loader.batch_size)
+                self._steps[key] = {
+                    "epoch": jax.jit(raw),
+                    "put": lambda blocks: {k: self._put_batch(v, 1)
+                                           for k, v in blocks.items()}}
+            return self._steps[key]
+        key = ("eval_host", loader.schema, tuple(loader.roles or ()),
+               loader.neg_shape, loader.num_negatives)
+        if key not in self._steps:
+            store_nts, sparse_nts = self._host_ntype_split(sorted(xs["idx"]))
+            raw = self._make_eval_host(loader.schema, loader.roles,
+                                       loader.neg_shape,
+                                       loader.num_negatives,
+                                       store_nts, sparse_nts)
+            self._steps[key] = {"epoch": jax.jit(raw),
+                                "put": self._host_put}
+        return self._steps[key]
+
+    def _snapshot_fn(self):
+        """Jitted device copy of the (params, opt_state, stepno, sparse)
+        carry: dispatched by the engine before the next epoch's donation
+        can recycle the live buffers, so async checkpoint writers read a
+        stable snapshot."""
+        key = ("snapshot",)
+        if key not in self._steps:
+            self._steps[key] = jax.jit(
+                lambda c: jax.tree_util.tree_map(jnp.copy, c))
+        return self._steps[key]
+
+    # ------------------------------------------------------------------
     # inference-only device program (serving / offline reference): the
     # same sample -> gather -> GNN chain as the device step, but ending
     # at the task's serve head — no loss, no optimizer, params untouched
@@ -812,33 +1152,6 @@ class _TrainerBase:
         self._sparse_unpack(state)
         return float(loss), out
 
-    def _fit_device(self, loader, val_loader=None, num_epochs: int = 1,
-                    verbose: bool = False):
-        self._check_device_sampler(getattr(loader, "sampler", None))
-        fns = self._device_fns_for(loader.schema, loader.plan,
-                                   loader.batch_size)
-        tables = (self.feature_store.tables
-                  if self.feature_store is not None else {})
-        csr = self.device_sampler.tables
-        for epoch in range(num_epochs):
-            blocks = {k: self._put_batch(v, 1)
-                      for k, v in loader.epoch_blocks().items()}
-            t0 = time.time()
-            state = self._sparse_pack()
-            self.params, self.opt_state, self.stepno, state, losses = \
-                fns["epoch"](self.params, self.opt_state, self.stepno,
-                             state, tables, csr, blocks)
-            self._sparse_unpack(state)
-            losses = np.asarray(losses)  # forces completion of the scan
-            rec = {"epoch": epoch, "loss": float(losses.mean()),
-                   "epoch_time_s": time.time() - t0}
-            if val_loader is not None and self.evaluator is not None:
-                rec[self.evaluator.name] = self.evaluate(val_loader)
-            self.history.append(rec)
-            if verbose:
-                print(rec)
-        return self.history
-
     # ------------------------------------------------------------------
     def fit_batch(self, batch):
         if batch.get("sample_on_device"):
@@ -854,14 +1167,26 @@ class _TrainerBase:
         return float(loss), out
 
     def fit(self, train_dataloader, val_dataloader=None, num_epochs: int = 1,
-            log_every: int = 0, verbose: bool = False, prefetch: int = 2):
-        """``prefetch > 0`` double-buffers the loader: a sampler thread
-        builds batch t+1 while step t runs (0 = synchronous, the old
-        behavior).  A device-sampling loader instead runs each epoch as
-        one fused ``lax.scan`` — there is nothing left to prefetch."""
-        if getattr(train_dataloader, "sample_on_device", False):
-            return self._fit_device(train_dataloader, val_dataloader,
-                                    num_epochs=num_epochs, verbose=verbose)
+            log_every: int = 0, verbose: bool = False, prefetch: int = 2,
+            epoch_chunks: int = 1, eval_on_device: bool = False,
+            checkpoint=None, async_checkpoint: bool = False):
+        """Thin shim over the streaming epoch engine
+        (``trainer.epoch_engine.StreamingEpochEngine`` — docs/pipeline.md
+        §3f): any loader exposing stacked epochs (``epoch_blocks``, i.e.
+        every repro dataloader, host- or device-sampling) trains through
+        the engine's chunked scanned-epoch pipeline.  ``epoch_chunks``,
+        ``eval_on_device``, ``checkpoint`` and ``async_checkpoint`` map
+        straight onto the engine; ``log_every``/``prefetch`` only apply
+        to the legacy per-batch path kept for plain batch iterables."""
+        if (getattr(train_dataloader, "sample_on_device", False)
+                or hasattr(train_dataloader, "epoch_blocks")):
+            from repro.trainer.epoch_engine import StreamingEpochEngine
+            engine = StreamingEpochEngine(
+                self, train_dataloader, val_loader=val_dataloader,
+                epoch_chunks=epoch_chunks, eval_on_device=eval_on_device,
+                checkpoint=checkpoint, async_checkpoint=async_checkpoint,
+                verbose=verbose)
+            return engine.run(num_epochs)
         from repro.trainer.dataloading import PrefetchIterator
         for epoch in range(num_epochs):
             t0 = time.time()
@@ -1153,3 +1478,15 @@ class GSgnnLinkPredictionTrainer(_TrainerBase):
         pos, nsc = self._scores(self.params, emb, batch["roles"],
                                 batch["neg_shape"], batch["num_negatives"])
         self.evaluator.update(pos, nsc)
+
+    def _eval_update(self):
+        # LP metrics fold (pos, neg_scores) — no label/mask blocks; host
+        # eval_batch likewise scores every negative (no neg_mask)
+        upd = self.evaluator.device_update()
+
+        def apply(carry, out, aux_in):
+            del aux_in
+            num, den = carry
+            pos, nsc = out
+            return upd(num, den, pos, nsc, jnp.ones(nsc.shape, bool))
+        return apply

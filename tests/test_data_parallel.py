@@ -41,11 +41,15 @@ def _tiny(dp, shard_tables=False, batch_size=32):
 # ---------------------------------------------------------------------------
 # config-level guard rails (single device, in-process)
 # ---------------------------------------------------------------------------
-def test_data_parallel_requires_device_pipeline():
+def test_data_parallel_accepts_host_sampling():
+    # host-sampled loaders lower through the streaming epoch engine's
+    # data-parallel paths since PR 9 — the old sample_on_device
+    # requirement is gone
     raw = _tiny(8)
     raw["hyperparam"]["sample_on_device"] = False
-    with pytest.raises(ConfigError, match="sample_on_device"):
-        GSConfig.from_dict(raw)
+    cfg = GSConfig.from_dict(raw)
+    assert cfg.hyperparam.data_parallel == 8
+    assert not cfg.hyperparam.sample_on_device
 
 
 def test_data_parallel_requires_divisible_batch():
