@@ -64,26 +64,6 @@ def _bench_data_parallel(bench: Bench, fast: bool = True):
                   f"loss={r['loss']:.4f} global_batch=1024")
 
 
-def _exchanged_bytes_step(dp: int, batch: int, fanouts, feat_dim: int) -> int:
-    """Analytic collective traffic of one sharded-table step, in bytes
-    (global, all shards).  Every :class:`RaggedExchange` moves statically
-    shaped ``(dp, m)`` buffers, so the traffic is exact from shapes
-    alone: 4 B/slot at construction (the all-gathered int32 id lists),
-    then the payload itemsize per gather (reduce-scatter of the masked
-    owner contributions).  The sampler routes once per layer and pulls
-    col_idx + edge_id as one stacked 8 B payload; the feature store
-    routes the layer-0 frontier and pulls ``feat_dim`` float32 rows."""
-    b = batch // dp
-    per_shard = 0
-    dst = b
-    for f in reversed(list(fanouts)):     # outermost layer first
-        m = dst * f                       # flat draw ids this layer
-        per_shard += dp * m * (4 + 2 * 4)
-        dst = dst + m                     # self rows + sampled neighbours
-    per_shard += dp * dst * (4 + 4 * feat_dim)   # frontier[0] features
-    return per_shard * dp
-
-
 def _bench_sharded(bench: Bench, fast: bool = True):
     """``shard/`` rows: the sharded-table step at equal global batch on
     8 fake devices, on a graph whose feature table (262k x 64 f32) is
@@ -92,8 +72,13 @@ def _bench_sharded(bench: Bench, fast: bool = True):
     row-shards them and lets the compiler lower the gathers (all-gather
     fallbacks that scale with *table* size), ``alltoall`` is the explicit
     ragged-exchange fast path (traffic scales with the *frontier*, not
-    the table).  Acceptance: alltoall beats gspmd, and its gap to
-    replicated is the price of actually fitting the tables."""
+    the table), ``alltoall_dedup`` adds the wire-format reductions
+    (in-jit frontier dedup + bf16 payloads — docs/pipeline.md §3e).
+    ``exchanged_bytes_step`` and ``dedup_ratio`` are *measured* by the
+    child off the actual routing (``trainer.exchange_report``: unique
+    requested rows counted per shard, wire slots x wire bytes), not
+    modelled from shapes.  Acceptance: alltoall beats gspmd, and
+    alltoall_dedup closes the gap to replicated."""
     epochs = 4 if fast else 8
     kw = dict(n_nodes=262144, avg_degree=10)
     repl = _dp_child(8, epochs, **kw)
@@ -106,11 +91,20 @@ def _bench_sharded(bench: Bench, fast: bool = True):
               f"{gspmd['step_us'] / repl['step_us']:.2f}x "
               f"loss={gspmd['loss']:.4f}")
     a2a = _dp_child(8, epochs, flags=("shard_tables",), **kw)
-    xb = _exchanged_bytes_step(8, 1024, (5, 5), 64)
     bench.add("shard/alltoall", a2a["step_us"],
               f"speedup_vs_gspmd={gspmd['step_us'] / a2a['step_us']:.2f}x "
               f"gap_vs_replicated={a2a['step_us'] / repl['step_us']:.2f}x "
-              f"loss={a2a['loss']:.4f} exchanged_bytes_step={xb}")
+              f"loss={a2a['loss']:.4f} "
+              f"exchanged_bytes_step={a2a['exchanged_bytes_step']} "
+              f"dedup_ratio={a2a['dedup_ratio']}")
+    ded = _dp_child(8, epochs, flags=("shard_tables", "shard_dedup"),
+                    shard_payload_dtype="bfloat16", **kw)
+    bench.add("shard/alltoall_dedup", ded["step_us"],
+              f"gap_vs_replicated={ded['step_us'] / repl['step_us']:.2f}x "
+              f"bytes_vs_alltoall={ded['exchanged_bytes_step'] / a2a['exchanged_bytes_step']:.2f}x "
+              f"loss={ded['loss']:.4f} "
+              f"exchanged_bytes_step={ded['exchanged_bytes_step']} "
+              f"dedup_ratio={ded['dedup_ratio']} payload=bf16")
 
 
 def _bench_link_prediction(bench: Bench, fast: bool = True):
@@ -178,6 +172,17 @@ def run_smoke(bench: Bench):
     bench.add("shard/alltoall", a["step_us"],
               f"speedup_vs_gspmd={g['step_us'] / a['step_us']:.2f}x "
               f"loss={a['loss']:.4f} global_batch=512")
+    # wire-format lane: dedup + bf16 payloads train end to end and the
+    # measured probe sees actual duplicate collapse (CI asserts the
+    # printed dedup_ratio < 1.0)
+    d = _dp_child(8, epochs=2, n_nodes=2048, batch_size=512,
+                  flags=("shard_tables", "shard_dedup"),
+                  shard_payload_dtype="bfloat16")
+    bench.add("shard/alltoall_dedup", d["step_us"],
+              f"loss={d['loss']:.4f} "
+              f"exchanged_bytes_step={d['exchanged_bytes_step']} "
+              f"dedup_ratio={d['dedup_ratio']} payload=bf16 "
+              f"global_batch=512")
 
 
 def run(bench: Bench, fast: bool = True):

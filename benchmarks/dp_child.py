@@ -37,6 +37,14 @@ def main():
                     help="sharded-table gather strategy (shard/ rows "
                          "compare the two at equal global batch)")
     ap.add_argument("--remote-prefetch", type=int, default=1)
+    ap.add_argument("--shard-dedup", action="store_true",
+                    help="collapse duplicate row requests per shard "
+                         "before the alltoall routing (in-jit unique_rows "
+                         "+ overflow fallback — bit-identical results)")
+    ap.add_argument("--shard-payload-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="wire dtype for gathered float payloads on the "
+                         "alltoall path (bf16 halves exchange bytes)")
     ap.add_argument("--task", default="node_classification",
                     choices=["node_classification", "link_prediction"])
     ap.add_argument("--host-sampling", action="store_true",
@@ -80,6 +88,8 @@ def main():
                        "shard_tables": args.shard_tables,
                        "shard_gather": args.shard_gather,
                        "remote_prefetch": args.remote_prefetch,
+                       "shard_dedup": args.shard_dedup,
+                       "shard_payload_dtype": args.shard_payload_dtype,
                        "epoch_chunks": args.epoch_chunks,
                        "eval_on_device": args.eval_on_device,
                        "async_checkpoint": args.async_checkpoint},
@@ -123,6 +133,17 @@ def main():
                    ) / n_batches
     out = {"dp": args.dp, "step_us": step_s * 1e6,
            "loss": hist[-1]["loss"], "n_batches": n_batches}
+    if (args.shard_tables and args.shard_gather == "alltoall"
+            and not args.host_sampling
+            and args.task == "node_classification"):
+        # measured wire stats of one training batch (replaces the old
+        # analytic byte model): unique requested rows counted per shard
+        # straight off the routing — see trainers.exchange_report
+        ids, _, _ = runner.data.train_val_test_nodes(
+            runner.target_ntype, rng=runner._split_rng())
+        rep = runner.trainer.exchange_report(runner._train_loader(ids))
+        out["exchanged_bytes_step"] = rep["exchanged_bytes_step"]
+        out["dedup_ratio"] = round(rep["dedup_ratio"], 4)
     if epoch_wall_us is not None:
         out["epoch_wall_us"] = epoch_wall_us
     metric = runner.trainer.evaluator.name

@@ -174,9 +174,11 @@ class RaggedExchange:
     """
 
     def __init__(self, idx, *, axis_name: str, n_shards: int,
-                 rows_per_shard: int):
+                 rows_per_shard: int, gathered=None):
         idx = idx.astype(jnp.int32)
-        all_ids = jax.lax.all_gather(idx, axis_name)      # (n_shards, n)
+        if gathered is None:
+            gathered = jax.lax.all_gather(idx, axis_name)  # (n_shards, n)
+        all_ids = gathered.astype(jnp.int32)
         my = jax.lax.axis_index(axis_name)
         owner = jnp.clip(all_ids // rows_per_shard, 0, n_shards - 1)
         self.mine = owner == my
@@ -188,13 +190,23 @@ class RaggedExchange:
         self._n_shards = n_shards
         self.n_requests = idx.shape[0]
 
-    def gather(self, local_table):
+    def gather(self, local_table, wire_dtype=None):
         """Return ``table[idx]`` (global semantics) from per-shard rows.
 
         ``local_table`` is this shard's ``(rows_per_shard, ...)`` block; the
         result is bit-identical to gathering the requested ids against the
         replicated table (exactly one owner contributes each slot, so the
         reduce-scatter sum is ``row + 0``, exact in floating point).
+
+        ``wire_dtype`` (``hyperparam.shard_payload_dtype``) compresses the
+        payload wire format of a *floating* table: the contribution
+        buffer is cast to the narrow width right before the
+        reduce-scatter (take and masking stay at the fast native table
+        dtype) and the arriving rows are restored after.  Per row this
+        is exactly ``cast(row) + 0``: the only loss is the one rounding
+        of the row itself, never accumulation error (one owner per
+        slot).  Integer payloads (CSR columns, edge ids) ignore the
+        knob.
         """
         n_shards, n = self._n_shards, self.n_requests
         tail = local_table.shape[1:]
@@ -202,9 +214,23 @@ class RaggedExchange:
         rows = rows.reshape((n_shards, n) + tail)
         mask = self.mine.reshape((n_shards, n) + (1,) * len(tail))
         contrib = jnp.where(mask, rows, 0)
-        out = jax.lax.psum_scatter(
-            contrib, self._axis_name, scatter_dimension=0, tiled=True)
-        return out.reshape((n,) + tail)
+        if (wire_dtype is not None
+                and jnp.issubdtype(local_table.dtype, jnp.floating)
+                and jnp.dtype(wire_dtype).itemsize == 2):
+            # exactly one owner contributes each slot and every other
+            # contribution is literal +0.0 (all-zero bits), so reducing
+            # the 16-bit *bit patterns* as integers is the same sum —
+            # native int adds instead of emulated narrow-float math on
+            # CPU, and the wire still carries 2-byte payloads
+            wire = jax.lax.bitcast_convert_type(
+                contrib.astype(wire_dtype), jnp.uint16)
+            out = jax.lax.psum_scatter(
+                wire, self._axis_name, scatter_dimension=0, tiled=True)
+            out = jax.lax.bitcast_convert_type(out, wire_dtype)
+        else:
+            out = jax.lax.psum_scatter(
+                contrib, self._axis_name, scatter_dimension=0, tiled=True)
+        return out.reshape((n,) + tail).astype(local_table.dtype)
 
     def scatter_rows(self, rows):
         """Route per-request rows back to their owning shards.
@@ -232,6 +258,124 @@ class RaggedExchange:
         obj.mine, obj.local = children
         obj._axis_name, obj._n_shards, obj.n_requests = aux
         return obj
+
+
+# ---------------------------------------------------------------------------
+# in-jit frontier dedup ahead of the exchange (hyperparam.shard_dedup,
+# docs/pipeline.md §3e): duplicate draws collapse to one requested row
+# ---------------------------------------------------------------------------
+# Static slot budget as a fraction of the request count.  Duplicate-heavy
+# frontiers (with-replacement fanout draws, hub-dominated graphs) sit well
+# under it — the measured layer-0 frontier keeps ~0.71 distinct/requested
+# with a per-shard spread of a few dozen rows, several sigma below 3/4 —
+# and a batch whose distinct count exceeds the budget takes the
+# bit-identical fallback exchange below, so the fraction trades expected
+# savings against fallback frequency — never correctness.
+DEDUP_CAPACITY_FRAC = (3, 4)
+
+# Dedup only pays where payload rows are wide: the compaction costs one
+# per-shard unique pass, the saving is (requests - capacity) wire slots
+# of (4 + payload) bytes.  Narrow payloads — the CSR draw's stacked
+# (col, eid) int32 pair is 8 B against the feature row's 128-256 B —
+# are a few percent of the exchange byte ledger and never repay the
+# pass, so ``dedup_gather`` statically resolves them to the plain
+# exchange.
+DEDUP_MIN_PAYLOAD_BYTES = 32
+
+
+def dedup_capacity(n_requests: int) -> int:
+    """Static dedup slot count for an ``n_requests``-slot exchange."""
+    num, den = DEDUP_CAPACITY_FRAC
+    return max(1, (n_requests * num) // den)
+
+
+def unique_count(ids):
+    """Number of distinct values in a non-empty id vector (one sort)."""
+    s = jnp.sort(ids.astype(jnp.int32))
+    return (s[1:] != s[:-1]).astype(jnp.int32).sum() + 1
+
+
+def wire_row_bytes(local_table, wire_dtype=None) -> int:
+    """Bytes one payload row occupies on the exchange wire (static)."""
+    dt = local_table.dtype
+    if wire_dtype is not None and jnp.issubdtype(dt, jnp.floating):
+        dt = jnp.dtype(wire_dtype)
+    elems = 1
+    for d in local_table.shape[1:]:
+        elems *= int(d)
+    return elems * jnp.dtype(dt).itemsize
+
+
+def dedup_gather(ids, local_table, *, axis_name: str, n_shards: int,
+                 rows_per_shard: int, capacity: Optional[int] = None,
+                 wire_dtype=None, stats_sink=None):
+    """``table[ids]`` through a deduplicated :class:`RaggedExchange`.
+
+    The request vector collapses to its distinct values
+    (:func:`repro.kernels.unique_rows.unique_rows`, ``capacity`` static
+    slots), the exchange ships only those slots, and an
+    inverse-permutation gather fans the rows back out — bit-identical to
+    ``RaggedExchange(ids).gather(table)`` with strictly fewer exchanged
+    rows.  One all_gather ships each shard's dedup'd ids *and* its
+    distinct count together, so every shard sees every count and the
+    overflow predicate is mesh-uniform for free (no separate vote
+    round); the routing then reuses the already-gathered id matrix.  If
+    any shard's distinct count overflows the capacity, every shard
+    takes the plain un-deduplicated exchange instead: overflow degrades
+    to the old wire format, never to wrong rows.
+
+    Rows narrower than ``DEDUP_MIN_PAYLOAD_BYTES`` on the wire resolve
+    statically to the plain exchange: their slot savings are a few
+    percent of the byte ledger and do not repay the per-shard unique
+    pass (pass an explicit ``capacity`` to override the policy).
+
+    Must be traced inside ``shard_map`` over ``axis_name``.  When
+    ``stats_sink`` is a list, appends this site's measured
+    ``(requests, distinct, capacity, fits)`` for the exchange-bytes
+    probe (``benchmarks.bench_scaling``).
+    """
+    from repro.kernels.unique_rows import unique_rows
+    n = ids.shape[0]
+    if (capacity is None
+            and wire_row_bytes(local_table, wire_dtype)
+            < DEDUP_MIN_PAYLOAD_BYTES):
+        if stats_sink is not None:
+            stats_sink.append({
+                "requests": n, "distinct": unique_count(ids),
+                "capacity": n,
+                "payload_bytes": wire_row_bytes(local_table, wire_dtype),
+                "fits": jnp.int32(1)})
+        ex = RaggedExchange(ids, axis_name=axis_name, n_shards=n_shards,
+                            rows_per_shard=rows_per_shard)
+        return ex.gather(local_table, wire_dtype=wire_dtype)
+    capacity = dedup_capacity(n) if capacity is None else capacity
+    # table row ids are bounded by the padded row count -> the sort-free
+    # dense unique formulation applies (kernels/unique_rows)
+    uniq, inv, count = unique_rows(ids.astype(jnp.int32), capacity=capacity,
+                                   universe=n_shards * rows_per_shard)
+    packed = jnp.concatenate([uniq, jnp.reshape(count, (1,))])
+    gathered = jax.lax.all_gather(packed, axis_name)  # (n_shards, cap+1)
+    fits = jnp.all(gathered[:, -1] <= capacity)
+    if stats_sink is not None:
+        stats_sink.append({"requests": n, "distinct": count,
+                           "capacity": capacity,
+                           "payload_bytes": wire_row_bytes(local_table,
+                                                          wire_dtype),
+                           "fits": fits.astype(jnp.int32)})
+
+    def _dedup(_):
+        ex = RaggedExchange(uniq, axis_name=axis_name, n_shards=n_shards,
+                            rows_per_shard=rows_per_shard,
+                            gathered=gathered[:, :capacity])
+        return jnp.take(ex.gather(local_table, wire_dtype=wire_dtype),
+                        inv, axis=0)
+
+    def _plain(_):
+        ex = RaggedExchange(ids, axis_name=axis_name, n_shards=n_shards,
+                            rows_per_shard=rows_per_shard)
+        return ex.gather(local_table, wire_dtype=wire_dtype)
+
+    return jax.lax.cond(fits, _dedup, _plain, None)
 
 
 def constrain_replicated(mesh: Mesh, tree):

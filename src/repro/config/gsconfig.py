@@ -218,6 +218,18 @@ class HyperparamConfig:
     # runs in the epoch scan (double-buffered remote rows on device);
     # 0 disables the pipeline (each step exchanges synchronously)
     remote_prefetch: int = _field("int", 1)
+    # frontier dedup for the alltoall exchanges: collapse duplicate row
+    # requests per shard to one wire slot before routing (static 3/4
+    # capacity; overflow falls back to the plain exchange in-jit and
+    # narrow wire rows skip the compaction statically, so results are
+    # always bit-identical — docs/pipeline.md §3e)
+    shard_dedup: bool = _field("bool", False)
+    # wire dtype for gathered float payloads on the alltoall path:
+    # "bfloat16" halves feature/embedding exchange bytes (exact per row
+    # on the one-owner reduce-scatter; fp32 restored on arrival, grad
+    # scatter-back stays fp32)
+    shard_payload_dtype: str = _field("str", "float32",
+                                      choices=("float32", "bfloat16"))
     # streaming epoch engine (docs/pipeline.md §3f): split the epoch
     # scan into K chunk dispatches so host work (next-epoch staging,
     # checkpoint enqueue, loss fetch) hides behind device compute.
@@ -491,6 +503,22 @@ class GSConfig:
             raise _err("hyperparam.shard_gather",
                        "only applies with shard_tables: true (replicated "
                        "tables never exchange rows)")
+        if h.shard_dedup and not h.shard_tables:
+            raise _err("hyperparam.shard_dedup",
+                       "only applies with shard_tables: true (replicated "
+                       "tables never exchange rows to deduplicate)")
+        if h.shard_dedup and h.shard_gather != "alltoall":
+            raise _err("hyperparam.shard_dedup",
+                       "needs shard_gather: alltoall (the gspmd lowering "
+                       "has no explicit routing to deduplicate)")
+        if h.shard_payload_dtype != "float32" and not h.shard_tables:
+            raise _err("hyperparam.shard_payload_dtype",
+                       "only applies with shard_tables: true (replicated "
+                       "tables put nothing on the wire)")
+        if h.shard_payload_dtype != "float32" and h.shard_gather != "alltoall":
+            raise _err("hyperparam.shard_payload_dtype",
+                       "needs shard_gather: alltoall (the gspmd lowering "
+                       "does not stage an explicit wire payload)")
         if self.serve is not None:
             sv = self.serve
             if sv.batch_size is not None and sv.batch_size <= 0:

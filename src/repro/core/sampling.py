@@ -322,7 +322,7 @@ class DeviceNeighborSampler:
     # ------------------------------------------------------------------
     def sample(self, tables, plan: SamplePlan, seeds, step,
                exclude=None, dp=None, seed_maps=None, seed_keyed=False,
-               shard=None):
+               shard=None, shard_dedup=False, stats_sink=None):
         """Trace one minibatch draw (call inside jit).
 
         tables: the sampler's ``.tables`` pytree (passed through the jit
@@ -359,6 +359,15 @@ class DeviceNeighborSampler:
         and positions as the replicated draw, so results stay
         bit-identical.  Composes with ``dp`` (which governs whose rows of
         the global bit stream this shard consumes).
+
+        shard_dedup: with ``shard``, route the drawn positions through
+        ``sharding.dedup_gather`` — same results; whether the layer
+        actually compacts is dedup_gather's static payload-width call
+        (the 8 B ``(col, eid)`` pair sits under
+        ``DEDUP_MIN_PAYLOAD_BYTES``, so CSR draws currently resolve to
+        the plain exchange).  ``stats_sink``: optional list the sharded
+        draw appends per-exchange measured stats to (the exchange-bytes
+        probe; see ``dedup_gather``).
 
         seed_maps: optional ``{ntype: (base, stride)}`` trace-time numpy
         local->global row maps of the *seed* block itself, for dp runs
@@ -428,7 +437,8 @@ class DeviceNeighborSampler:
                 if shard is not None:
                     nbr, eid, mask = _nbr_sample_sharded(
                         t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids,
-                        key, fanout=pe.fanout, bits=bits, shard=shard)
+                        key, fanout=pe.fanout, bits=bits, shard=shard,
+                        dedup=shard_dedup, stats_sink=stats_sink)
                 else:
                     nbr, eid, mask = nbr_sample(
                         t["row_ptr"], t["col_idx"], t["edge_id"], dst_ids,
@@ -466,7 +476,8 @@ class DeviceNeighborSampler:
 
 
 def _nbr_sample_sharded(row_ptr, col_idx_local, edge_id_local, dst_ids, key,
-                        *, fanout, bits, shard):
+                        *, fanout, bits, shard, dedup=False,
+                        stats_sink=None):
     """The ``nbr_sample`` draw against *row-sharded* CSR tables.
 
     ``row_ptr`` is replicated, so each shard computes the exact same edge
@@ -477,10 +488,19 @@ def _nbr_sample_sharded(row_ptr, col_idx_local, edge_id_local, dst_ids, key,
     ``edge_id`` stacked into a single payload so the drawn entries cross
     shards in one collective instead of all-gathering table slices.  Must
     be traced inside ``shard_map`` over the axis in ``shard``.
+
+    With-replacement draws repeat positions (guaranteed whenever a row's
+    degree is below the fanout, and often otherwise); ``dedup`` routes
+    them through :func:`~repro.common.sharding.dedup_gather`, whose
+    static payload-width policy decides whether the layer compacts —
+    the 8 B ``(col, eid)`` pair sits under ``DEDUP_MIN_PAYLOAD_BYTES``,
+    so the draw currently keeps the plain wire and the dedup win comes
+    from the wide feature rows — bit-identical either way.
     """
     import jax
     import jax.numpy as jnp
-    from repro.common.sharding import RaggedExchange
+    from repro.common.sharding import (RaggedExchange, dedup_gather,
+                                       unique_count)
     from repro.kernels.nbr_sample import segment_bounds_ref
     axis_name, n_shards = shard
     dst_ids = dst_ids.astype(jnp.int32)
@@ -492,13 +512,26 @@ def _nbr_sample_sharded(row_ptr, col_idx_local, edge_id_local, dst_ids, key,
     draw = (bits % deg_u[:, None]).astype(jnp.int32)
     local_e = col_idx_local.shape[0]
     flat = jnp.clip(starts[:, None] + draw, 0, local_e * n_shards - 1)
-    ex = RaggedExchange(flat.reshape(-1), axis_name=axis_name,
-                        n_shards=n_shards, rows_per_shard=local_e)
+    ids = flat.reshape(-1)
     # one payload exchange for both tables: stack (col, eid) per edge so
     # the drawn entries cross shards in a single collective
     pair = jnp.stack([col_idx_local.astype(jnp.int32),
                       edge_id_local.astype(jnp.int32)], axis=1)
-    got = ex.gather(pair).reshape(n, fanout, 2)
+    if dedup:
+        got = dedup_gather(ids, pair, axis_name=axis_name,
+                           n_shards=n_shards, rows_per_shard=local_e,
+                           stats_sink=stats_sink)
+    else:
+        if stats_sink is not None:
+            stats_sink.append({"requests": ids.shape[0],
+                               "distinct": unique_count(ids),
+                               "capacity": ids.shape[0],
+                               "payload_bytes": 8,    # (col, eid) int32
+                               "fits": jnp.int32(1)})
+        ex = RaggedExchange(ids, axis_name=axis_name, n_shards=n_shards,
+                            rows_per_shard=local_e)
+        got = ex.gather(pair)
+    got = got.reshape(n, fanout, 2)
     nbr, eid = got[..., 0], got[..., 1]
     mask = jnp.broadcast_to((degs > 0)[:, None], (n, fanout))
     return nbr, eid, mask

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: static-capacity unique over a sorted id vector.
+
+The sort itself stays an XLA prologue (``ops.unique_rows`` argsorts and
+hands the kernel the sorted values plus each element's sorted position),
+mirroring ``nbr_sample``'s segment-bounds prologue.  The kernel runs as
+a single program with the whole vector VMEM-resident — frontiers are
+minibatch-sized (tens of KiB), the same residency stance as the
+``nbr_sample`` tables — and does three VPU passes:
+
+- run starts (``s[i] != s[i-1]``) and a cumsum give each sorted element
+  its distinct rank;
+- ``inv`` is one gather of the (capacity-clipped) ranks through the
+  inverse sort order;
+- ``uniq`` compacts the first element of each run to its slot via a
+  vectorized binary search over the non-decreasing rank vector
+  (O(cap log n) gathers, no dynamic scatter — TPU-friendly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _unique_rows_kernel(s_ref, invord_ref, uniq_ref, inv_ref, count_ref):
+    s = s_ref[...]                             # (n,) int32, sorted
+    n = s.shape[0]
+    cap = uniq_ref.shape[0]
+    firsts = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (s[1:] != s[:-1]).astype(jnp.int32)])
+    rank = jnp.cumsum(firsts) - 1
+    count = rank[n - 1] + 1
+    slot = jnp.minimum(rank, cap - 1)
+    inv_ref[...] = jnp.take(slot, invord_ref[...])
+    # first sorted position of each rank j: binary search in the
+    # non-decreasing rank vector (2-D iota per the TPU lowering rules)
+    j = jax.lax.broadcasted_iota(jnp.int32, (cap, 1), 0)[:, 0]
+    lo = jnp.zeros((cap,), jnp.int32)
+    hi = jnp.full((cap,), n, jnp.int32)
+
+    def step(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        below = jnp.take(rank, jnp.clip(mid, 0, n - 1)) < j
+        return jnp.where(below, mid + 1, lo), jnp.where(below, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, max(1, n - 1).bit_length() + 1, step,
+                              (lo, hi))
+    first = jnp.clip(lo, 0, n - 1)
+    uniq_ref[...] = jnp.where(j < count, jnp.take(s, first), 0)
+    count_ref[...] = jnp.reshape(count, (1,))
+
+
+def unique_rows_pallas(s, invord, *, capacity: int, interpret: bool = True):
+    """s: (n,) int32 sorted ids; invord: (n,) int32 sorted position of
+    each original element -> (uniq (capacity,), inv (n,), count (1,))."""
+    n = s.shape[0]
+    return pl.pallas_call(
+        _unique_rows_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s, invord)

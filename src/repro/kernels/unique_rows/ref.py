@@ -1,0 +1,58 @@
+"""jnp oracle for the static-capacity sort-based unique.
+
+``unique_rows`` collapses a duplicate-heavy request vector (a sampled
+frontier, a batch of drawn CSR positions) to its distinct values ahead
+of a cross-shard exchange: the exchange then ships ``capacity`` slots
+instead of ``n``, and an inverse-permutation gather fans the exchanged
+rows back out to the original request order.
+
+Static-shape contract (everything jit/scan-safe):
+
+- ``uniq``: ``(capacity,)`` int32 — the distinct values sorted
+  ascending, compacted to the front; slots at and past ``count`` hold 0
+  (an always-in-bounds row id, so a gather over ``uniq`` never reads
+  out of the table; the fetched pad rows are dropped by ``inv``).
+- ``inv``: ``(n,)`` int32 — ``uniq[inv[i]] == ids[i]`` whenever
+  ``count <= capacity``.
+- ``count``: ``()`` int32 — the number of distinct values.  When
+  ``count > capacity`` the mapping cannot be represented in the fixed
+  slots (``inv`` clips into the last one) and the caller must fall back
+  to the un-deduplicated path — ``dedup_gather`` does exactly that, so
+  overflow degrades to the plain exchange, never to wrong rows.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unique_rows_ref(ids, capacity: int):
+    """Sort-based unique with fixed output slots.  ``ids``: (n,) int32
+    (non-negative row ids) -> (uniq (capacity,), inv (n,), count ()).
+
+    A single-operand ``jnp.sort`` plus a binary search recovers the
+    inverse permutation: the two-operand ``argsort`` comparator sort is
+    several times slower on CPU, and the sorted-position indirection it
+    feeds is not needed — each id's slot is just its position among the
+    distinct values, which ``searchsorted`` over the (sorted,
+    int32-max-padded) compaction answers directly."""
+    n = ids.shape[0]
+    s = jnp.sort(ids)                              # sorted ascending
+    firsts = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32), (s[1:] != s[:-1]).astype(jnp.int32)])
+    rank = jnp.cumsum(firsts) - 1                  # distinct rank, sorted
+    count = rank[n - 1] + 1
+    slot = jnp.minimum(rank, capacity - 1)
+    # min-scatter == "first value of the run": every in-range slot holds
+    # one distinct value, and on overflow the clipped last slot takes the
+    # first rank-(capacity-1) value — bit-identical to the kernel's
+    # binary-search compaction in every case, overflow included
+    uniq = jnp.full((capacity,), jnp.iinfo(jnp.int32).max,
+                    jnp.int32).at[slot].min(s)
+    # pre-mask compaction stays sorted (int32-max pads at the tail), so
+    # each id's distinct rank is its insertion point; overflow ranks
+    # land past the table and clip into the last slot, matching the old
+    # take-through-argsort inverse bit for bit
+    inv = jnp.minimum(jnp.searchsorted(uniq, ids).astype(jnp.int32),
+                      capacity - 1)
+    uniq = jnp.where(jnp.arange(capacity) < count, uniq, 0)
+    return uniq, inv, count

@@ -294,7 +294,9 @@ class NodeClassificationRunner(TaskRunner):
             evaluator=GSgnnAccEvaluator(), feature_store=self.store,
             device_sampler=self.device_sampler, mesh=self.mesh,
             shard_gather=self.hp.shard_gather,
-            remote_prefetch=self.hp.remote_prefetch)
+            remote_prefetch=self.hp.remote_prefetch,
+            shard_dedup=self.hp.shard_dedup,
+            shard_payload_dtype=self.hp.shard_payload_dtype)
 
     def _loader(self, ids, shuffle=True):
         return GSgnnNodeDataLoader(
@@ -353,7 +355,9 @@ class NodeRegressionRunner(NodeClassificationRunner):
             evaluator=GSgnnRegressionEvaluator(), feature_store=self.store,
             device_sampler=self.device_sampler, mesh=self.mesh,
             shard_gather=self.hp.shard_gather,
-            remote_prefetch=self.hp.remote_prefetch)
+            remote_prefetch=self.hp.remote_prefetch,
+            shard_dedup=self.hp.shard_dedup,
+            shard_payload_dtype=self.hp.shard_payload_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -404,7 +408,9 @@ class _EdgeTaskRunner(TaskRunner):
             feature_store=self.store, device_sampler=self.device_sampler,
             mesh=self.mesh,
             shard_gather=self.hp.shard_gather,
-            remote_prefetch=self.hp.remote_prefetch)
+            remote_prefetch=self.hp.remote_prefetch,
+            shard_dedup=self.hp.shard_dedup,
+            shard_payload_dtype=self.hp.shard_payload_dtype)
 
     def _loader(self, eids, shuffle=True):
         return GSgnnEdgeDataLoader(
@@ -481,6 +487,8 @@ class LinkPredictionRunner(TaskRunner):
             device_sampler=self.device_sampler, mesh=self.mesh,
             shard_gather=self.hp.shard_gather,
             remote_prefetch=self.hp.remote_prefetch,
+            shard_dedup=self.hp.shard_dedup,
+            shard_payload_dtype=self.hp.shard_payload_dtype,
             neg_method=lp.neg_method, num_negatives=lp.num_negatives,
             local_nodes=self.local_nodes)
 
@@ -618,8 +626,11 @@ def _serve_ready(cfg: GSConfig) -> GSConfig:
     hp["data_parallel"] = 1
     hp["shard_tables"] = False
     # an artifact trained with shard_gather: gspmd would fail validation
-    # once shard_tables is forced off — the knob is moot without a mesh
+    # once shard_tables is forced off — the knob is moot without a mesh,
+    # as are the wire-format knobs that hang off it
     hp["shard_gather"] = "alltoall"
+    hp["shard_dedup"] = False
+    hp["shard_payload_dtype"] = "float32"
     raw["device_features"] = True
     return GSConfig.from_dict(raw)
 

@@ -143,7 +143,8 @@ class _TrainerBase:
                  sparse_embeds: Optional[Dict[str, SparseEmbedding]] = None,
                  evaluator=None, feature_store=None, device_sampler=None,
                  mesh=None, shard_gather: str = "alltoall",
-                 remote_prefetch: int = 1):
+                 remote_prefetch: int = 1, shard_dedup: bool = False,
+                 shard_payload_dtype: str = "float32"):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         k1, k2 = jax.random.split(rng)
         self.model = model
@@ -168,6 +169,12 @@ class _TrainerBase:
                 f"{shard_gather!r}")
         self.shard_gather = shard_gather
         self.remote_prefetch = int(remote_prefetch)
+        if shard_payload_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"shard_payload_dtype must be 'float32' or 'bfloat16', got "
+                f"{shard_payload_dtype!r}")
+        self.shard_dedup = bool(shard_dedup)
+        self.shard_payload_dtype = shard_payload_dtype
         if mesh is not None:
             self._place_on_mesh(mesh)
         self._steps: Dict = {}
@@ -518,7 +525,7 @@ class _TrainerBase:
             check_rep=False)
 
     def _make_device_fns_alltoall(self, plan, batch_size, store_nts,
-                                  sparse_nts):
+                                  sparse_nts, collect_stats: bool = False):
         """Data-parallel device step/epoch over *row-sharded* tables with
         explicit ragged all-to-all gathers (the ``shard_gather: alltoall``
         fast path).  Structure mirrors ``_make_device_step_shard_map`` —
@@ -543,13 +550,30 @@ class _TrainerBase:
         ``presample(k+1)`` before ``compute(k)`` each iteration — the two
         are dataflow-independent, so XLA overlaps batch k+1's row
         exchanges with batch k's model compute (remote rows double-buffer
-        in the scan carry).  Semantics are unchanged: the sparse payload
-        gather still sees the post-update tables, so losses are identical
-        to the unpipelined step.
+        in the scan carry).  The sparse-adagrad scatter-back is pipelined
+        one further stage behind (docs/pipeline.md §3e): batch k's
+        gradient rows ride the carry and are scattered through batch k's
+        *forward* routing at the top of iteration k+1, where the scatter
+        is dataflow-independent of presample(k+2) and overlaps it instead
+        of serializing at the tail of compute(k).  Semantics are
+        unchanged in both pipeline stages: batch k+1's sparse payload
+        gather still sees the tables with every update through batch k
+        applied, so losses are bit-identical to the unpipelined step.
+
+        Two more wire-level reductions ride the same exchanges:
+        ``shard_dedup`` collapses duplicate row requests per shard with
+        the static-capacity :func:`~repro.kernels.unique_rows
+        .unique_rows` primitive before routing (overflow falls back to
+        the plain exchange in-jit — always bit-identical), and
+        ``shard_payload_dtype: bfloat16`` casts gathered float payloads
+        to bf16 for the reduce-scatter wire format, restoring fp32 on
+        arrival (exact per row — one owner per row means the psum never
+        adds two nonzero bf16 values).
         """
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
-        from repro.common.sharding import RaggedExchange
+        from repro.common.sharding import (RaggedExchange, dedup_gather,
+                                           unique_count, wire_row_bytes)
         from repro.gnn.schema import schema_of_plan
         from repro.trainer.task_programs import device_capability
         mesh = self.mesh
@@ -590,6 +614,7 @@ class _TrainerBase:
         # mixed layouts are legal: a table whose rows did not shard (or
         # was placed replicated) keeps the plain local gather
         store_sh = {nt: spec_of(store_tables[nt]) != P() for nt in store_nts}
+        store_dt = {nt: store_tables[nt].dtype for nt in store_nts}
         sparse_sh = {nt: spec_of(self.sparse_embeds[nt].table) != P()
                      for nt in sparse_nts}
         # per-shard row block of each sharded sparse table, captured at
@@ -603,40 +628,102 @@ class _TrainerBase:
                 "mixed sharded/replicated CSR tables in one sampler are "
                 "not supported by the alltoall gather path")
         shard_arg = dp if csr_sh and all(csr_sh) else None
+        wire_dt = (jnp.bfloat16 if self.shard_payload_dtype == "bfloat16"
+                   else None)
+        dedup = self.shard_dedup
+        # wire bytes of one sparse-embedding row, for the stats probe
+        # (presample routes but never touches the mutable table itself)
+        sparse_pb = {nt: wire_row_bytes(self.sparse_embeds[nt].table,
+                                        wire_dt)
+                     for nt in sparse_nts if sparse_sh[nt]}
+
+        def wire_tables(tables):
+            # The feature store is frozen for the duration of an epoch
+            # dispatch, so the cast to the wire dtype can happen once
+            # here instead of inside every per-batch gather: the scan
+            # body's takes/masks then move 2-byte rows throughout.  The
+            # exchange results are widened back at the presample call
+            # sites, so downstream compute sees the exact values the
+            # per-gather cast produced (cast commutes with take/mask).
+            if wire_dt is None:
+                return tables
+            return {nt: (t.astype(wire_dt)
+                         if store_sh.get(nt, False)
+                         and jnp.issubdtype(t.dtype, jnp.floating)
+                         else t)
+                    for nt, t in tables.items()}
 
         def presample(tables, csr, blocks, stepno):
+            sink = [] if collect_stats else None
             seeds, aux_in, exclude = program.expand(blocks, stepno, dp=dp)
             masks, dts, frontier = sampler.sample(
                 csr, local_plan, seeds, stepno, exclude=exclude,
-                dp=dp, seed_maps=seed_maps, shard=shard_arg)
+                dp=dp, seed_maps=seed_maps, shard=shard_arg,
+                shard_dedup=dedup, stats_sink=sink)
             store_feats = {}
             for nt in store_nts:
-                if store_sh[nt]:
+                if store_sh[nt] and dedup:
+                    store_feats[nt] = dedup_gather(
+                        frontier[nt], tables[nt], axis_name="data",
+                        n_shards=n, rows_per_shard=tables[nt].shape[0],
+                        wire_dtype=wire_dt,
+                        stats_sink=sink).astype(store_dt[nt])
+                elif store_sh[nt]:
+                    if sink is not None:
+                        sink.append({
+                            "requests": frontier[nt].shape[0],
+                            "distinct": unique_count(frontier[nt]),
+                            "capacity": frontier[nt].shape[0],
+                            "payload_bytes": wire_row_bytes(tables[nt],
+                                                            wire_dt),
+                            "fits": jnp.int32(1)})
                     ex = RaggedExchange(
                         frontier[nt], axis_name="data", n_shards=n,
                         rows_per_shard=tables[nt].shape[0])
-                    store_feats[nt] = ex.gather(tables[nt])
+                    store_feats[nt] = ex.gather(
+                        tables[nt],
+                        wire_dtype=wire_dt).astype(store_dt[nt])
                 else:
                     store_feats[nt] = tables[nt][frontier[nt]]
+            # sparse routings stay un-deduplicated: the exchange must be
+            # reusable for the backward scatter (duplicate grad rows sum
+            # through the routing) and ride the scan carry with a static
+            # shape — dedup's overflow cond cannot change the carry.
             sparse_route = {
                 nt: RaggedExchange(frontier[nt], axis_name="data",
                                    n_shards=n,
                                    rows_per_shard=sparse_rps[nt])
                 for nt in sparse_nts if sparse_sh[nt]}
+            if sink is not None:
+                for nt in sparse_nts:
+                    if sparse_sh[nt]:
+                        sink.append({
+                            "requests": frontier[nt].shape[0],
+                            "distinct": unique_count(frontier[nt]),
+                            "capacity": frontier[nt].shape[0],
+                            "payload_bytes": sparse_pb[nt],
+                            "fits": jnp.int32(1)})
             sparse_ids = {nt: frontier[nt] for nt in sparse_nts
                           if not sparse_sh[nt]}
-            return {"masks": masks, "dts": dts, "aux_in": aux_in,
-                    "store_feats": store_feats,
-                    "sparse_route": sparse_route,
-                    "sparse_ids": sparse_ids}
+            pf = {"masks": masks, "dts": dts, "aux_in": aux_in,
+                  "store_feats": store_feats,
+                  "sparse_route": sparse_route,
+                  "sparse_ids": sparse_ids}
+            if collect_stats:
+                pf["exg"] = sink
+            return pf
 
-        def compute(params, opt_state, stepno, sparse_state, pf):
+        def compute_fwd(params, opt_state, stepno, sparse_state, pf):
+            """Forward + dense update: everything in ``compute`` except
+            the sparse-adagrad scatter-back, whose gradient rows are
+            returned instead (for the pipelined ``apply_sparse``)."""
             arrays = {"masks": pf["masks"], "delta_t": pf["dts"]}
             aux_in = pf["aux_in"]
             feats = dict(pf["store_feats"])
             for nt in sparse_nts:
                 feats[nt] = (pf["sparse_route"][nt].gather(
-                                 sparse_state[nt][0]) if sparse_sh[nt]
+                                 sparse_state[nt][0], wire_dtype=wire_dt)
+                             if sparse_sh[nt]
                              else sparse_state[nt][0][pf["sparse_ids"][nt]])
 
             def global_loss(p, f):
@@ -654,17 +741,33 @@ class _TrainerBase:
             lr = cosine_schedule(stepno, 10, 10000, self.lr)
             params, opt_state = self.optimizer.update(gp, opt_state,
                                                       params, stepno, lr)
+            gf_sp = {nt: gf[nt] for nt in sparse_nts}
+            return params, opt_state, stepno + 1, loss, out, gf_sp
+
+        def apply_sparse(sparse_state, routes, ids, gf_sp):
+            """Sparse-adagrad scatter-back of one batch's gradient rows
+            through that batch's forward routing.  Gradient rows of all
+            zeros are an exact no-op (summed grad 0 -> gsum and table
+            unchanged), which makes the pipeline's zero-initialised
+            pending stage safe to apply."""
             sparse_state = dict(sparse_state)
             for nt in sparse_nts:
                 if sparse_sh[nt]:
                     sparse_state[nt] = _sparse_adagrad_shard(
-                        *sparse_state[nt], pf["sparse_route"][nt], gf[nt],
+                        *sparse_state[nt], routes[nt], gf_sp[nt],
                         sparse_lrs[nt])
                 else:
                     sparse_state[nt] = _sparse_adagrad_dp(
-                        *sparse_state[nt], pf["sparse_ids"][nt], gf[nt],
+                        *sparse_state[nt], ids[nt], gf_sp[nt],
                         sparse_lrs[nt], "data")
-            return params, opt_state, stepno + 1, sparse_state, loss, out
+            return sparse_state
+
+        def compute(params, opt_state, stepno, sparse_state, pf):
+            params, opt_state, stepno, loss, out, gf_sp = compute_fwd(
+                params, opt_state, stepno, sparse_state, pf)
+            sparse_state = apply_sparse(sparse_state, pf["sparse_route"],
+                                        pf["sparse_ids"], gf_sp)
+            return params, opt_state, stepno, sparse_state, loss, out
 
         def local_step(params, opt_state, stepno, sparse_state, tables,
                        csr, blocks):
@@ -672,29 +775,62 @@ class _TrainerBase:
             return compute(params, opt_state, stepno, sparse_state, pf)
 
         if self.remote_prefetch > 0:
+            # zero "pending" gradient rows for the pipelined scatter-back
+            # (shapes are static per batch: frontier rows x embed dim)
+            def zero_pending(pf0):
+                z = {}
+                for nt in sparse_nts:
+                    rows = (pf0["sparse_route"][nt].n_requests
+                            if sparse_sh[nt]
+                            else pf0["sparse_ids"][nt].shape[0])
+                    tbl = self.sparse_embeds[nt].table
+                    z[nt] = jnp.zeros((rows,) + tbl.shape[1:], tbl.dtype)
+                return z
+
             def local_epoch(params, opt_state, stepno, sparse_state,
                             tables, csr, blocks):
                 tm = jax.tree_util.tree_map
+                # one cast per epoch dispatch; the scan body closes over
+                # the narrow tables as a loop constant
+                tables = wire_tables(tables)
                 pf0 = presample(tables, csr, tm(lambda v: v[0], blocks),
                                 stepno)
                 # xs[k] = blocks[k+1]: each iteration presamples the NEXT
                 # batch before computing the current one (the wrap-around
                 # presample of blocks[0] is discarded — static shapes)
                 shifted = tm(lambda v: jnp.roll(v, -1, axis=0), blocks)
+                pending0 = (pf0["sparse_route"], pf0["sparse_ids"],
+                            zero_pending(pf0))
 
+                # pipeline: batch k-1's scatter-back applies at the top
+                # of iteration k, overlapping presample(k+1) (which reads
+                # no mutable state); compute_fwd(k) then sees every
+                # update through batch k-1 — the same tables the
+                # unpipelined schedule would hand it.
                 def body(carry, xs):
-                    p, o, s, sp, pf = carry
+                    p, o, s, sp, pf, pending = carry
+                    sp = apply_sparse(sp, *pending)
                     pf_next = presample(tables, csr, xs, s + 1)
-                    p, o, s, sp, loss, _ = compute(p, o, s, sp, pf)
-                    return (p, o, s, sp, pf_next), loss
-                (params, opt_state, stepno, sparse_state, _), losses = \
-                    jax.lax.scan(
+                    p, o, s, loss, _, gf_sp = compute_fwd(p, o, s, sp, pf)
+                    pending = (pf["sparse_route"], pf["sparse_ids"],
+                               gf_sp)
+                    return (p, o, s, sp, pf_next, pending), loss
+                (params, opt_state, stepno, sparse_state, _, pending), \
+                    losses = jax.lax.scan(
                         body,
-                        (params, opt_state, stepno, sparse_state, pf0),
+                        (params, opt_state, stepno, sparse_state, pf0,
+                         pending0),
                         shifted)
+                # flush the last batch's scatter-back
+                sparse_state = apply_sparse(sparse_state, *pending)
                 return params, opt_state, stepno, sparse_state, losses
         else:
-            local_epoch = self._make_device_epoch(local_step)
+            base_epoch = self._make_device_epoch(local_step)
+
+            def local_epoch(params, opt_state, stepno, sparse_state,
+                            tables, csr, blocks):
+                return base_epoch(params, opt_state, stepno, sparse_state,
+                                  wire_tables(tables), csr, blocks)
 
         repl = P()
         sparse_specs = {nt: (spec_of(emb.table), spec_of(emb.gsum))
@@ -711,7 +847,20 @@ class _TrainerBase:
             local_epoch, mesh=mesh, in_specs=common + (P(None, "data"),),
             out_specs=(repl, repl, repl, sparse_specs, repl),
             check_rep=False)
-        return step_sm, epoch_sm
+        probe_sm = None
+        if collect_stats:
+            # measured-exchange probe: run one presample and return every
+            # exchange site's {requests, distinct, capacity,
+            # payload_bytes, fits} as (n_shards,) columns
+            def probe(tables, csr, blocks, stepno):
+                pf = presample(tables, csr, blocks, stepno)
+                return [{k: jnp.asarray(v, jnp.int32).reshape(1)
+                         for k, v in e.items()} for e in pf["exg"]]
+            probe_sm = shard_map(
+                probe, mesh=mesh,
+                in_specs=(table_specs, csr_specs, P("data"), repl),
+                out_specs=P("data"), check_rep=False)
+        return step_sm, epoch_sm, probe_sm
 
     @staticmethod
     def _make_device_epoch(step):
@@ -752,7 +901,7 @@ class _TrainerBase:
             if (self.mesh is not None and self.shard_gather == "alltoall"
                     and not self._dp_tables_replicated()):
                 store_nts, sparse_nts = self._store_and_sparse_ntypes(plan)
-                raw_step, raw_epoch = self._make_device_fns_alltoall(
+                raw_step, raw_epoch, _ = self._make_device_fns_alltoall(
                     plan, batch_size, store_nts, sparse_nts)
             else:
                 raw_step = self._make_device_step(schema, plan, batch_size)
@@ -1151,6 +1300,66 @@ class _TrainerBase:
                         tables, self.device_sampler.tables, blocks)
         self._sparse_unpack(state)
         return float(loss), out
+
+    def exchange_report(self, loader):
+        """Measured wire traffic of one sharded-table training batch on
+        the ``shard_gather: alltoall`` path (benchmarks/bench_scaling.py
+        derives its ``exchanged_bytes_step`` / ``dedup_ratio`` columns
+        from this — docs/pipeline.md §3e).
+
+        Runs the presample half of the step (all routing, no mutable
+        state) over the loader's first batch with per-exchange-site stats
+        collection on, and aggregates over sites and shards.  Byte
+        accounting per site: every shard ships its ``(n_shards, slots)``
+        id buffer (all_gather, 4 B/slot) and its ``(n_shards, slots,
+        row)`` payload buffer (psum_scatter, wire-dtype row bytes), so a
+        site costs ``n_shards^2 * slots * (4 + payload_bytes)`` — with
+        ``slots`` the dedup capacity when every shard's distinct count
+        fits, else the raw request count (the in-jit fallback's wire
+        format; the single count slot the dedup id wire appends is
+        noise and ignored).  ``dedup_ratio`` is distinct/requested rows summed over
+        sites and shards (< 1.0 whenever any frontier repeats a row).
+        """
+        if (self.mesh is None or self.shard_gather != "alltoall"
+                or self._dp_tables_replicated()):
+            raise ValueError(
+                "exchange_report needs the sharded-table alltoall path "
+                "(mesh= trainer with row-sharded tables and "
+                "shard_gather='alltoall')")
+        batch = next(iter(loader))
+        self._check_device_sampler(batch.get("sampler"))
+        store_nts, sparse_nts = self._store_and_sparse_ntypes(
+            batch["plan"])
+        _, _, probe = self._make_device_fns_alltoall(
+            batch["plan"], batch["batch_size"], store_nts, sparse_nts,
+            collect_stats=True)
+        tables = (self.feature_store.tables
+                  if self.feature_store is not None else {})
+        blocks = {k: self._put_batch(v) for k, v in batch["blocks"].items()}
+        stats = jax.device_get(jax.jit(probe)(
+            tables, self.device_sampler.tables, blocks, self.stepno))
+        n = int(self.mesh.shape["data"])
+        total_req = total_distinct = total_bytes = 0
+        sites = []
+        for e in stats:
+            req = int(e["requests"][0])
+            cap = int(e["capacity"][0])
+            pb = int(e["payload_bytes"][0])
+            fits = bool(min(int(v) for v in e["fits"]))
+            distinct = sum(int(v) for v in e["distinct"])
+            slots = cap if fits else req
+            total_bytes += n * n * slots * (4 + pb)
+            total_req += n * req
+            total_distinct += distinct
+            sites.append({"requests": req, "capacity": cap,
+                          "payload_bytes": pb, "fits": fits,
+                          "distinct": distinct})
+        return {"exchanged_bytes_step": int(total_bytes),
+                "dedup_ratio": (total_distinct / total_req
+                                if total_req else 1.0),
+                "requests": int(total_req),
+                "distinct": int(total_distinct),
+                "sites": sites}
 
     # ------------------------------------------------------------------
     def fit_batch(self, batch):

@@ -24,13 +24,16 @@ from repro.config import ConfigError, GSConfig
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
-def _tiny(dp, shard_tables=False, batch_size=32):
+def _tiny(dp, shard_tables=False, batch_size=32, shard_dedup=False,
+          shard_payload_dtype="float32"):
     return {
         "task": "node_classification",
         "gnn": {"hidden": 16, "fanout": [2, 2]},
         "hyperparam": {"batch_size": batch_size, "num_epochs": 2, "seed": 0,
                        "sample_on_device": True, "data_parallel": dp,
-                       "shard_tables": shard_tables},
+                       "shard_tables": shard_tables,
+                       "shard_dedup": shard_dedup,
+                       "shard_payload_dtype": shard_payload_dtype},
         "input": {"dataset": "mag",
                   "dataset_conf": {"n_paper": 96, "n_author": 48}},
         "device_features": True,
@@ -158,7 +161,10 @@ print("RESULT:" + json.dumps({k: run(v) for k, v in confs.items()}))
 @pytest.fixture(scope="module")
 def dp_parity_results():
     confs = {"dp1": _tiny(1), "dp8": _tiny(8),
-             "dp8_sharded": _tiny(8, shard_tables=True)}
+             "dp8_sharded": _tiny(8, shard_tables=True),
+             "dp8_dedup": _tiny(8, shard_tables=True, shard_dedup=True),
+             "dp8_bf16": _tiny(8, shard_tables=True, shard_dedup=True,
+                               shard_payload_dtype="bfloat16")}
     proc = subprocess.run(
         [sys.executable, "-c", _PARITY_SCRIPT % {"root": _ROOT},
          json.dumps(confs)],
@@ -187,11 +193,30 @@ def test_dp8_eval_metrics_identical_to_dp1(dp_parity_results):
 
 
 def test_dp8_sharded_step_compiles_once_per_schema(dp_parity_results):
-    for key in ("dp8", "dp8_sharded"):
+    for key in ("dp8", "dp8_sharded", "dp8_dedup", "dp8_bf16"):
         r = dp_parity_results[key]
         assert r["n_step_entries"] == 1
         assert r["epoch_compiles"] == 1     # one schema -> one XLA program
         assert r["step_compiles"] == 0      # per-batch path never traced
+
+
+def test_dp8_dedup_bitwise_identical_to_sharded(dp_parity_results):
+    # frontier dedup only changes the wire format (fewer exchanged slots
+    # + inverse-permutation fan-out; overflow falls back in-jit): the
+    # loss curve must be BIT-identical to the undeduplicated sharded run
+    r = dp_parity_results
+    assert r["dp8_dedup"]["loss"] == r["dp8_sharded"]["loss"]
+    assert r["dp8_dedup"]["acc"] == r["dp8_sharded"]["acc"]
+
+
+def test_dp8_bf16_payload_loss_parity(dp_parity_results):
+    # bf16 wire payloads are exact per gathered row, but the features
+    # themselves round to bf16 precision (~3 decimal digits) before the
+    # model consumes them — loss tracks the fp32 run to bf16 tolerance
+    # (documented in docs/config.md: shard_payload_dtype)
+    r = dp_parity_results
+    np.testing.assert_allclose(r["dp8_sharded"]["loss"],
+                               r["dp8_bf16"]["loss"], rtol=2e-2)
 
 
 # ---------------------------------------------------------------------------

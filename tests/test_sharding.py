@@ -214,6 +214,169 @@ def test_exchange_duplicate_requests(exchange_results):
 
 
 # ---------------------------------------------------------------------------
+# dedup composition (docs/pipeline.md §3e): unique_rows + RaggedExchange
+# + wire-dtype payloads, on the same 8-fake-device subprocess rig
+# ---------------------------------------------------------------------------
+_DEDUP_SCRIPT = r"""
+import json
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.common.sharding import (RaggedExchange, dedup_gather,
+                                   dedup_capacity, shard_rows)
+
+S = 8
+mesh = Mesh(np.array(jax.devices()[:S]), ("data",))
+
+
+def gathers(rows, dim, idx, capacity=None, wire=None):
+    # (dedup_gather result, plain RaggedExchange result) for one layout
+    rng = np.random.default_rng(rows * 7919 + idx.size)
+    table = rng.normal(size=(rows, dim)).astype(np.float32)
+    tbl = shard_rows(mesh, table, "data", pad=True)
+    rps = tbl.shape[0] // S
+
+    def local(tl, il):
+        ids = il.reshape(-1)
+        ded = dedup_gather(ids, tl, axis_name="data", n_shards=S,
+                           rows_per_shard=rps, capacity=capacity,
+                           wire_dtype=wire)
+        ex = RaggedExchange(ids, axis_name="data", n_shards=S,
+                            rows_per_shard=rps)
+        return ded[None], ex.gather(tl, wire_dtype=wire)[None]
+
+    f = jax.jit(shard_map(
+        local, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P("data")), check_rep=False))
+    sh = NamedSharding(mesh, P("data"))
+    ded, plain = f(tbl, jax.device_put(idx, sh))
+    rows_pad = tbl.shape[0]
+    pad_tbl = np.zeros((rows_pad, dim), np.float32)
+    pad_tbl[:rows] = table
+    if wire is not None:
+        pad_tbl = pad_tbl.astype(wire).astype(np.float32)
+    ref = pad_tbl[idx.reshape(-1)].reshape(idx.shape + (dim,))
+    return np.asarray(ded), np.asarray(plain), ref
+
+
+results = {}
+rng = np.random.default_rng(1)
+# dim 16 keeps the wire row at/above DEDUP_MIN_PAYLOAD_BYTES even at
+# bf16 (32 B), so the default-capacity cases exercise the dedup branch
+# rather than the narrow-payload static fallback
+rows, dim, n_req = 64, 16, 32
+
+# duplicate-heavy frontier: dedup on == dedup off == replicated, bitwise
+idx = rng.integers(0, 8, size=(S, n_req)).astype(np.int32)
+ded, plain, ref = gathers(rows, dim, idx)
+results["dup_heavy"] = (np.array_equal(ded, plain)
+                        and np.array_equal(ded, ref))
+
+# all-duplicate frontier: one row requested by every slot of every shard
+idx_all = np.full((S, n_req), 13, np.int32)
+ded, plain, ref = gathers(rows, dim, idx_all)
+results["all_dup"] = (np.array_equal(ded, plain)
+                      and np.array_equal(ded, ref))
+
+# random frontiers at several shapes: dedup-on vs dedup-off parity
+ok = True
+for rows_c, n_c in [(53, 16), (200, 24), (17, 8)]:
+    idx_c = rng.integers(0, rows_c, size=(S, n_c)).astype(np.int32)
+    ded, plain, ref = gathers(rows_c, dim, idx_c)
+    ok &= np.array_equal(ded, plain) and np.array_equal(ded, ref)
+results["random_parity"] = bool(ok)
+
+# overflow: capacity below the distinct count on every shard -> the
+# in-jit cond falls back to the plain exchange (identical, never wrong)
+idx_wide = np.stack([rng.permutation(rows)[:n_req]
+                     for _ in range(S)]).astype(np.int32)
+ded, plain, ref = gathers(rows, dim, idx_wide, capacity=4)
+results["overflow_fallback"] = (np.array_equal(ded, plain)
+                                and np.array_equal(ded, ref))
+
+# mixed fit: some shards' frontiers fit the capacity, others overflow —
+# the gathered-count vote must pick ONE branch mesh-wide (still exact)
+idx_mix = idx_wide.copy()
+idx_mix[::2] = 13            # even shards: all-duplicate (fits easily)
+ded, plain, ref = gathers(rows, dim, idx_mix,
+                          capacity=dedup_capacity(n_req))
+results["mixed_fit"] = (np.array_equal(ded, plain)
+                        and np.array_equal(ded, ref))
+
+# payload-width policy: a narrow-row table (under DEDUP_MIN_PAYLOAD_BYTES
+# on the wire) statically resolves to the plain exchange — no cond, no
+# unique pass — while a wide-row table keeps the in-jit branch; both
+# still return exact rows (dup_heavy/random cases above)
+def _traced(dimw):
+    def local(tl, il):
+        return dedup_gather(il.reshape(-1), tl, axis_name="data",
+                            n_shards=S, rows_per_shard=8)[None]
+    t = jnp.zeros((64, dimw), jnp.float32)
+    return str(jax.make_jaxpr(shard_map(
+        local, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=P("data"), check_rep=False))(t, idx))
+
+results["narrow_payload_static_plain"] = (
+    "cond" not in _traced(3) and "cond" in _traced(16))
+
+# bf16 wire payloads: exact per row (one owner -> the psum adds one
+# nonzero bf16 value; fp32 restore is exact widening), with and without
+# dedup, against the cast-restore reference
+ded, plain, ref = gathers(rows, dim, idx, wire=jnp.bfloat16)
+results["bf16_wire"] = (np.array_equal(ded, plain)
+                        and np.array_equal(ded, ref))
+
+print("RESULT:" + json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def dedup_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    proc = subprocess.run([sys.executable, "-c", _DEDUP_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          cwd=_ROOT, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_dedup_duplicate_heavy_bitwise(dedup_results):
+    assert dedup_results["dup_heavy"]
+
+
+def test_dedup_all_duplicate_frontier(dedup_results):
+    assert dedup_results["all_dup"]
+
+
+def test_dedup_on_off_parity_random(dedup_results):
+    assert dedup_results["random_parity"]
+
+
+def test_dedup_overflow_falls_back_exactly(dedup_results):
+    assert dedup_results["overflow_fallback"]
+
+
+def test_dedup_mixed_fit_votes_one_branch(dedup_results):
+    assert dedup_results["mixed_fit"]
+
+
+def test_dedup_narrow_payload_resolves_to_plain(dedup_results):
+    assert dedup_results["narrow_payload_static_plain"]
+
+
+def test_bf16_wire_payload_exact_per_row(dedup_results):
+    assert dedup_results["bf16_wire"]
+
+
+# ---------------------------------------------------------------------------
 # padded shard_rows round-trip (single device: pad must be a no-op)
 # ---------------------------------------------------------------------------
 def test_shard_rows_pad_noop_on_one_device():
